@@ -1,0 +1,74 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV. ``--slow`` runs the paper-scale
+versions (n=1000 etc.); default is the fast CI-friendly scale.
+
+Modules:
+  fig5_quadratic     Figure 5 (quadratic, n workers, tau=sqrt(i))
+  fig8_grid          Figures 8/9 grids (K.1/K.2)
+  thm23_logfactor    Theorem 2.3 log-factor table
+  thm32_random       Theorem 3.2 E[T_rand] vs bound (random models)
+  sec53_gap          §5.3 numerical gap ratios (Figures 3/4) vs paper
+  sec6_async_needed  §6/I asynchronicity-needed example
+  table_mstar        Propositions 4.1/4.2 m* selection table
+  malenia_het        §6 heterogeneous (Malenia) constant-gap table
+  secj_R_estimation  §J sub-exponential R of real step times
+  ablation_m_sweep   measured T(m) vs Theorem 2.3 closed form + Prop 4.1 m*
+  thm55_participation  Theorem 5.5 window under the rotating adversary
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (ablation_m_sweep, fig5_quadratic, fig8_grid, malenia_het,
+               sec6_async_needed, sec6_heterogeneous, sec53_gap,
+               secj_R_estimation, table_mstar, thm23_logfactor,
+               thm32_random, thm55_participation)
+
+MODULES = [
+    ("fig5_quadratic", fig5_quadratic),
+    ("thm23_logfactor", thm23_logfactor),
+    ("table_mstar", table_mstar),
+    ("sec53_gap", sec53_gap),
+    ("thm32_random", thm32_random),
+    ("sec6_async_needed", sec6_async_needed),
+    ("malenia_het", malenia_het),
+    ("fig8_grid", fig8_grid),
+    ("secj_R_estimation", secj_R_estimation),
+    ("ablation_m_sweep", ablation_m_sweep),
+    ("thm55_participation", thm55_participation),
+    ("sec6_heterogeneous", sec6_heterogeneous),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slow", action="store_true",
+                    help="paper-scale runs (n=1000, long horizons)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,value,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=not args.slow)
+            for rname, val, derived in rows:
+                print(f"{rname},{val},{derived}", flush=True)
+            print(f"_timing/{name},{time.time() - t0:.1f},seconds",
+                  flush=True)
+        except Exception as e:  # keep the harness going; report at exit
+            failures += 1
+            print(f"_error/{name},{type(e).__name__},{e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

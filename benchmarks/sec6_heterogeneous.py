@@ -1,0 +1,52 @@
+"""§6 heterogeneous-data experiment: why m-Sync with m < n CANNOT work
+when worker i exclusively holds f_i, and Malenia SGD can.
+
+Each worker owns a private coordinate block. m-Sync with m<n keeps
+aggregating only the fastest workers' gradients, so slow workers' blocks
+NEVER receive signal — the error plateaus at the ignored blocks' share.
+Malenia (harmonic per-worker batching) drives every block down."""
+
+import numpy as np
+
+from repro.core import FixedTimes, run_malenia_sgd, run_m_sync_sgd
+from repro.core.oracle import heterogeneous_quadratics
+
+
+def run(fast: bool = True):
+    n = 8
+    prob, grad_i, x_star = heterogeneous_quadratics(n, d_per=10, seed=0)
+    model = FixedTimes.sqrt_law(n)
+    rows = []
+
+    # m-sync m=n/2 with per-worker oracles: workers n/2..n ignored.
+    # emulate by aggregating grads of the FIRST m workers each round
+    # (fixed times => first finishers are exactly the fastest m).
+    x = prob.x0.copy()
+    rng = np.random.default_rng(0)
+    m = n // 2
+    for _ in range(400 if fast else 2000):
+        g = sum(grad_i(i, x, rng) for i in range(m)) / m
+        x = x - 0.3 * g
+    err_msync = float(np.linalg.norm(x - x_star) / np.linalg.norm(x_star))
+    rows.append(("sec6het/msync_m4of8/rel_err", err_msync,
+                 "plateaus: ignored blocks never updated"))
+
+    tr = run_malenia_sgd(model, K=400 if fast else 2000, S=1.0,
+                         problem=prob, gamma=0.3, seed=0,
+                         grads_by_worker=grad_i, record_every=100)
+    rows.append(("sec6het/malenia/final_gradnorm_sq", tr.grad_norms[-1],
+                 f"converges (msync rel_err={err_msync:.3f})"))
+    rows.append(("sec6het/msync_fails_malenia_works",
+                 float(err_msync > 0.5 and tr.grad_norms[-1]
+                       < 1e-2 * tr.grad_norms[0]),
+                 "1.0 = paper's §6 impossibility confirmed"))
+    return rows
+
+
+def main():
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Propositions 4.1/4.2: optimal active-worker selection table.
+
+For each tau law and noise level: the exact argmin of g(m), the Prop 4.2
+closed-form choice min(ceil(sigma^2/eps), n), and the g-ratio between
+them (1.0 = the closed form is exactly optimal)."""
+
+import numpy as np
+
+from repro.core import FixedTimes, g_of_m, optimal_m, power_law_m
+
+
+def run(fast: bool = True):
+    n = 1000
+    rows = []
+    eps = 1.0
+    for law, taus in {
+        "sqrt": FixedTimes.sqrt_law(n).taus,
+        "linear": FixedTimes.linear(n).taus,
+        "pow0.5+delta": FixedTimes.power_law(
+            n, 0.5, 1.0, np.random.default_rng(0).uniform(0, 2.0, n)).taus,
+        "pow1.2": FixedTimes.power_law(n, 1.2).taus,
+        "const": np.ones(n),
+    }.items():
+        for s2e in (0.5, 10.0, 100.0, 10000.0):
+            sigma2 = s2e * eps
+            g = g_of_m(np.sort(taus), sigma2, eps)
+            m_exact = optimal_m(taus, sigma2, eps)
+            m_prop = power_law_m(n, sigma2, eps)
+            ratio = g[m_prop - 1] / g[m_exact - 1]
+            rows.append((f"mstar/{law}/s2e={s2e}/g_ratio", ratio,
+                         f"m_exact={m_exact} m_prop42={m_prop}"))
+    return rows
+
+
+def main():
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Theorem 2.3: T_sync <= O(T_optimal * log(n+1)), tight at tau_i = i.
+
+Table: ratio T_sync/T_optimal (c=1 both) across tau laws and n, against
+log(n+1)."""
+
+import math
+
+import numpy as np
+
+from repro.core import FixedTimes, t_optimal, t_sync
+
+LAWS = {
+    "sqrt": lambda n: FixedTimes.sqrt_law(n).taus,
+    "linear": lambda n: FixedTimes.linear(n).taus,
+    "const": lambda n: np.ones(n),
+    "pow1.2": lambda n: FixedTimes.power_law(n, 1.2).taus,
+    "exp_gap": lambda n: np.concatenate([np.ones(n - 1), [1000.0]]),
+}
+
+
+def run(fast: bool = True):
+    rows = []
+    L = Delta = 1.0
+    eps = 1e-2
+    for law, fn in LAWS.items():
+        for n in (10, 100, 1000):
+            taus = fn(n)
+            sigma2 = n * eps          # the interesting regime sigma^2/eps = n
+            ts, m_s = t_sync(taus, L, Delta, eps, sigma2, c=1.0)
+            to, m_o = t_optimal(taus, L, Delta, eps, sigma2, c=1.0)
+            rows.append((f"thm23/{law}/n={n}/ratio", ts / to,
+                         f"log(n+1)={math.log(n + 1):.2f} m*={m_s}"))
+    return rows
+
+
+def main():
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

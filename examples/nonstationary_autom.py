@@ -1,0 +1,74 @@
+"""Beyond-paper demo: AUTO_M adapting to a NON-STATIONARY straggler.
+
+The paper's §5/§6 discusses time-varying computation (Assumption 5.1) and
+notes m-sync with a FIXED m cannot adapt to regime changes. Our AUTO_M
+policy re-estimates (τ̂, σ̂²) online (EWMA) and re-solves Proposition 4.1
+every step — so when a fast cluster suddenly degrades mid-run, m adapts.
+
+Scenario: 8 workers; for the first 30 steps all have τ ≈ 1; then workers
+5..7 degrade to τ ≈ 25 (e.g. preemption / thermal throttling). A fixed
+full-sync run pays 25 s/step forever after; AUTO_M drops m once τ̂ has
+tracked the change.
+
+    PYTHONPATH=src python examples/nonstationary_autom.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import SyncMode, SyncPolicy
+from repro.core.time_models import SubExponentialTimes
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train import Trainer
+
+
+class RegimeSwitchTimes(SubExponentialTimes):
+    """τ_i ~ N(μ_i(t), 0.05) with a regime switch at a step threshold."""
+
+    def __init__(self, n: int, switch_at: int = 30, slow: float = 25.0):
+        self._step_count = 0
+        self.switch_at = switch_at
+        self.n_slow = 3
+        self.slow = slow
+
+        def sampler(i, rng):
+            phase2 = self._step_count >= self.switch_at * n
+            mu = self.slow if (phase2 and i >= n - self.n_slow) else 1.0
+            self._step_count += 1
+            return max(rng.normal(mu, 0.05), 0.01)
+
+        super().__init__(np.ones(n), sampler, R=0.05, name="regime-switch")
+
+
+def main():
+    n = 8
+    cfg = reduced(get_config("nanogpt-paper"), d_model=96,
+                  layers_per_stage=2, vocab=256)
+    steps = 60
+    for name, policy in [
+            ("FULL (fixed m=n)", SyncPolicy(SyncMode.FULL)),
+            ("AUTO_M (Prop 4.1, online)",
+             SyncPolicy(SyncMode.AUTO_M, eps_target=2.0))]:
+        tm = RegimeSwitchTimes(n, switch_at=30)
+        tr = Trainer(build_model(cfg), sgd(lr=0.3), n_workers=n,
+                     sync_policy=policy, time_model=tm, seed=0)
+        # faster EWMA so τ̂ tracks the switch within a few steps
+        if tr.straggler is not None:
+            tr.straggler.estimator.beta = 0.5
+        data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=48,
+                           batch_size=16, seed=0)
+        hist = tr.run(tr.init_state(), iter(data), num_steps=steps,
+                      log_every=10)
+        pairs = "  ".join(f"@{s}:{t:7.1f}s(m={m})" for s, t, m in
+                          zip(hist.steps, hist.sim_seconds, hist.m_used))
+        print(f"{name:28s} final loss {hist.losses[-1]:.3f}")
+        print(f"    {pairs}")
+    print("\nAUTO_M detects the regime switch and stops waiting for the "
+          "degraded workers;\nfull sync pays ~25 s/step for the rest of "
+          "the run.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""deepseek-moe-16b [moe]: 28L d_model=2048 16H (kv=16) d_ff=1408(expert),
+vocab=102400, 64 routed experts top-6 + 2 shared, fine-grained; first layer
+dense. [arXiv:2401.06066]"""
+
+from .base import AttnConfig, Block, ModelConfig, MoEConfig, Stage
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    arch_type="moe",
+    d_model=2048,
+    vocab_size=102400,
+    d_ff=10944,            # dense first-layer FFN per the DeepSeekMoE card
+    stages=(
+        Stage(pattern=(Block("attn", "mlp"),), repeats=1),
+        Stage(pattern=(Block("attn", "moe"),), repeats=27),
+    ),
+    attn=AttnConfig(num_heads=16, num_kv_heads=16, head_dim=128,
+                    rope_theta=10000.0, causal=True),
+    moe=MoEConfig(num_experts=64, experts_per_token=6, d_expert=1408,
+                  num_shared_experts=2, d_shared=1408),
+    mlp_act="swiglu",
+    max_seq_len=16384,
+    citation="arXiv:2401.06066",
+)

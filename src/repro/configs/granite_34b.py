@@ -1,0 +1,19 @@
+"""granite-34b [dense]: 88L d_model=6144 48H (MQA kv=1) d_ff=24576
+vocab=49152. Llama-arch code model, multi-query attention.
+[arXiv:2405.04324]"""
+
+from .base import AttnConfig, Block, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    arch_type="dense",
+    d_model=6144,
+    vocab_size=49152,
+    d_ff=24576,
+    stages=(Stage(pattern=(Block("attn", "mlp"),), repeats=88),),
+    attn=AttnConfig(num_heads=48, num_kv_heads=1, head_dim=128,
+                    rope_theta=10000.0, causal=True),
+    mlp_act="gelu",
+    max_seq_len=8192,
+    citation="arXiv:2405.04324",
+)

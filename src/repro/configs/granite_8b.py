@@ -1,0 +1,18 @@
+"""granite-8b [dense]: 36L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=49152. Llama-arch code model. [arXiv:2405.04324]"""
+
+from .base import AttnConfig, Block, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="granite-8b",
+    arch_type="dense",
+    d_model=4096,
+    vocab_size=49152,
+    d_ff=14336,
+    stages=(Stage(pattern=(Block("attn", "mlp"),), repeats=36),),
+    attn=AttnConfig(num_heads=32, num_kv_heads=8, head_dim=128,
+                    rope_theta=10000.0, causal=True),
+    mlp_act="swiglu",
+    max_seq_len=32768,
+    citation="arXiv:2405.04324",
+)

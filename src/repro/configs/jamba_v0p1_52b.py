@@ -1,0 +1,31 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16 experts top-2. Mamba:attention 7:1 interleave, MoE
+every other layer. [arXiv:2403.19887]"""
+
+from .base import (AttnConfig, Block, ModelConfig, MoEConfig, SSMConfig,
+                   Stage)
+
+# 8-layer group: attention at index 4, MoE on odd layers (1,3,5,7).
+_PATTERN = (
+    Block("mamba", "mlp"), Block("mamba", "moe"),
+    Block("mamba", "mlp"), Block("mamba", "moe"),
+    Block("attn", "mlp"), Block("mamba", "moe"),
+    Block("mamba", "mlp"), Block("mamba", "moe"),
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    arch_type="hybrid",
+    d_model=4096,
+    vocab_size=65536,
+    d_ff=14336,
+    stages=(Stage(pattern=_PATTERN, repeats=4),),
+    attn=AttnConfig(num_heads=32, num_kv_heads=8, head_dim=128,
+                    rope_theta=None, causal=True),   # jamba: no RoPE
+    moe=MoEConfig(num_experts=16, experts_per_token=2, d_expert=14336,
+              shard_experts_2d=True),
+    ssm=SSMConfig(kind="mamba", d_state=16, d_inner_mult=2, conv_width=4),
+    mlp_act="swiglu",
+    max_seq_len=262144,
+    citation="arXiv:2403.19887",
+)

@@ -1,0 +1,25 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) d_ff=2048,
+vocab=163840, MoE 384 experts top-8 + 1 shared; first layer dense.
+Trillion-parameter MoE (paper-table). [arXiv:2501.kimi2]"""
+
+from .base import AttnConfig, Block, ModelConfig, MoEConfig, Stage
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    d_model=7168,
+    vocab_size=163840,
+    d_ff=18432,            # dense-layer FFN (DeepSeek-V3-style first layer)
+    stages=(
+        Stage(pattern=(Block("attn", "mlp"),), repeats=1),
+        Stage(pattern=(Block("attn", "moe"),), repeats=60),
+    ),
+    attn=AttnConfig(num_heads=64, num_kv_heads=8, head_dim=112,
+                    rope_theta=50000.0, causal=True),
+    moe=MoEConfig(num_experts=384, experts_per_token=8, d_expert=2048,
+                  num_shared_experts=1, d_shared=2048,
+                  shard_experts_2d=True),
+    mlp_act="swiglu",
+    max_seq_len=131072,
+    citation="arXiv:2501.kimi2",
+)

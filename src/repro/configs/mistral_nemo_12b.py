@@ -1,0 +1,22 @@
+"""mistral-nemo-12b [dense]: 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072, 128k ctx. [hf:mistralai/Mistral-Nemo-Base-2407]
+
+``long_500k`` runs via an explicit sliding-window-4096 attention VARIANT
+(``sliding_window`` set by the dry-run for that shape only) — the base
+config is full attention, matching the model card."""
+
+from .base import AttnConfig, Block, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b",
+    arch_type="dense",
+    d_model=5120,
+    vocab_size=131072,
+    d_ff=14336,
+    stages=(Stage(pattern=(Block("attn", "mlp"),), repeats=40),),
+    attn=AttnConfig(num_heads=32, num_kv_heads=8, head_dim=128,
+                    rope_theta=1000000.0, causal=True),
+    mlp_act="swiglu",
+    max_seq_len=131072,
+    citation="hf:mistralai/Mistral-Nemo-Base-2407",
+)

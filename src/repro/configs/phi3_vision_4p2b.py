@@ -1,0 +1,20 @@
+"""phi-3-vision-4.2b [vlm]: 32L d_model=3072 32H (kv=32) d_ff=8192
+vocab=32064. phi3-mini backbone + CLIP frontend (STUB: 576 precomputed
+patch embeddings prepended). [hf:microsoft/Phi-3-vision-128k-instruct]"""
+
+from .base import AttnConfig, Block, ModelConfig, Stage
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    arch_type="vlm",
+    d_model=3072,
+    vocab_size=32064,
+    d_ff=8192,
+    stages=(Stage(pattern=(Block("attn", "mlp"),), repeats=32),),
+    attn=AttnConfig(num_heads=32, num_kv_heads=32, head_dim=96,
+                    rope_theta=10000.0, causal=True),
+    vision_tokens=576,
+    mlp_act="swiglu",
+    max_seq_len=131072,
+    citation="hf:microsoft/Phi-3-vision-128k-instruct",
+)

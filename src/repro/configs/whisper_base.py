@@ -1,0 +1,27 @@
+"""whisper-base [audio]: 6L enc + 6L dec, d_model=512, 8H (kv=8), d_ff=2048,
+vocab=51865. Enc-dec; mel+conv frontend is a STUB (precomputed frame
+embeddings). [arXiv:2212.04356]"""
+
+from .base import (AttnConfig, Block, EncoderConfig, ModelConfig, Stage)
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    arch_type="audio",
+    d_model=512,
+    vocab_size=51865,
+    d_ff=2048,
+    # decoder: self-attn + cross-attn per layer (whisper decoder block)
+    stages=(Stage(pattern=(Block("attn", "none"), Block("cross", "mlp")),
+                  repeats=6),),
+    attn=AttnConfig(num_heads=8, num_kv_heads=8, head_dim=64,
+                    rope_theta=None, causal=True),
+    encoder=EncoderConfig(
+        stages=(Stage(pattern=(Block("attn", "mlp"),), repeats=6),),
+        frontend_len=1500),
+    pos_embed="learned",
+    mlp_act="gelu",
+    norm="layernorm",
+    tie_embeddings=True,
+    max_seq_len=32768,   # assignment shapes exceed whisper's native 448
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,30 @@
+"""The paper's contribution: synchronous-method scheduling theory + engine.
+
+Submodules:
+  time_models   — Assumptions 2.2 / 3.1 / 5.1 / 5.4
+  algorithms    — event-driven Alg 1/2/3, Rennala, Malenia simulators
+  complexity    — closed forms (1),(2),(4),(7),(16); recursions (12),(13)
+  selection     — Prop 4.1/4.2 m*, R estimator (§J), online τ̂/σ̂
+  oracle        — eq. (27) worst-case quadratic; JAX-model bridge
+  sync_engine   — participation-masked aggregation on a real mesh
+"""
+
+from .algorithms import (Problem, Trace, run_async_sgd, run_m_sync_sgd,
+                         run_malenia_sgd, run_rennala_sgd,
+                         run_ringmaster_asgd, run_sync_sgd)
+from .complexity import (iteration_complexity, log_factor,
+                         lower_bound_recursion, msync_upper_recursion,
+                         t_malenia, t_optimal, t_rand_upper, t_sync,
+                         t_sync_full)
+from .oracle import quadratic_worst_case
+from .selection import (OnlineTauEstimator, estimate_R, g_of_m, h_of_m,
+                        optimal_m, power_law_m)
+from .sync_engine import (SimulatedStraggler, SyncMode, SyncPolicy,
+                          first_m_mask, masked_group_mean,
+                          participation_example_weights)
+from .time_models import (FixedTimes, PartialParticipationModel,
+                          SubExponentialTimes, UniversalModel,
+                          chi2_times, exponential_times, gamma_times,
+                          powers_figure3, powers_figure4,
+                          shifted_exponential_times, truncated_normal_times,
+                          uniform_times)

@@ -1,0 +1,148 @@
+"""Stochastic first-order oracles used in the paper's experiments (§K).
+
+* :func:`quadratic_worst_case` — the tridiagonal quadratic (§K) with the
+  progress-gated Bernoulli noise oracle of eq. (27). This is the standard
+  Carmon-style hard instance: coordinates must be "discovered" one by one,
+  and undiscovered coordinates carry multiplicative noise ``ξ/p`` with
+  ``ξ ~ Bernoulli(p)`` — variance grows as ``p`` shrinks.
+* :func:`from_jax` — wrap a JAX loss/params pytree into the flat-numpy
+  :class:`~repro.core.algorithms.Problem` interface, so the event simulators
+  can drive real models (two-layer NN §K.4, NanoGPT §K.5 analogues).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from .algorithms import Problem
+
+__all__ = ["quadratic_worst_case", "prog", "from_jax"]
+
+
+def prog(x: np.ndarray) -> int:
+    """``prog(x) = max{i >= 1 : x_i != 0}`` with ``prog(0) = 0`` (1-indexed)."""
+    nz = np.nonzero(x)[0]
+    return 0 if len(nz) == 0 else int(nz[-1]) + 1
+
+
+def quadratic_worst_case(d: int = 1000, p: float = 0.1,
+                         scale: float = 0.25) -> Problem:
+    """§K quadratic: ``f(x) = ½ xᵀAx - bᵀx`` with A = ¼·tridiag(-1, 2, -1),
+    ``b = ¼·(-1, 0, …, 0)`` and the eq. (27) stochastic oracle.
+
+    ``x0 = (√d, 0, …, 0)`` as in §K. L = ||A||₂ ≤ 1 (A/4 has eigenvalues in
+    [0, 1]).
+    """
+    main = 2.0 * scale * np.ones(d)
+    off = -scale * np.ones(d - 1)
+    b = np.zeros(d)
+    b[0] = -scale
+
+    def matvec(x: np.ndarray) -> np.ndarray:
+        y = main * x
+        y[:-1] += off * x[1:]
+        y[1:] += off * x[:-1]
+        return y
+
+    # exact minimizer for f-gap reporting (tridiagonal solve, cached)
+    A = (np.diag(main) + np.diag(off, 1) + np.diag(off, -1))
+    x_star = np.linalg.solve(A, b)
+    f_star = 0.5 * float(x_star @ matvec(x_star)) - float(b @ x_star)
+
+    def f(x: np.ndarray) -> float:
+        return 0.5 * float(x @ matvec(x)) - float(b @ x) - f_star
+
+    def grad(x: np.ndarray) -> np.ndarray:
+        return matvec(x) - b
+
+    def stoch_grad(x: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        g = grad(x)
+        pr = prog(x)
+        xi = float(rng.random() < p)
+        gate = np.ones(d)
+        gate[pr:] = 1.0 + (xi / p - 1.0)
+        return g * gate
+
+    x0 = np.zeros(d)
+    x0[0] = np.sqrt(d)
+    return Problem(x0=x0, f=f, grad=grad, stoch_grad=stoch_grad)
+
+
+def from_jax(loss_fn: Callable, params0, batch_sampler: Callable,
+             jit: bool = True) -> Problem:
+    """Bridge a JAX model into the event simulators.
+
+    ``loss_fn(params, batch) -> scalar``; ``batch_sampler(rng) -> batch``
+    draws one stochastic mini-batch. Parameters are flattened to a single
+    numpy vector so the numpy-side simulators stay generic.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.flatten_util import ravel_pytree
+
+    flat0, unravel = ravel_pytree(params0)
+    flat0 = np.asarray(flat0, dtype=np.float32)
+
+    vg = jax.value_and_grad(loss_fn)
+    if jit:
+        vg = jax.jit(vg)
+
+    def f(x: np.ndarray) -> float:
+        v, _ = vg(unravel(jnp.asarray(x)), batch_sampler(np.random.default_rng(0)))
+        return float(v)
+
+    def grad(x: np.ndarray) -> np.ndarray:
+        # "exact" gradient approximated with a fixed large batch
+        _, g = vg(unravel(jnp.asarray(x)), batch_sampler(np.random.default_rng(0)))
+        gf, _ = ravel_pytree(g)
+        return np.asarray(gf, dtype=np.float32)
+
+    def stoch_grad(x: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        _, g = vg(unravel(jnp.asarray(x)), batch_sampler(rng))
+        gf, _ = ravel_pytree(g)
+        return np.asarray(gf, dtype=np.float32)
+
+    return Problem(x0=flat0, f=f, grad=grad, stoch_grad=stoch_grad)
+
+
+def heterogeneous_quadratics(n_workers: int, d_per: int = 10,
+                             seed: int = 0):
+    """§6 heterogeneous setting: worker i holds f_i(x) = ½||x_Bi - c_i||²
+    on its own coordinate block B_i; f = (1/n) Σ f_i. Information about
+    block B_i exists ONLY at worker i — the paper's argument for why
+    Algorithm 3 with m < n cannot work here.
+
+    Returns (Problem with the full-average oracle, grads_by_worker for
+    Malenia, x_star).
+    """
+    rng = np.random.default_rng(seed)
+    d = n_workers * d_per
+    centers = rng.normal(0, 1, size=(n_workers, d_per))
+    x_star = centers.reshape(-1).copy()
+
+    def f(x):
+        diff = x.reshape(n_workers, d_per) - centers
+        return 0.5 * float(np.sum(diff ** 2)) / n_workers
+
+    def grad(x):
+        diff = x.reshape(n_workers, d_per) - centers
+        return diff.reshape(-1) / n_workers
+
+    def grad_i(i, x, rng_):
+        g = np.zeros(d)
+        blk = slice(i * d_per, (i + 1) * d_per)
+        g[blk] = (x[blk] - centers[i]) + rng_.normal(0, 0.1, d_per)
+        return g
+
+    def stoch_grad(x, rng_):
+        # the HOMOGENEOUS-style oracle a mistaken m-sync deployment would
+        # use: sample a random worker's f_i (biased toward fast workers
+        # under m-sync scheduling)
+        i = int(rng_.integers(0, n_workers))
+        return grad_i(i, x, rng_)
+
+    return (Problem(x0=np.zeros(d), f=f, grad=grad,
+                    stoch_grad=stoch_grad),
+            grad_i, x_star)

@@ -1,0 +1,144 @@
+"""Optimal active-worker selection (§4) and online estimation utilities.
+
+* :func:`g_of_m` / :func:`h_of_m` — eq. (8)/(9).
+* :func:`optimal_m` — Proposition 4.1: minimize ``g`` restricted to
+  ``m <= min(ceil(σ²/ε), n)``.
+* :func:`power_law_m` — Proposition 4.2: under ``τ_m = τ_1 m^α + δ_m`` take
+  ``m = min(ceil(σ²/ε), n)``.
+* :func:`estimate_R` — Section J: smallest ``R`` with
+  ``mean_j exp(|τ_j - τ̄| / R) = 2`` (bisection; the empirical
+  sub-exponential certificate of recorded step times).
+* :class:`OnlineTauEstimator` — EWMA per-worker mean step times + empirical
+  σ² of stochastic gradients, feeding :func:`optimal_m` at run time. This is
+  the bridge between the paper's theory and the trainer's ``AUTO_M`` policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = ["g_of_m", "h_of_m", "optimal_m", "power_law_m", "estimate_R",
+           "fit_power_law", "OnlineTauEstimator"]
+
+
+def g_of_m(taus: np.ndarray, sigma2: float, eps: float) -> np.ndarray:
+    """Eq. (8): ``g(m) = τ_m max(1, σ²/(mε))`` for m = 1..n (sorted τ)."""
+    taus = np.sort(np.asarray(taus, dtype=float))
+    ms = np.arange(1, len(taus) + 1, dtype=float)
+    return taus * np.maximum(1.0, sigma2 / (ms * eps))
+
+
+def h_of_m(taus: np.ndarray) -> np.ndarray:
+    """Eq. (9): ``h(m) = τ_m / m``."""
+    taus = np.sort(np.asarray(taus, dtype=float))
+    return taus / np.arange(1, len(taus) + 1, dtype=float)
+
+
+def optimal_m(taus: np.ndarray, sigma2: float, eps: float) -> int:
+    """Proposition 4.1 minimizer of g(m) (1-indexed).
+
+    Searches only ``m <= min(ceil(σ²/ε), n)`` — Prop 4.1 shows g is
+    non-decreasing past that point. If ``σ²/ε <= 1`` the optimum is m=1.
+    """
+    n = len(taus)
+    if sigma2 / eps <= 1.0:
+        return 1
+    cap = min(int(math.ceil(sigma2 / eps)), n)
+    g = g_of_m(taus, sigma2, eps)[:cap]
+    return int(np.argmin(g)) + 1
+
+
+def power_law_m(n: int, sigma2: float, eps: float) -> int:
+    """Proposition 4.2 choice ``m = min(ceil(σ²/ε), n)``."""
+    return min(int(math.ceil(sigma2 / eps)), n)
+
+
+def estimate_R(times: Sequence[float], mean: Optional[float] = None,
+               target: float = 2.0, iters: int = 200) -> float:
+    """Section J estimator: smallest R with ``mean exp(|t - τ̄|/R) = target``.
+
+    The LHS is strictly decreasing in R (→ 1 as R → ∞, → ∞ as R → 0 unless
+    all samples equal the mean), so bisection applies.
+    """
+    t = np.asarray(times, dtype=float)
+    mu = float(np.mean(t)) if mean is None else mean
+    dev = np.abs(t - mu)
+    if np.max(dev) == 0.0:
+        return 0.0
+
+    def val(R: float) -> float:
+        return float(np.mean(np.exp(dev / R)))
+
+    lo = 1e-12
+    hi = max(np.max(dev), 1e-9)
+    while val(hi) > target:
+        hi *= 2.0
+        if hi > 1e18:
+            return hi
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if val(mid) > target:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def fit_power_law(taus: np.ndarray) -> tuple:
+    """Least-squares fit of ``τ_m ≈ τ_1 m^α`` in log space → (τ_1, α)."""
+    taus = np.sort(np.asarray(taus, dtype=float))
+    m = np.arange(1, len(taus) + 1, dtype=float)
+    A = np.stack([np.ones_like(m), np.log(m)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, np.log(taus), rcond=None)
+    return float(np.exp(coef[0])), float(coef[1])
+
+
+@dataclasses.dataclass
+class OnlineTauEstimator:
+    """Online (τ̂_i, σ̂²) tracking for the trainer's AUTO_M policy.
+
+    * per-worker EWMA of observed step times (decay ``beta``);
+    * running estimate of the stochastic-gradient variance σ² from the
+      spread of per-worker gradients around their mean (unbiased up to the
+      1/(m-1) correction);
+    * :meth:`suggest_m` applies Proposition 4.1 to the current estimates.
+    """
+
+    n: int
+    beta: float = 0.9
+    eps_target: float = 1e-2
+
+    def __post_init__(self) -> None:
+        self.tau_hat = np.zeros(self.n)
+        self.seen = np.zeros(self.n, dtype=bool)
+        self.sigma2_hat: float = 0.0
+        self._sigma_steps = 0
+
+    def update_times(self, times: Sequence[float],
+                     workers: Optional[Sequence[int]] = None) -> None:
+        idx = range(self.n) if workers is None else workers
+        for i, t in zip(idx, times):
+            if not self.seen[i]:
+                self.tau_hat[i] = t
+                self.seen[i] = True
+            else:
+                self.tau_hat[i] = self.beta * self.tau_hat[i] \
+                    + (1 - self.beta) * t
+
+    def update_sigma2(self, per_worker_grad_sq_dev: float) -> None:
+        """Feed ``mean_i ||g_i - ḡ||² * m/(m-1)`` for one step."""
+        self._sigma_steps += 1
+        w = 1.0 / self._sigma_steps
+        self.sigma2_hat = (1 - w) * self.sigma2_hat + w * per_worker_grad_sq_dev
+
+    def suggest_m(self, eps: Optional[float] = None) -> int:
+        eps = self.eps_target if eps is None else eps
+        taus = np.where(self.seen, self.tau_hat,
+                        np.max(self.tau_hat[self.seen])
+                        if self.seen.any() else 1.0)
+        sigma2 = max(self.sigma2_hat, 1e-12)
+        return optimal_m(taus, sigma2, eps)

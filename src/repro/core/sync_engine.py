@@ -1,0 +1,155 @@
+"""m-Synchronous gradient aggregation on a real device mesh.
+
+This is the TPU-native realization of Algorithm 3 (see DESIGN.md §2): every
+data-parallel *group* computes a gradient each step; a per-group
+participation mask (derived from the straggler/time model, or from a
+deadline) zeroes the non-participants, and the all-reduce is rescaled by
+``1/m``. Mathematically identical to Algorithm 3's estimator — an unbiased
+batch-``m`` gradient — while keeping the collective a plain all-reduce,
+which is exactly the practical advantage of synchronous methods the paper's
+§8 argues for.
+
+Two equivalent implementations are provided (tested against each other):
+
+* :func:`participation_example_weights` — fold the mask into *per-example
+  loss weights*; the ordinary ``grad(mean(w * loss))`` + GSPMD all-reduce
+  then computes the m-sync estimator with zero extra collectives.
+* :func:`masked_group_mean` — explicit ``shard_map`` psum of per-group
+  gradients with mask/``m`` rescale (useful when the loss is not a plain
+  per-example mean).
+
+Participation sources:
+
+* :class:`SimulatedStraggler` — draws per-group compute times from any
+  :class:`~repro.core.time_models.TimeModel` and selects the first ``m``
+  finishers (Algorithm 3 line 4) or a wall-clock deadline.
+* ``AUTO_M`` — combines :class:`~repro.core.selection.OnlineTauEstimator`
+  with Proposition 4.1 to adapt ``m`` during training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .selection import OnlineTauEstimator, optimal_m
+from .time_models import TimeModel
+
+__all__ = ["SyncMode", "SyncPolicy", "SimulatedStraggler",
+           "participation_example_weights", "masked_group_mean",
+           "first_m_mask"]
+
+
+class SyncMode(str, enum.Enum):
+    FULL = "full"          # Algorithm 1 — wait for everyone
+    M_SYNC = "m_sync"      # Algorithm 3 — first m finishers
+    AUTO_M = "auto_m"      # Algorithm 3 + Prop 4.1 online m selection
+    DEADLINE = "deadline"  # aggregate whoever finished by the deadline
+
+
+@dataclasses.dataclass
+class SyncPolicy:
+    mode: SyncMode = SyncMode.FULL
+    m: Optional[int] = None              # for M_SYNC
+    deadline: Optional[float] = None     # seconds, for DEADLINE
+    eps_target: float = 1e-2             # ε for AUTO_M (Prop 4.1)
+
+    def resolve_m(self, n: int, estimator: Optional[OnlineTauEstimator]
+                  ) -> int:
+        if self.mode == SyncMode.FULL:
+            return n
+        if self.mode == SyncMode.M_SYNC:
+            if self.m is None:
+                raise ValueError("M_SYNC requires m")
+            return min(self.m, n)
+        if self.mode == SyncMode.AUTO_M:
+            if estimator is None or not estimator.seen.any():
+                return n
+            return estimator.suggest_m(self.eps_target)
+        raise ValueError(f"resolve_m undefined for {self.mode}")
+
+
+def first_m_mask(times: np.ndarray, m: int) -> np.ndarray:
+    """Boolean mask of the first ``m`` finishers (ties broken by index)."""
+    order = np.argsort(times, kind="stable")
+    mask = np.zeros(len(times), dtype=bool)
+    mask[order[:m]] = True
+    return mask
+
+
+@dataclasses.dataclass
+class SimulatedStraggler:
+    """Per-step participation masks from a computation-time model.
+
+    Tracks simulated wall-clock like Algorithm 3: the step duration is the
+    m-th order statistic of the drawn times; drawn times also feed the
+    online τ estimator for AUTO_M.
+    """
+
+    model: TimeModel
+    policy: SyncPolicy
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self.rng = np.random.default_rng(self.seed)
+        self.estimator = OnlineTauEstimator(self.model.n,
+                                            eps_target=self.policy.eps_target)
+        self.wallclock = 0.0
+
+    def step(self) -> Tuple[np.ndarray, int, float]:
+        """Returns ``(mask, m, step_seconds)`` for one training step."""
+        n = self.model.n
+        times = np.array([self.model.sample_time(i, self.rng)
+                          for i in range(n)])
+        if self.policy.mode == SyncMode.DEADLINE:
+            mask = times <= self.policy.deadline
+            if not mask.any():                       # never stall forever
+                mask = first_m_mask(times, 1)
+            dur = min(float(self.policy.deadline), float(times[mask].max()))
+        else:
+            m = self.policy.resolve_m(n, self.estimator)
+            mask = first_m_mask(times, m)
+            dur = float(np.sort(times)[m - 1])
+        self.estimator.update_times(times)
+        self.wallclock += dur
+        return mask, int(mask.sum()), dur
+
+
+def participation_example_weights(mask: jnp.ndarray, n_groups: int,
+                                  batch: int) -> jnp.ndarray:
+    """Per-example weights realizing the Algorithm 3 estimator.
+
+    With ``B`` examples split evenly across ``n`` groups and ``m``
+    participants, weight ``w_b = mask[group(b)] * n / m`` makes
+    ``mean_b(w_b * loss_b)`` equal the mean loss over participating groups —
+    so its gradient is the m-sync gradient estimator. Requires
+    ``batch % n_groups == 0`` (enforced by the data pipeline).
+    """
+    mask = mask.astype(jnp.float32)
+    m = jnp.maximum(mask.sum(), 1.0)
+    per_group = mask * (n_groups / m)
+    return jnp.repeat(per_group, batch // n_groups)
+
+
+@partial(jax.jit, static_argnames=("axis_name",))
+def _masked_psum(g, mask_val, m, axis_name):
+    g = jax.tree.map(lambda a: a * mask_val, g)
+    return jax.tree.map(lambda a: jax.lax.psum(a, axis_name) / m, g)
+
+
+def masked_group_mean(per_group_grads, mask: jnp.ndarray, axis_name: str):
+    """Explicit-collective variant: inside ``shard_map`` over the dp axis,
+    each group holds its gradient pytree; returns ``Σ mask_i g_i / m``.
+
+    Call *inside* a ``shard_map`` whose mesh axis is ``axis_name``; ``mask``
+    must be the scalar mask value for this group's index.
+    """
+    m = jnp.maximum(jax.lax.psum(mask.astype(jnp.float32), axis_name), 1.0)
+    g = jax.tree.map(lambda a: a * mask.astype(a.dtype), per_group_grads)
+    return jax.tree.map(lambda a: jax.lax.psum(a, axis_name) / m, g)

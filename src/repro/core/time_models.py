@@ -1,0 +1,371 @@
+"""Computation-time models from the paper.
+
+Implements the paper's four worker-compute assumptions:
+
+* Assumption 2.2 — Fixed computation model: worker ``i`` always takes
+  ``tau_i`` seconds per stochastic gradient.
+* Assumption 3.1 — Random computation model: worker ``i``'s time is a
+  ``(tau_i, R)``-sub-exponential random variable (mean ``tau_i``,
+  ``E[exp(|t - tau_i| / R)] <= 2``, nonnegative a.s.).
+* Assumption 5.1 — Universal computation model: worker ``i`` has an
+  integrable computation *power* ``v_i(t) >= 0`` and computes
+  ``N_i(t0, t1) = floor(int_{t0}^{t1} v_i)`` gradients in ``[t0, t1]``.
+* Assumption 5.4 — Partial participation: all powers equal ``v`` except an
+  (arbitrary, possibly adversarial) set of at most ``p*n`` stragglers at any
+  instant.
+
+All models expose a unified event-simulator interface::
+
+    sample_time(i, rng) -> float          # seconds for ONE gradient started now
+    (Universal models instead expose ``finish_time(i, t_start, k=1)``.)
+
+Every random model also reports its ``(tau_i, R)`` sub-exponential
+certificate where known, so the theory in :mod:`repro.core.complexity` can be
+evaluated against the exact constants used by the simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "TimeModel",
+    "FixedTimes",
+    "SubExponentialTimes",
+    "truncated_normal_times",
+    "exponential_times",
+    "shifted_exponential_times",
+    "gamma_times",
+    "uniform_times",
+    "chi2_times",
+    "UniversalModel",
+    "PartialParticipationModel",
+    "PiecewisePower",
+    "powers_figure3",
+    "powers_figure4",
+]
+
+
+class TimeModel:
+    """Base class: per-gradient computation-time sampling for ``n`` workers."""
+
+    n: int
+
+    def sample_time(self, i: int, rng: np.random.Generator) -> float:
+        raise NotImplementedError
+
+    def mean_times(self) -> np.ndarray:
+        """``tau_i = E[time for worker i]``, sorted or not — as configured."""
+        raise NotImplementedError
+
+    # Sub-exponential certificate (Assumption 3.1); None => unknown/infinite.
+    def sub_exponential_R(self) -> Optional[float]:
+        return None
+
+
+@dataclasses.dataclass
+class FixedTimes(TimeModel):
+    """Assumption 2.2 — deterministic ``tau_i``."""
+
+    taus: np.ndarray
+
+    def __post_init__(self) -> None:
+        self.taus = np.asarray(self.taus, dtype=float)
+        if np.any(self.taus <= 0):
+            raise ValueError("tau_i must be positive")
+        self.n = len(self.taus)
+
+    def sample_time(self, i: int, rng: np.random.Generator) -> float:
+        return float(self.taus[i])
+
+    def mean_times(self) -> np.ndarray:
+        return self.taus
+
+    def sub_exponential_R(self) -> float:
+        return 0.0
+
+    @staticmethod
+    def sqrt_law(n: int, tau1: float = 1.0) -> "FixedTimes":
+        """tau_i = tau1 * sqrt(i) — the paper's Figure 5 / K.1 setup."""
+        return FixedTimes(tau1 * np.sqrt(np.arange(1, n + 1)))
+
+    @staticmethod
+    def power_law(n: int, alpha: float, tau1: float = 1.0,
+                  delta: Optional[np.ndarray] = None) -> "FixedTimes":
+        """tau_m = tau1 * m**alpha + delta_m — eq. (10)."""
+        taus = tau1 * np.arange(1, n + 1, dtype=float) ** alpha
+        if delta is not None:
+            taus = taus + np.asarray(delta, dtype=float)
+        return FixedTimes(taus)
+
+    @staticmethod
+    def linear(n: int, tau1: float = 1.0) -> "FixedTimes":
+        """tau_i = tau1 * i — the log-factor-tight case of Theorem 2.3."""
+        return FixedTimes(tau1 * np.arange(1, n + 1, dtype=float))
+
+
+@dataclasses.dataclass
+class SubExponentialTimes(TimeModel):
+    """Assumption 3.1 — random per-gradient times, independent across draws.
+
+    ``sampler(i, rng)`` must return a nonnegative float with mean
+    ``taus[i]``; ``R`` is the common sub-exponential parameter (may be a
+    conservative upper bound).
+    """
+
+    taus: np.ndarray
+    sampler: Callable[[int, np.random.Generator], float]
+    R: float
+    name: str = "subexp"
+
+    def __post_init__(self) -> None:
+        self.taus = np.asarray(self.taus, dtype=float)
+        self.n = len(self.taus)
+
+    def sample_time(self, i: int, rng: np.random.Generator) -> float:
+        t = float(self.sampler(i, rng))
+        return max(t, 0.0)
+
+    def mean_times(self) -> np.ndarray:
+        return self.taus
+
+    def sub_exponential_R(self) -> float:
+        return self.R
+
+
+def truncated_normal_times(mus: Sequence[float], sigma: float
+                           ) -> SubExponentialTimes:
+    """``tau_i ~ N(mu_i, sigma^2)`` truncated to ``[0, inf)``.
+
+    Sub-exponential with ``R = O(sigma)`` (Barreto et al., 2025). The mean of
+    the truncated variable is ``mu + sigma * phi(a)/Phi(-a)`` with
+    ``a = -mu/sigma``; we report the exact truncated means.
+    """
+    mus = np.asarray(mus, dtype=float)
+
+    def _truncated_mean(mu: float) -> float:
+        if sigma == 0:
+            return max(mu, 0.0)
+        a = -mu / sigma
+        phi = math.exp(-0.5 * a * a) / math.sqrt(2 * math.pi)
+        Phi = 0.5 * math.erfc(a / math.sqrt(2))
+        return mu + sigma * phi / max(Phi, 1e-300)
+
+    taus = np.array([_truncated_mean(mu) for mu in mus])
+
+    def sampler(i: int, rng: np.random.Generator) -> float:
+        while True:
+            t = rng.normal(mus[i], sigma)
+            if t >= 0:
+                return t
+
+    return SubExponentialTimes(taus, sampler, R=float(sigma),
+                               name=f"truncnorm(sigma={sigma})")
+
+
+def exponential_times(lam: float, n: int) -> SubExponentialTimes:
+    """``tau_i ~ Exp(lam)`` for all workers: ``tau_i = R = 1/lam`` (§3)."""
+    taus = np.full(n, 1.0 / lam)
+
+    def sampler(i: int, rng: np.random.Generator) -> float:
+        return rng.exponential(1.0 / lam)
+
+    return SubExponentialTimes(taus, sampler, R=1.0 / lam,
+                               name=f"exp(lam={lam})")
+
+
+def shifted_exponential_times(mus: Sequence[float], lams: Sequence[float]
+                              ) -> SubExponentialTimes:
+    """``tau_i = mu_i + Exp(lam_i)`` (§D.1): R = max_i 1/lam_i."""
+    mus = np.asarray(mus, dtype=float)
+    lams = np.asarray(lams, dtype=float)
+    taus = mus + 1.0 / lams
+
+    def sampler(i: int, rng: np.random.Generator) -> float:
+        return mus[i] + rng.exponential(1.0 / lams[i])
+
+    return SubExponentialTimes(taus, sampler, R=float(np.max(1.0 / lams)),
+                               name="shifted-exp")
+
+
+def gamma_times(means: Sequence[float], var: float) -> SubExponentialTimes:
+    """Gamma with per-worker mean ``tau_i`` and common variance (§K.3).
+
+    shape k = tau^2/var, scale theta = var/tau; R = O(max sqrt(k)*theta).
+    """
+    means = np.asarray(means, dtype=float)
+    ks = means ** 2 / var
+    thetas = var / means
+    R = float(np.max(np.maximum(np.sqrt(ks), 1.0) * thetas))
+
+    def sampler(i: int, rng: np.random.Generator) -> float:
+        return rng.gamma(ks[i], thetas[i])
+
+    return SubExponentialTimes(means, sampler, R=R, name="gamma")
+
+
+def uniform_times(means: Sequence[float], half_width: float
+                  ) -> SubExponentialTimes:
+    """``tau_i ~ Unif(tau_i - w, tau_i + w)`` (§K.3/K.4). Bounded => R=O(w)."""
+    means = np.asarray(means, dtype=float)
+
+    def sampler(i: int, rng: np.random.Generator) -> float:
+        return rng.uniform(means[i] - half_width, means[i] + half_width)
+
+    return SubExponentialTimes(means, sampler, R=float(half_width),
+                               name=f"uniform(w={half_width})")
+
+
+def chi2_times(dofs: Sequence[int]) -> SubExponentialTimes:
+    """``tau_i ~ chi^2_{k_i}`` (§D.1): tau_i = k_i, R = O(max sqrt(k_i))."""
+    dofs = np.asarray(dofs, dtype=float)
+
+    def sampler(i: int, rng: np.random.Generator) -> float:
+        return rng.chisquare(dofs[i])
+
+    return SubExponentialTimes(dofs.copy(), sampler,
+                               R=float(2.0 * np.sqrt(np.max(dofs))),
+                               name="chi2")
+
+
+# ---------------------------------------------------------------------------
+# Assumption 5.1 — Universal computation model.
+# ---------------------------------------------------------------------------
+
+class UniversalModel:
+    """Computation powers ``v_i(t)`` on a uniform grid with linear interp.
+
+    ``N_i(t0, t1) = floor(int_{t0}^{t1} v_i(s) ds)`` — eq. (11). The paper's
+    Figures 3/4 define powers exactly this way (grid ``t_k = 0.1 k`` +
+    linear interpolation), so a trapezoid cumulative integral on the grid is
+    *exact* for these instances.
+    """
+
+    def __init__(self, grid: np.ndarray, powers: np.ndarray) -> None:
+        # powers: (n, T) nonnegative samples on grid (T,)
+        self.grid = np.asarray(grid, dtype=float)
+        self.powers = np.maximum(np.asarray(powers, dtype=float), 0.0)
+        self.n = self.powers.shape[0]
+        dt = np.diff(self.grid)
+        mids = 0.5 * (self.powers[:, 1:] + self.powers[:, :-1])
+        self.cum = np.concatenate(
+            [np.zeros((self.n, 1)), np.cumsum(mids * dt, axis=1)], axis=1)
+
+    def integral(self, i: int, t0: float, t1: float) -> float:
+        """``int_{t0}^{t1} v_i`` (exact for piecewise-linear powers)."""
+        return self._cum_at(i, t1) - self._cum_at(i, t0)
+
+    def _cum_at(self, i: int, t: float) -> float:
+        g = self.grid
+        if t <= g[0]:
+            return 0.0
+        if t >= g[-1]:
+            # extrapolate with the final power value (constant tail)
+            return float(self.cum[i, -1] + self.powers[i, -1] * (t - g[-1]))
+        j = int(np.searchsorted(g, t) - 1)
+        dt = t - g[j]
+        h = g[j + 1] - g[j]
+        v0 = self.powers[i, j]
+        v1 = self.powers[i, j + 1]
+        vt = v0 + (v1 - v0) * dt / h
+        return float(self.cum[i, j] + 0.5 * (v0 + vt) * dt)
+
+    def N(self, i: int, t0: float, t1: float) -> int:
+        return int(math.floor(self.integral(i, t0, t1) + 1e-12))
+
+    def time_for_integral(self, i: int, t0: float, target: float) -> float:
+        """Smallest ``t >= t0`` with ``int_{t0}^{t} v_i >= target`` (inf if never)."""
+        base = self._cum_at(i, t0)
+        want = base + target
+        if self.cum[i, -1] < want:
+            tail_v = self.powers[i, -1]
+            if tail_v <= 0:
+                return math.inf
+            return float(self.grid[-1]
+                         + (want - self.cum[i, -1]) / tail_v)
+        # binary search on [t0, grid[-1]]
+        lo, hi = t0, float(self.grid[-1])
+        for _ in range(80):
+            mid = 0.5 * (lo + hi)
+            if self._cum_at(i, mid) >= want:
+                hi = mid
+            else:
+                lo = mid
+        return hi
+
+
+@dataclasses.dataclass
+class PiecewisePower:
+    """Analytic power: constant ``v`` until ``t_switch`` then ``v_after``.
+
+    Used for the §6/§I "worker becomes infinitely fast" example
+    (v_after = inf encoded as a huge float).
+    """
+
+    v: float
+    t_switch: float = math.inf
+    v_after: float = math.inf
+
+    def integral(self, t0: float, t1: float) -> float:
+        if t1 <= self.t_switch:
+            return self.v * (t1 - t0)
+        pre = self.v * (max(self.t_switch, t0) - t0) if t0 < self.t_switch else 0.0
+        post = self.v_after * (t1 - max(self.t_switch, t0))
+        return pre + post
+
+
+def powers_figure3(n: int = 50, seed: int = 0, t_max: float = 400.0
+                   ) -> UniversalModel:
+    """Figure 3: ``v_i(t_k) = max(sin(a_i t_k + s_i) + eps, 0)``."""
+    rng = np.random.default_rng(seed)
+    grid = np.arange(0.0, t_max, 0.1)
+    a = rng.uniform(0.5, 1.0, size=n)
+    s = rng.uniform(0.0, 2 * np.pi, size=n)
+    eps = rng.normal(0.0, 0.1, size=(n, len(grid)))
+    powers = np.maximum(np.sin(a[:, None] * grid[None, :] + s[:, None]) + eps,
+                        0.0)
+    return UniversalModel(grid, powers)
+
+
+def powers_figure4(n: int = 50, seed: int = 0, t_max: float = 400.0
+                   ) -> UniversalModel:
+    """Figure 4: ``v_i(t_k) = max(s_i + 3 sin(t_k + phi_i) + eps, 0.1)``."""
+    rng = np.random.default_rng(seed)
+    grid = np.arange(0.0, t_max, 0.1)
+    s = rng.uniform(10.5, 11.0, size=n)
+    phi = rng.uniform(0.0, 2 * np.pi, size=n)
+    eps = rng.normal(0.0, 0.1, size=(n, len(grid)))
+    powers = np.maximum(s[:, None] + 3 * np.sin(grid[None, :] + phi[:, None])
+                        + eps, 0.1)
+    return UniversalModel(grid, powers)
+
+
+class PartialParticipationModel(UniversalModel):
+    """Assumption 5.4 — equal power ``v`` except ≤ p·n stragglers at any time.
+
+    ``straggler_fn(t) -> set of straggler indices`` may be adversarial; by
+    default a rotating window (the worst *stationary* adversary for m-sync:
+    it keeps rotating which workers are dead so no fixed subset works).
+    """
+
+    def __init__(self, n: int, v: float = 1.0, p: float = 0.1,
+                 period: float = 1.0, t_max: float = 400.0,
+                 straggler_fn: Optional[Callable[[float], set]] = None,
+                 dt: float = 0.05) -> None:
+        self.v0 = v
+        self.p = p
+        k = int(math.floor(p * n))
+        grid = np.arange(0.0, t_max, dt)
+        powers = np.full((n, len(grid)), float(v))
+        if straggler_fn is None:
+            def straggler_fn(t: float) -> set:
+                start = int(t / period) * k % max(n, 1)
+                return {(start + j) % n for j in range(k)}
+        for ti, t in enumerate(grid):
+            for i in straggler_fn(float(t)):
+                powers[i, ti] = 0.0
+        super().__init__(grid, powers)

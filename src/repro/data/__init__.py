@@ -1,0 +1,1 @@
+from .pipeline import CharCorpus, SyntheticLM, gaussian_mixture, worker_shards

@@ -1,0 +1,134 @@
+"""Deterministic synthetic data pipeline.
+
+No internet in this container: corpora are generated, not downloaded. Three
+sources, all seeded and reproducible:
+
+* :class:`SyntheticLM` — Zipf-distributed token stream with local Markov
+  structure (so models can actually reduce loss, unlike iid-uniform).
+* :class:`CharCorpus` — a procedurally generated "shakespeare-like" char
+  corpus for the NanoGPT experiments (§K.5 analogue).
+* :func:`gaussian_mixture` — the CIFAR-10 stand-in for the §K.4 two-layer
+  NN experiment: D-dim Gaussian mixture, ``num_classes`` components.
+
+Batches are dicts {tokens, labels, loss_mask} shaped for ``Model.loss``;
+``worker_shards`` splits a batch into the per-worker groups the m-sync
+engine masks over (global_batch % n_workers == 0 enforced here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["SyntheticLM", "CharCorpus", "gaussian_mixture", "worker_shards"]
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Markov-Zipf token stream: P(next | cur) concentrated on a few
+    successors; unigram marginal ~ Zipf(1.2)."""
+
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    branching: int = 8
+
+    def __post_init__(self) -> None:
+        rng = np.random.default_rng(self.seed)
+        V = self.vocab_size
+        ranks = np.arange(1, V + 1, dtype=np.float64)
+        self.unigram = (ranks ** -1.2) / np.sum(ranks ** -1.2)
+        # each token gets `branching` successors drawn from the unigram
+        self.succ = rng.choice(V, size=(V, self.branching), p=self.unigram)
+        self.succ_w = rng.dirichlet(np.ones(self.branching), size=V)
+        self._step = 0
+
+    def batch(self, step: Optional[int] = None) -> dict:
+        step = self._step if step is None else step
+        self._step = step + 1
+        rng = np.random.default_rng((self.seed, step))
+        B, S, V = self.batch_size, self.seq_len, self.vocab_size
+        toks = np.empty((B, S + 1), np.int32)
+        toks[:, 0] = rng.choice(V, size=B, p=self.unigram)
+        for t in range(S):
+            u = rng.random(B)
+            # mix: 80% markov successor, 20% unigram resample
+            choice = (rng.random((B, self.branching))
+                      * self.succ_w[toks[:, t]]).argmax(-1)
+            markov = self.succ[toks[:, t], choice]
+            fresh = rng.choice(V, size=B, p=self.unigram)
+            toks[:, t + 1] = np.where(u < 0.8, markov, fresh)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:].astype(np.int32),
+            "loss_mask": np.ones((B, S), np.float32),
+        }
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+@dataclasses.dataclass
+class CharCorpus:
+    """Procedural character corpus: nested clause structure + a fixed word
+    bank, so a small LM has plenty of learnable structure (NanoGPT-style
+    char-level training, paper §K.5)."""
+
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    length: int = 1 << 18
+
+    WORDS = ("the quick brown fox jumps over lazy dog and all that is gold "
+             "does not glitter nor all those who wander are lost the old "
+             "that is strong does not wither deep roots are not reached by "
+             "the frost from the ashes a fire shall be woken").split()
+
+    def __post_init__(self) -> None:
+        rng = np.random.default_rng(self.seed)
+        parts = []
+        n = 0
+        while n < self.length:
+            sent = " ".join(rng.choice(self.WORDS,
+                                       size=rng.integers(4, 12)))
+            parts.append(sent + ". ")
+            n += len(parts[-1])
+        text = "".join(parts)[:self.length]
+        self.vocab = sorted(set(text))
+        self.vocab_size = len(self.vocab)
+        stoi = {c: i for i, c in enumerate(self.vocab)}
+        self.data = np.array([stoi[c] for c in text], np.int32)
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        B, S = self.batch_size, self.seq_len
+        starts = rng.integers(0, len(self.data) - S - 1, size=B)
+        toks = np.stack([self.data[s:s + S + 1] for s in starts])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+                "loss_mask": np.ones((B, S), np.float32)}
+
+
+def gaussian_mixture(num_classes: int = 10, dim: int = 3072,
+                     n: int = 50000, seed: int = 0,
+                     spread: float = 3.0) -> Tuple[np.ndarray, np.ndarray]:
+    """CIFAR-10 stand-in (§K.4): returns (X (n, dim) float32, y (n,))."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, spread, size=(num_classes, dim)) / np.sqrt(dim)
+    y = rng.integers(0, num_classes, size=n)
+    X = centers[y] + rng.normal(0, 1.0, size=(n, dim)) / np.sqrt(dim)
+    return X.astype(np.float32), y.astype(np.int32)
+
+
+def worker_shards(batch: dict, n_workers: int) -> list:
+    """Split a global batch into n per-worker micro-batches (group view)."""
+    B = batch["tokens"].shape[0]
+    assert B % n_workers == 0, f"batch {B} % workers {n_workers} != 0"
+    per = B // n_workers
+    return [{k: v[i * per:(i + 1) * per] for k, v in batch.items()}
+            for i in range(n_workers)]

@@ -1,0 +1,38 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; the
+launcher flips it to False on real TPU. The model code reaches these via
+``cfg/impl == "pallas"`` (models/attention.py, models/ssm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .moe_gmm import moe_gmm_pallas
+from .rwkv_scan import rwkv_scan_pallas
+
+__all__ = ["flash_attention", "rwkv_scan", "moe_gmm"]
+
+INTERPRET = True  # CPU container; set False on TPU
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=INTERPRET)
+
+
+@jax.jit
+def rwkv_scan(r, k, v, w, u):
+    return rwkv_scan_pallas(r, k, v, w, u, interpret=INTERPRET)
+
+
+@jax.jit
+def moe_gmm(x, w):
+    return moe_gmm_pallas(x, w, interpret=INTERPRET)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.ssm import reference_scan
+
+__all__ = ["attention_ref", "rwkv_scan_ref", "moe_gmm_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None):
+    """Naive masked softmax attention. q: (B,Sq,H,dh); k,v: (B,Sk,KV,dh)."""
+    B, Sq, H, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    group = H // KV
+    kq = jnp.repeat(k, group, axis=2).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kq) \
+        / jnp.sqrt(dh)
+    if causal or window is not None:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(Sk)[None, :]
+        ok = jnp.ones((Sq, Sk), bool)
+        if causal:
+            ok &= ki <= qi
+        if window is not None:
+            ok &= ki > qi - window
+        s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vq)
+    return o.astype(q.dtype)
+
+
+def rwkv_scan_ref(r, k, v, w, u, state0=None):
+    """Step-by-step RWKV-6 recurrence (models/ssm.reference_scan, u-form)."""
+    return reference_scan(r, k, v, w, u=u, state0=state0)
+
+
+def moe_gmm_ref(x, w):
+    """x: (E, C, din); w: (E, din, dout)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

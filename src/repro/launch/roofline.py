@@ -1,0 +1,106 @@
+"""Roofline report generator: reads experiments/dryrun/*.json and emits the
+§Roofline markdown table (per arch × shape, single-pod mesh) plus the
+dominant-bottleneck summary and hillclimb-candidate ranking.
+
+  PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import List
+
+
+def load(dir_: str, mesh: str = "single") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x * 1e6:.1f}µs"
+    if x < 0.1:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def table(recs: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mode | compute | memory | collective | dominant |"
+        " useful-FLOPs | peak GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                f"skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | ERROR | | | "
+                         f"| | |")
+            continue
+        ro = r["roofline"]
+        ur = ro.get("useful_flops_ratio", 0.0)
+        peak = r["memory"]["peak_bytes"] / 2 ** 30
+        over = "**" if peak > 16 else ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('attn_mode', '')} | "
+            f"{fmt_s(ro['compute_s'])} | {fmt_s(ro['memory_s'])} | "
+            f"{fmt_s(ro['collective_s'])} | {ro['dominant']} | "
+            f"{ur:.2f} | {over}{peak:.2f}{over} |")
+    return "\n".join(lines)
+
+
+def hillclimb_candidates(recs: List[dict]) -> str:
+    """Rank pairs: worst roofline fraction (useful/total on the dominant
+    axis), most collective-bound, most m-sync-representative (train)."""
+    ok = [r for r in recs if r["status"] == "ok"]
+    out = []
+
+    def total(r):
+        ro = r["roofline"]
+        return max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+
+    worst_useful = sorted(
+        (r for r in ok if r["kind"] == "train"),
+        key=lambda r: r["roofline"].get("useful_flops_ratio", 1.0))[:3]
+    most_coll = sorted(
+        ok, key=lambda r: -(r["roofline"]["collective_s"]
+                            / max(total(r), 1e-30)))[:3]
+    out.append("worst useful-FLOPs ratio (train): " + ", ".join(
+        f"{r['arch']}/{r['shape']}={r['roofline']['useful_flops_ratio']:.2f}"
+        for r in worst_useful))
+    out.append("most collective-bound: " + ", ".join(
+        f"{r['arch']}/{r['shape']}="
+        f"{r['roofline']['collective_s'] / max(total(r), 1e-30):.2f}"
+        for r in most_coll))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh)
+    print(f"## Roofline — {args.mesh}-pod "
+          f"({'256' if args.mesh == 'single' else '512'} chips, "
+          "197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print(table(recs))
+    print()
+    print(hillclimb_candidates(recs))
+
+
+if __name__ == "__main__":
+    main()

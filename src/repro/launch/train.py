@@ -1,0 +1,117 @@
+"""Training launcher: the end-to-end driver.
+
+Examples (CPU, reduced scale):
+  PYTHONPATH=src python -m repro.launch.train --arch nanogpt-paper \
+      --steps 200 --policy m_sync --m 6 --workers 8 --time-model sqrt
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --reduced \
+      --steps 50 --policy auto_m
+
+On a real TPU mesh the same entry point takes ``--mesh single|multi`` and
+builds the production mesh + ShardCtx (this container is CPU-only, so the
+mesh path is exercised by the dry-run instead).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from ..configs import get_config, reduced as reduce_cfg
+from ..core import (FixedTimes, SyncMode, SyncPolicy, exponential_times,
+                    truncated_normal_times, uniform_times)
+from ..data import SyntheticLM
+from ..models import build_model
+from ..optim import adamw, cosine_schedule, sgd
+from ..train import Trainer, save_checkpoint
+
+
+def build_time_model(name: str, n: int):
+    if name == "none":
+        return None
+    if name == "sqrt":
+        return FixedTimes.sqrt_law(n)
+    if name == "linear":
+        return FixedTimes.linear(n)
+    if name == "uniform":
+        return uniform_times(np.ones(n), half_width=0.5)
+    if name == "exp":
+        return exponential_times(lam=1.0, n=n)
+    if name == "truncnorm_sqrt":
+        return truncated_normal_times(np.sqrt(np.arange(1, n + 1)), 0.5)
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="nanogpt-paper")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale same-family variant")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "sgd", "sgdm"])
+    ap.add_argument("--policy", default="full",
+                    choices=["full", "m_sync", "auto_m", "deadline"])
+    ap.add_argument("--m", type=int, default=None)
+    ap.add_argument("--deadline", type=float, default=None)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--time-model", default="sqrt",
+                    choices=["none", "sqrt", "linear", "uniform", "exp",
+                             "truncnorm_sqrt"])
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced or cfg.param_count() > 1e9:
+        cfg = reduce_cfg(cfg, d_model=args.d_model, layers_per_stage=2,
+                         vocab=min(cfg.vocab_size, 2048))
+    model = build_model(cfg)
+
+    sched = cosine_schedule(args.lr, warmup=max(args.steps // 20, 1),
+                            total=args.steps)
+    opt = {"adamw": lambda: adamw(lr=sched),
+           "sgd": lambda: sgd(lr=sched),
+           "sgdm": lambda: sgd(lr=sched, momentum=0.9)}[args.optimizer]()
+
+    policy = SyncPolicy(
+        mode=SyncMode(args.policy),
+        m=args.m, deadline=args.deadline)
+    tm = build_time_model(args.time_model, args.workers)
+    if policy.mode != SyncMode.FULL and tm is None:
+        raise SystemExit("--policy requires a --time-model")
+
+    trainer = Trainer(model, opt, n_workers=args.workers,
+                      sync_policy=policy, time_model=tm,
+                      remat=args.remat, seed=args.seed)
+    state = trainer.init_state()
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       batch_size=args.batch, seed=args.seed)
+
+    print(f"arch={cfg.name} params={cfg.param_count() / 1e6:.1f}M "
+          f"policy={policy.mode.value} workers={args.workers} "
+          f"time_model={args.time_model}")
+    hist = trainer.run(state, iter(data), num_steps=args.steps,
+                       log_every=args.log_every)
+    for s, t, l, m in zip(hist.steps, hist.sim_seconds, hist.losses,
+                          hist.m_used):
+        print(f"step {s:5d}  sim {t:9.1f}s  loss {l:7.4f}  m={m}")
+    if args.ckpt:
+        fs = trainer.final_state
+        save_checkpoint(args.ckpt, fs.params, fs.opt_state, fs.step)
+        print(f"saved checkpoint to {args.ckpt}")
+    print(json.dumps({"final_loss": hist.losses[-1],
+                      "sim_seconds": hist.sim_seconds[-1],
+                      "wall_seconds": hist.wall_seconds[-1]}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""GQA attention with three sharding modes and a KV cache.
+
+Modes (see ``repro.sharding.specs.attn_mode_for``):
+
+* HEADS — q/k/v sharded over heads on the ``model`` axis.
+* QSEQ  — query sequence sharded over ``model``; KV gathered. Used when
+  head counts don't divide the model-axis size (whisper 8H, llama3.2 24H).
+* KVSEQ — decode only: the KV cache's *sequence* axis sharded over
+  ``model``; the softmax over a sharded axis lowers to the flash-decode
+  partial-max/partial-sum collective combine.
+
+The math is written once (plain einsums + masked softmax); modes differ
+only in the sharding constraints applied to the intermediates, so GSPMD
+does the partitioning. ``impl="pallas"`` swaps in the flash-attention
+kernel for the unsharded core (kernels/flash_attention.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.specs import AttnMode
+from .layers import dense_init, rope
+
+__all__ = ["init_attn", "attn_apply", "init_kv_cache", "decode_attn_apply"]
+
+
+def init_attn(key, d: int, num_heads: int, num_kv_heads: int, head_dim: int,
+              dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, num_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d, num_kv_heads * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d, num_kv_heads * head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d), dtype=dtype),
+    }
+
+
+def _causal_mask(sq: int, sk: int, window: Optional[int],
+                 q_offset: int = 0) -> jnp.ndarray:
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    ok = ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    return ok  # (sq, sk)
+
+
+def attn_apply(p: dict, x: jnp.ndarray, ctx, cfg, *,
+               kv_x: Optional[jnp.ndarray] = None,
+               causal: bool = True,
+               positions: Optional[jnp.ndarray] = None,
+               impl: str = "ref") -> jnp.ndarray:
+    """Full (training/prefill) attention. x: (B, S, D).
+
+    ``kv_x`` switches to cross-attention (keys/values from the encoder
+    memory; never causal)."""
+    a = cfg.attn
+    B, S, D = x.shape
+    src = x if kv_x is None else kv_x
+    Sk = src.shape[1]
+    H, KV, dh = a.num_heads, a.num_kv_heads, a.head_dim
+    groups = H // KV
+
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (src @ p["wk"]).reshape(B, Sk, KV, dh)
+    v = (src @ p["wv"]).reshape(B, Sk, KV, dh)
+
+    if a.rope_theta is not None and kv_x is None:
+        pos = jnp.arange(S) if positions is None else positions
+        q = rope(q, pos, a.rope_theta)
+        k = rope(k, pos, a.rope_theta)
+
+    mode = ctx.attn_mode
+    if mode == AttnMode.HEADS:
+        q = ctx.constrain(q, ctx.dp, None, ctx.tp, None)
+        k = ctx.constrain(k, ctx.dp, None,
+                          ctx.tp if KV % max(ctx.model_size, 1) == 0 else None,
+                          None)
+        v = ctx.constrain(v, ctx.dp, None,
+                          ctx.tp if KV % max(ctx.model_size, 1) == 0 else None,
+                          None)
+    elif mode == AttnMode.QSEQ:
+        q = ctx.constrain(q, ctx.dp, ctx.tp, None, None)
+        k = ctx.constrain(k, ctx.dp, None, None, None)
+        v = ctx.constrain(v, ctx.dp, None, None, None)
+
+    if impl == "pallas" and kv_x is None:
+        from ..kernels.ops import flash_attention
+        o = flash_attention(q, k, v, causal=causal,
+                            window=a.sliding_window)
+    else:
+        # grouped-query: fold groups into the head axis of scores
+        kq = jnp.repeat(k, groups, axis=2)      # (B, Sk, H, dh)
+        vq = jnp.repeat(v, groups, axis=2)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kq) / jnp.sqrt(dh)
+        scores = scores.astype(jnp.float32)
+        if causal and kv_x is None:
+            mask = _causal_mask(S, Sk, a.sliding_window)
+            scores = jnp.where(mask[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, vq)
+
+    o = o.reshape(B, S, H * dh)
+    if mode == AttnMode.HEADS:
+        o = ctx.constrain(o, ctx.dp, None, ctx.tp)
+    out = o @ p["wo"]
+    return ctx.constrain(out, ctx.dp, None, ctx.tp)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, num_kv_heads, head_dim), dtype),
+    }
+
+
+def decode_attn_apply(p: dict, x: jnp.ndarray, cache: dict,
+                      cache_len: jnp.ndarray, ctx, cfg,
+                      static_cache: bool = False
+                      ) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. x: (B, 1, D); cache k/v: (B, Smax, KV, dh).
+
+    ``static_cache=True`` (dry-run serve_step over a full cache) skips the
+    dynamic-update-slice so the cache stays read-only; the fresh token's
+    k/v still participate via a concat-free correction term.
+    """
+    a = cfg.attn
+    B, _, D = x.shape
+    H, KV, dh = a.num_heads, a.num_kv_heads, a.head_dim
+    groups = H // KV
+    Smax = cache["k"].shape[1]
+
+    q = (x @ p["wq"]).reshape(B, 1, H, dh)
+    k_new = (x @ p["wk"]).reshape(B, 1, KV, dh)
+    v_new = (x @ p["wv"]).reshape(B, 1, KV, dh)
+    if a.rope_theta is not None:
+        pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+        q = rope(q, pos, a.rope_theta)
+        k_new = rope(k_new, pos, a.rope_theta)
+
+    if not static_cache:
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), cache_len, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), cache_len, axis=1),
+        }
+
+    mode = ctx.attn_mode
+    seq_shard = ctx.tp if mode == AttnMode.KVSEQ else None
+    head_shard = ctx.tp if mode == AttnMode.HEADS else None
+    kc = ctx.constrain(cache["k"], ctx.dp, seq_shard, head_shard, None)
+    vc = ctx.constrain(cache["v"], ctx.dp, seq_shard, head_shard, None)
+
+    kq = jnp.repeat(kc, groups, axis=2).astype(x.dtype)   # (B, Smax, H, dh)
+    vq = jnp.repeat(vc, groups, axis=2).astype(x.dtype)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kq) / jnp.sqrt(dh)
+    scores = scores.astype(jnp.float32)
+    positions = jnp.arange(Smax)[None, None, None, :]
+    # static: cache holds tokens [0, cache_len) — the new token is handled
+    # by the online-softmax correction below. dynamic: the new token was
+    # just written at index cache_len, so include it.
+    valid = positions < cache_len if static_cache else positions < cache_len + 1
+    if a.sliding_window is not None:
+        valid = valid & (positions > cache_len - a.sliding_window)
+    scores = jnp.where(valid, scores, -1e30)
+    # sharded softmax over Smax => flash-decode style collective combine
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vq)
+    if static_cache:
+        # Include the fresh token's (k, v), which is not in the read-only
+        # cache: exact online-softmax combine of the cached result with the
+        # single new score. All correction tensors are (B, H, 1, 1).
+        s_new = (jnp.einsum(
+            "bqhd,bkhd->bhqk", q,
+            jnp.repeat(k_new, groups, axis=2).astype(x.dtype))
+            / jnp.sqrt(dh)).astype(jnp.float32)
+        m_old = jnp.max(scores, axis=-1, keepdims=True)
+        l_old = jnp.sum(jnp.exp(scores - m_old), axis=-1, keepdims=True)
+        m = jnp.maximum(m_old, s_new)
+        alpha = jnp.exp(m_old - m) * l_old        # old mass
+        beta = jnp.exp(s_new - m)                 # new-token mass
+        c_old = (alpha / (alpha + beta))          # (B, H, 1, 1)
+        c_new = (beta / (alpha + beta))
+        # reshape coefficients to broadcast over o: (B, 1, H, 1)
+        c_old = jnp.transpose(c_old, (0, 2, 1, 3)).astype(x.dtype)
+        c_new = jnp.transpose(c_new, (0, 2, 1, 3)).astype(x.dtype)
+        v_newg = jnp.repeat(v_new, groups, axis=2).astype(x.dtype)
+        o = o * c_old + v_newg * c_new
+
+    o = o.reshape(B, 1, H * dh)
+    out = o @ p["wo"]
+    return ctx.constrain(out, ctx.dp, None, ctx.tp), cache

@@ -1,0 +1,90 @@
+"""Basic layers: norms, embeddings, RoPE, MLP. Pure-JAX (no flax): params
+are nested dicts whose leaf names drive the sharding rules in
+``repro.sharding.specs``."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_norm", "norm_apply", "init_embedding", "init_mlp",
+           "mlp_apply", "rope", "dense_init"]
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (the common transformer default)."""
+    if scale is None:
+        scale = shape[0] ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """RMSNorm or LayerNorm depending on whether a bias is present.
+    Statistics in float32 for stability regardless of activation dtype."""
+    xf = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, tie: bool, max_pos: int = 0,
+                   learned_pos: bool = False, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"embed": dense_init(k1, (vocab, d), scale=d ** -0.5, dtype=dtype)}
+    if not tie:
+        p["unembed"] = dense_init(k2, (d, vocab), dtype=dtype)
+    if learned_pos:
+        p["pos_embed"] = dense_init(k3, (max_pos, d), scale=0.02, dtype=dtype)
+    return p
+
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, d_ff), dtype=dtype),
+         "w_down": dense_init(ks[1], (d_ff, d), dtype=dtype)}
+    if act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d, d_ff), dtype=dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str, ctx) -> jnp.ndarray:
+    """(B, S, D) -> (B, S, D); hidden sharded over the model axis."""
+    h = x @ p["w_up"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = ctx.constrain(h, ctx.dp, None, ctx.tp)
+    return h @ p["w_down"]
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

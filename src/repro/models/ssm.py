@@ -1,0 +1,433 @@
+"""State-space mixers: RWKV-6 ("Finch") and Mamba-style selective SSM.
+
+Both are diagonal-decay outer-product linear recurrences over the state
+``S_t ∈ R^{K×V}`` per head:
+
+    S_t = diag(w_t) · S_{t-1} + k_t ⊗ v_t          (decay per K channel)
+    y_t = q_t · S_t  (+ bonus u · (q_t·k_t) v_t for RWKV's current token)
+
+* RWKV-6: q=r (receptance), data-dependent decay ``w_t = exp(-exp(ww_t))``
+  from a low-rank token-shift mix; heads of size 64; "bonus" u term gives
+  the current token a separate weight. [arXiv:2404.05892]
+* Mamba: per-channel state h[d, n]: decay ``exp(A[d,n]·dt_t[d])``, input
+  ``dt_t[d]·B_t[n]·x_t[d]``, readout ``C_t[n]`` — the same recurrence with
+  K=n, V=d channels elementwise (V-dim enters through broadcasting).
+
+Training/prefill uses :func:`chunked_scan` — within-chunk parallel matmul
+form (the kernels/rwkv_scan.py Pallas target), across-chunk ``lax.scan``.
+Decode is the O(1) single-step update (this is why SSM archs run
+``long_500k`` trivially).
+
+Sharding: batch over dp. RWKV time-mix is replicated over ``model``
+(40 heads % 16 != 0 — see DESIGN.md §4; padding heads to 48 is the
+documented hillclimb); Mamba shards d_inner over ``model`` since the whole
+recurrence is elementwise in d.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["init_rwkv", "rwkv_apply", "rwkv_decode", "init_rwkv_state",
+           "init_mamba", "mamba_apply", "mamba_decode", "init_mamba_state",
+           "chunked_scan", "reference_scan"]
+
+
+# ---------------------------------------------------------------------------
+# Generic decay-outer-product recurrence
+# ---------------------------------------------------------------------------
+
+def reference_scan(q, k, v, w, u: Optional[jnp.ndarray] = None,
+                   state0: Optional[jnp.ndarray] = None):
+    """Oracle: step-by-step recurrence via lax.scan.
+
+    Shapes: q,k,w: (B, T, H, K); v: (B, T, H, V); u: (H, K) or None;
+    state0: (B, H, K, V). Returns (y (B,T,H,V), state (B,H,K,V)).
+    All math in float32.
+    """
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    q, k, v, w = (a.astype(f32) for a in (q, k, v, w))
+    s0 = (jnp.zeros((B, H, K, V), f32) if state0 is None
+          else state0.astype(f32))
+
+    def step(s, inp):
+        qt, kt, vt, wt = inp          # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]      # (B,H,K,V)
+        if u is not None:
+            cur = s + u.astype(f32)[None, :, :, None] * kv
+        else:
+            s = s * wt[..., :, None] + kv
+            cur = s
+        y = jnp.einsum("bhk,bhkv->bhv", qt, cur)
+        if u is not None:
+            s = s * wt[..., :, None] + kv
+        return s, y
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+def chunked_scan(q, k, v, w, u: Optional[jnp.ndarray] = None,
+                 state0: Optional[jnp.ndarray] = None, chunk: int = 64):
+    """Chunk-parallel form of :func:`reference_scan` (same signature).
+
+    Within a chunk of length c: let ``P_t = prod_{s<=t} w_s`` (inclusive
+    cumulative decay). Then
+
+      y_t = (q_t * P_t) · S_in                      (carry-in term)
+            + Σ_{j<t} (q_t·P_t/P_j) ·(k_j v_j)      (intra-chunk, lower-tri)
+            + u·(q_t·k_t) v_t                       (RWKV bonus, diagonal)
+      S_out = diag(P_c) S_in + Σ_j diag(P_c/P_j) k_j ⊗ v_j
+
+    Computed with two matmuls per chunk — the Pallas kernel mirrors this.
+    """
+    B, T, H, K = q.shape
+    V = v.shape[-1]
+    if T % chunk:
+        pad = chunk - T % chunk
+        zq = jnp.zeros((B, pad, H, K), q.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zq.astype(k.dtype)], 1)
+        v = jnp.concatenate([v, jnp.zeros((B, pad, H, V), v.dtype)], 1)
+        w = jnp.concatenate([w, jnp.ones((B, pad, H, K), w.dtype)], 1)
+    Tp = q.shape[1]
+    n_chunks = Tp // chunk
+    f32 = jnp.float32
+
+    def reshape(a):
+        return (a.astype(f32)
+                .reshape(B, n_chunks, chunk, H, a.shape[-1])
+                .transpose(1, 0, 3, 2, 4))           # (N, B, H, c, K/V)
+
+    qc, kc, vc, wc = map(reshape, (q, k, v, w))
+    s0 = (jnp.zeros((B, H, K, V), f32) if state0 is None
+          else state0.astype(f32))
+
+    def chunk_step(s, inp):
+        qt, kt, vt, wt = inp                          # (B,H,c,·)
+        logw = jnp.log(jnp.maximum(wt, 1e-30))
+        P = jnp.exp(jnp.cumsum(logw, axis=2))         # inclusive ∏_{s<=t} w_s
+        Ptot = P[:, :, -1:, :]                        # (B,H,1,K)
+        if u is None:
+            # Mamba convention: y_t reads S_t (after this step's decay+write)
+            # => carry-in decays by the inclusive P_t, diagonal included.
+            Pq = P
+            tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=0)
+        else:
+            # RWKV-6 convention: y_t reads S_{t-1} + u·k_t v_t
+            # => carry-in decays by the EXCLUSIVE ∏_{s<t} w_s = P_t / w_t,
+            # strict lower triangle, and the u-weighted diagonal.
+            Pq = P / jnp.maximum(wt, 1e-30)
+            tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)
+        q_in = qt * Pq
+        y = jnp.einsum("bhck,bhkv->bhcv", q_in, s)    # carry-in readout
+        # intra-chunk: att_{tj} = Σ_k q_t[k]·(decay t<-j)[k]·k_j[k]
+        kP = kt / jnp.maximum(P, 1e-30)
+        att = jnp.einsum("bhck,bhjk->bhcj", q_in, kP) * tri
+        if u is not None:
+            diag = jnp.einsum("bhck,hk,bhck->bhc", qt, u.astype(f32), kt)
+            att = att + jnp.eye(chunk, dtype=f32) * diag[..., None]
+        y = y + jnp.einsum("bhcj,bhjv->bhcv", att, vt)
+        # carry-out: S' = diag(Ptot) S + Σ_j diag(Ptot/P_j) k_j ⊗ v_j
+        s = s * Ptot[:, :, 0, :, None] \
+            + jnp.einsum("bhjk,bhjv->bhkv", (Ptot * kP), vt)
+        return s, y
+
+    # remat each chunk (same rationale as mamba_apply: don't save the
+    # per-chunk decay/attention intermediates for the backward)
+    s, ys = jax.lax.scan(jax.checkpoint(chunk_step), s0, (qc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, Tp, H, V)
+    return y[:, :T], s
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time-mix layer
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, d: int, head_dim: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 9)
+    H = d // head_dim
+    return {
+        "rwkv_r": dense_init(ks[0], (d, d), dtype=dtype),
+        "rwkv_k": dense_init(ks[1], (d, d), dtype=dtype),
+        "rwkv_v": dense_init(ks[2], (d, d), dtype=dtype),
+        "rwkv_g": dense_init(ks[3], (d, d), dtype=dtype),
+        "rwkv_w": dense_init(ks[4], (d, d), scale=0.1 * d ** -0.5,
+                             dtype=dtype),
+        "rwkv_o": dense_init(ks[5], (d, d), dtype=dtype),
+        # static token-shift mix coefficients for (r, k, v, g, w)
+        "rwkv_mix": jnp.full((5 * d,), 0.5, dtype),
+        # decay base: w = exp(-exp(ww + base)); base ~ log-spaced decays
+        "rwkv_decay_mix": jnp.tile(
+            jnp.linspace(-6.0, -0.5, head_dim, dtype=jnp.float32)[None, :],
+            (H, 1)).astype(dtype),
+        "rwkv_u": (0.1 * jax.random.normal(ks[6], (H, head_dim),
+                                           jnp.float32)).astype(dtype),
+    }
+
+
+def init_rwkv_state(batch: int, d: int, head_dim: int,
+                    dtype=jnp.float32) -> dict:
+    H = d // head_dim
+    return {"s": jnp.zeros((batch, H, head_dim, head_dim), jnp.float32),
+            "x_prev": jnp.zeros((batch, d), dtype)}
+
+
+def _rwkv_projections(p, x, x_shift, d, head_dim):
+    """Shared by train/decode: token-shift mix + projections.
+    x, x_shift: (..., D). Returns q(r),k,v,w,(gate) each (..., H, K)."""
+    H = d // head_dim
+    mix = p["rwkv_mix"].astype(jnp.float32).reshape(5, d)
+
+    def lerp(i):
+        m = mix[i]
+        return (x.astype(jnp.float32) * (1 - m)
+                + x_shift.astype(jnp.float32) * m).astype(x.dtype)
+
+    r = lerp(0) @ p["rwkv_r"]
+    k = lerp(1) @ p["rwkv_k"]
+    v = lerp(2) @ p["rwkv_v"]
+    g = lerp(3) @ p["rwkv_g"]
+    ww = (lerp(4) @ p["rwkv_w"]).astype(jnp.float32)
+    shape = x.shape[:-1] + (H, head_dim)
+    ww = ww.reshape(shape) + p["rwkv_decay_mix"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(ww, -8.0, 1.0)))   # data-dependent decay
+    return (r.reshape(shape), k.reshape(shape), v.reshape(shape), w,
+            jax.nn.silu(g))
+
+
+def _head_groupnorm(y, eps=1e-5):
+    """Per-head normalization (RWKV's GroupNorm, scale-free variant)."""
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    return ((yf - mu) * jax.lax.rsqrt(var + eps)).astype(y.dtype)
+
+
+def rwkv_apply(p: dict, x: jnp.ndarray, ctx, cfg, chunk: int = 64,
+               impl: str = "ref") -> jnp.ndarray:
+    """Training/prefill RWKV-6 time-mix. x: (B, S, D).
+
+    Head sharding: RWKV-6's 40 heads don't divide a 16-way model axis, so
+    the scan inputs are zero-PADDED to the next multiple of model_size
+    (40 -> 48 heads; +20% head flops) and the heads sharded 16-way — a
+    16x/1.2 = 13x per-device reduction of the scan's compute and traffic
+    vs running it replicated (EXPERIMENTS.md §Perf hillclimb 4). Padded
+    heads carry k=v=0 so they contribute exact zeros and are sliced away.
+    """
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    B, S, D = x.shape
+    H = d // hd
+    x_shift = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _rwkv_projections(p, x, x_shift, d, hd)
+    u = p["rwkv_u"].astype(jnp.float32)
+    ms = max(ctx.model_size, 1)
+    pad_h = (-H) % ms
+    if pad_h and ctx.mesh is not None:
+        zeros = ((0, 0), (0, 0), (0, pad_h), (0, 0))
+        r = jnp.pad(r, zeros)
+        k = jnp.pad(k, zeros)
+        v = jnp.pad(v, zeros)
+        w = jnp.pad(w, zeros, constant_values=1.0)
+        u = jnp.pad(u, ((0, pad_h), (0, 0)))
+        hspec = (ctx.dp, None, ctx.tp, None)
+        r = ctx.constrain(r, *hspec)
+        k = ctx.constrain(k, *hspec)
+        v = ctx.constrain(v, *hspec)
+        w = ctx.constrain(w, *hspec)
+    elif ctx.mesh is not None and H % ms == 0:
+        r = ctx.constrain(r, ctx.dp, None, ctx.tp, None)
+    if impl == "pallas":
+        from ..kernels.ops import rwkv_scan
+        y, _ = rwkv_scan(r, k, v, w, u)
+    else:
+        y, _ = chunked_scan(r, k, v, w, u=u, chunk=chunk)
+    if pad_h and ctx.mesh is not None:
+        y = y[:, :, :H]
+    y = _head_groupnorm(y).reshape(B, S, D).astype(x.dtype) * g
+    out = y @ p["rwkv_o"]
+    return ctx.constrain(out, ctx.dp, None, ctx.tp)
+
+
+def rwkv_decode(p: dict, x: jnp.ndarray, state: dict, ctx, cfg
+                ) -> Tuple[jnp.ndarray, dict]:
+    """O(1) single-token decode. x: (B, 1, D)."""
+    d, hd = cfg.d_model, cfg.ssm.head_dim
+    B = x.shape[0]
+    xt = x[:, 0]
+    r, k, v, w, g = _rwkv_projections(p, xt, state["x_prev"].astype(x.dtype),
+                                      d, hd)
+    s = state["s"]                                     # (B, H, K, V) f32
+    kv = (k.astype(jnp.float32)[..., :, None]
+          * v.astype(jnp.float32)[..., None, :])
+    cur = s + p["rwkv_u"].astype(jnp.float32)[None, :, :, None] * kv
+    y = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32), cur)
+    s = s * w[..., :, None] + kv
+    y = _head_groupnorm(y).reshape(B, d).astype(x.dtype) * g
+    out = (y @ p["rwkv_o"])[:, None]
+    out = ctx.constrain(out, ctx.dp, None, ctx.tp)
+    return out, {"s": s, "x_prev": xt}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM layer
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, d: int, cfg_ssm, dtype=jnp.float32) -> dict:
+    din = cfg_ssm.d_inner_mult * d
+    N = cfg_ssm.d_state
+    rank = cfg_ssm.dt_rank or d // 16
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * din), dtype=dtype),
+        "conv_w": (0.1 * jax.random.normal(
+            ks[1], (din, cfg_ssm.conv_width), jnp.float32)).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": dense_init(ks[2], (din, rank + 2 * N), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (rank, din), scale=rank ** -0.5,
+                              dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[4], (din,), jnp.float32,
+                jnp.log(1e-3), jnp.log(1e-1))))).astype(dtype),
+        "A_log": jnp.log(A).astype(dtype),
+        "D_skip": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[5], (din, d), dtype=dtype),
+    }
+
+
+def init_mamba_state(batch: int, d: int, cfg_ssm, dtype=jnp.float32) -> dict:
+    din = cfg_ssm.d_inner_mult * d
+    return {
+        "h": jnp.zeros((batch, din, cfg_ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg_ssm.conv_width - 1, din), dtype),
+    }
+
+
+def _mamba_core(p, xz, cfg_ssm, d):
+    """Split in_proj output, returns (x_conv_input, z, static params)."""
+    din = cfg_ssm.d_inner_mult * d
+    return xz[..., :din], xz[..., din:]
+
+
+def mamba_apply(p: dict, x: jnp.ndarray, ctx, cfg, chunk: int = 64
+                ) -> jnp.ndarray:
+    """Training/prefill selective SSM. x: (B, S, D).
+
+    The (B, S, d_inner, N) decay tensor is only ever materialized one chunk
+    at a time (chunk-lazy), which keeps transient memory bounded at
+    production shapes. d_inner is sharded over the model axis (the whole
+    recurrence is elementwise in d_inner).
+    """
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner_mult * d
+    N = s.d_state
+    rank = s.dt_rank or d // 16
+    B, S, D = x.shape
+
+    xz = x @ p["in_proj"]                             # (B, S, 2*din)
+    xz = ctx.constrain(xz, ctx.dp, None, ctx.tp)
+    xs, z = _mamba_core(p, xz, s, d)
+    # causal depthwise conv, width W
+    W = s.conv_width
+    xpad = jnp.pad(xs, ((0, 0), (W - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:S + i] * p["conv_w"][:, i] for i in range(W))
+    xc = jax.nn.silu(xc + p["conv_b"])
+    dbc = xc @ p["x_proj"]                            # (B, S, rank+2N)
+    dt = jax.nn.softplus(dbc[..., :rank] @ p["dt_proj"]
+                         + p["dt_bias"])              # (B, S, din)
+    Bc = dbc[..., rank:rank + N]                      # (B, S, N)
+    Cc = dbc[..., rank + N:]                          # (B, S, N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))      # (din, N)
+
+    # chunk-lazy scan
+    if S % chunk:
+        pad = chunk - S % chunk
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    Sp = dt.shape[1]
+    nch = Sp // chunk
+
+    def resh(a):
+        return (a.astype(jnp.float32)
+                .reshape(B, nch, chunk, a.shape[-1]).transpose(1, 0, 2, 3))
+
+    dtc, Bcc, Ccc, xcc = map(resh, (dt, Bc, Cc, xc))
+
+    def chunk_step(h, inp):
+        dtk, Bk, Ck, xk = inp                          # (B, c, din/N)
+        logw = dtk[..., None] * A[None, None]          # (B, c, din, N)
+        cs = jnp.cumsum(logw, axis=1)                  # inclusive
+        P = jnp.exp(cs)
+        Ptot = P[:, -1]                                # (B, din, N)
+        kin = dtk[..., None] * Bk[:, :, None, :]       # (B, c, din, N)
+        qin = Ck[:, :, None, :] * P                    # (B, c, din, N)
+        y = jnp.einsum("bcdn,bdn->bcd", qin, h)        # carry-in
+        kP = kin / jnp.maximum(P, 1e-30)
+        att = jnp.einsum("bcdn,bjdn->bdcj", qin, kP)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+        att = att * tri[None, None]
+        y = y + jnp.einsum("bdcj,bjd->bcd", att, xk)
+        h = h * Ptot + jnp.einsum("bjdn,bjd->bdn", Ptot[:, None] * kP, xk)
+        return h, y
+
+    h0 = jnp.zeros((B, din, N), jnp.float32)
+    # remat each chunk: the backward otherwise saves every per-chunk
+    # (B, c, din, N) intermediate — ~25 GB/layer at jamba production
+    # shapes (see EXPERIMENTS.md §Perf hillclimb 1). Recomputing the chunk
+    # forward costs ~1 extra pass over a compute-cheap (elementwise) body.
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                         (dtc, Bcc, Ccc, xcc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, din)[:, :S]
+    y = (y + xc[:, :S] * p["D_skip"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = ctx.constrain(y, ctx.dp, None, ctx.tp)
+    out = y @ p["out_proj"]
+    return ctx.constrain(out, ctx.dp, None, ctx.tp)
+
+
+def mamba_decode(p: dict, x: jnp.ndarray, state: dict, ctx, cfg
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """O(1) single-token decode. x: (B, 1, D)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    N = s.d_state
+    rank = s.dt_rank or d // 16
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xs, z = _mamba_core(p, xz, s, d)
+    conv_hist = jnp.concatenate(
+        [state["conv"], xs[:, None].astype(state["conv"].dtype)], axis=1)
+    xc = jnp.einsum("bwd,dw->bd", conv_hist.astype(x.dtype), p["conv_w"])
+    xc = jax.nn.silu(xc + p["conv_b"])
+    dbc = xc @ p["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :rank] @ p["dt_proj"] + p["dt_bias"])
+    Bc = dbc[..., rank:rank + N].astype(jnp.float32)
+    Cc = dbc[..., rank + N:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * A[None])          # (B, din, N)
+    h = state["h"] * decay + (dtf * xc.astype(jnp.float32))[..., None] \
+        * Bc[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cc)
+    y = (y + xc.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)
+         ).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return ctx.constrain(out, ctx.dp, None, ctx.tp), {
+        "h": h, "conv": conv_hist[:, 1:]}

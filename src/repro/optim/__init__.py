@@ -1,0 +1,2 @@
+from .optimizers import (Optimizer, adamw, clip_by_global_norm,
+                         cosine_schedule, muon, sgd)

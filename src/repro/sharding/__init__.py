@@ -1,0 +1,1 @@
+from .specs import AttnMode, ShardCtx, attn_mode_for, spec_for_param

@@ -1,0 +1,167 @@
+"""Sharding policy: logical axes → mesh axes, and the ShardCtx helper.
+
+Mesh axes: ``("pod",) data, model`` — batch-like logical axes map to
+``("pod","data")`` (or ``("data",)`` single-pod); weight/activation feature
+axes map to ``"model"``.
+
+Per-arch attention modes (DESIGN.md §4):
+  HEADS — shard q-heads over model (requires num_heads % model_size == 0)
+  QSEQ  — shard query seq over model, gather KV (small), for odd head counts
+  KVSEQ — decode: shard the KV cache's sequence dim over model, sharded
+          softmax (flash-decode-style combine is what XLA lowers this to)
+
+All constraints are *advisory* (``with_sharding_constraint``); on a 1-device
+CPU mesh (smoke tests) ``ShardCtx.null()`` turns them into no-ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardCtx", "AttnMode", "attn_mode_for", "param_spec_rules",
+           "spec_for_param"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnMode:
+    HEADS = "heads"
+    QSEQ = "qseq"
+    KVSEQ = "kvseq"
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """Carries the mesh + axis names through model code."""
+
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)        # ("pod","data") multi-pod
+    model_axis: Optional[str] = "model"
+    attn_mode: str = AttnMode.HEADS
+    shard_batch: bool = True      # False for batch=1 decode (long_500k)
+    # residual-stream sharding between blocks: "d" = hidden dim over model
+    # (Megatron TP default); "seq" = sequence over model (Megatron-SP) —
+    # pre-norms run fully sharded and the partitioner pairs the layer-exit
+    # psum with the layer-entry gather as reduce-scatter + all-gather
+    # (half the bytes of all-reduce). Train/prefill only (decode has S=1).
+    residual: str = "d"
+
+    @staticmethod
+    def null() -> "ShardCtx":
+        return ShardCtx(mesh=None, model_axis=None)
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp(self):
+        """Partition entry for batch dims (None when not sharding batch)."""
+        if self.mesh is None or not self.shard_batch:
+            return None
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def tp(self):
+        return self.model_axis if self.mesh is not None else None
+
+    def constrain(self, x, *spec):
+        """``with_sharding_constraint`` if a mesh is active, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def res(self, x):
+        """Constrain a (B, S, D) residual-stream activation."""
+        if self.mesh is None:
+            return x
+        if self.residual == "seq" and x.shape[1] % max(self.model_size, 1) \
+                == 0 and x.shape[1] > 1:
+            return self.constrain(x, self.dp, self.tp, None)
+        return self.constrain(x, self.dp, None, self.tp)
+
+    def sharding(self, *spec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*spec))
+
+
+def attn_mode_for(num_heads: int, num_kv_heads: int, model_size: int,
+                  kind: str, batch: int) -> str:
+    """Pick the attention sharding mode for (arch, shape, mesh)."""
+    if model_size == 1:
+        return AttnMode.HEADS
+    if kind == "decode":
+        # decode: Q is one token; shard the big thing — the KV cache.
+        # Heads-sharding the cache requires kv_heads % model == 0 (rare);
+        # KVSEQ always works and is the flash-decode layout.
+        if num_kv_heads % model_size == 0 and batch > 1:
+            return AttnMode.HEADS
+        return AttnMode.KVSEQ
+    if num_heads % model_size == 0:
+        return AttnMode.HEADS
+    return AttnMode.QSEQ
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules, keyed by parameter-name suffix. Shapes listed
+# for reference; `model` shards the axis marked M.
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # name-suffix,         spec builder (dp unused for params)
+    ("embed",              lambda tp: P(tp, None)),        # (V, D): vocab
+    ("pos_embed",          lambda tp: P(None, None)),
+    ("unembed",            lambda tp: P(None, tp)),        # (D, V)
+    ("wq",                 lambda tp: P(None, tp)),        # (D, H*dh)
+    ("wk",                 lambda tp: P(None, tp)),
+    ("wv",                 lambda tp: P(None, tp)),
+    ("wo",                 lambda tp: P(tp, None)),        # (H*dh, D)
+    ("w_gate",             lambda tp: P(None, tp)),        # (D, F)
+    ("w_up",               lambda tp: P(None, tp)),
+    ("w_down",             lambda tp: P(tp, None)),        # (F, D)
+    ("router",             lambda tp: P(None, None)),      # (D, E)
+    ("expert_gate",        lambda tp: P(tp, None, None)),  # (E, D, Fe)
+    ("expert_up",          lambda tp: P(tp, None, None)),
+    ("expert_down",        lambda tp: P(tp, None, None)),  # (E, Fe, D)
+    ("in_proj",            lambda tp: P(None, tp)),        # mamba (D, 2*din)
+    ("conv_w",             lambda tp: P(tp, None)),        # (din, width)
+    ("conv_b",             lambda tp: P(tp,)),
+    ("dt_proj",            lambda tp: P(None, tp)),        # (rank, din)
+    ("x_proj",             lambda tp: P(tp, None)),        # (din, rank+2N)
+    ("A_log",              lambda tp: P(tp, None)),        # (din, N)
+    ("D_skip",             lambda tp: P(tp,)),
+    ("out_proj",           lambda tp: P(tp, None)),        # (din, D)
+    # rwkv6: time-mix runs replicated over model (40 heads % 16 != 0 —
+    # see DESIGN.md §4 and the roofline hillclimb); channel-mix shards.
+    ("rwkv_r",             lambda tp: P(None, None)),
+    ("rwkv_k",             lambda tp: P(None, None)),
+    ("rwkv_v",             lambda tp: P(None, None)),
+    ("rwkv_g",             lambda tp: P(None, None)),
+    ("rwkv_w",             lambda tp: P(None, None)),
+    ("rwkv_o",             lambda tp: P(None, None)),
+    ("rwkv_mix",           lambda tp: P(None,)),
+    ("rwkv_decay_mix",     lambda tp: P(None, None)),
+    ("rwkv_u",             lambda tp: P(None, None)),
+    ("scale",              lambda tp: P(None,)),           # norms
+    ("bias",               lambda tp: P(None,)),
+]
+
+
+def spec_for_param(path: str, tp: Optional[str]):
+    """Partition spec for a parameter, by name suffix; replicated default."""
+    name = path.rsplit("/", 1)[-1]
+    for suffix, fn in _RULES:
+        if name == suffix:
+            return fn(tp)
+    return P()
+
+
+def param_spec_rules():
+    return list(_RULES)

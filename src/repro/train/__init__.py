@@ -1,0 +1,2 @@
+from .checkpoint import load_checkpoint, save_checkpoint
+from .trainer import Trainer, TrainHistory, TrainState

@@ -1,0 +1,71 @@
+"""Checkpointing: flat-key .npz snapshots of (params, opt_state, step).
+
+Path-keyed (``stages/0/b0/mixer/wq``) so checkpoints survive refactors that
+preserve the tree structure; list indices are path components. Restores
+onto an existing example tree (shapes/dtypes validated leaf-by-leaf).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint"]
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k2, v in node.items():
+                walk(f"{prefix}/{k2}" if prefix else str(k2), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}" if prefix else str(i), v)
+        else:
+            flat[prefix] = np.asarray(node)
+
+    walk("", tree)
+    return flat
+
+
+def _unflatten_onto(example, flat: dict):
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {k2: walk(f"{prefix}/{k2}" if prefix else str(k2), v)
+                    for k2, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            out = [walk(f"{prefix}/{i}" if prefix else str(i), v)
+                   for i, v in enumerate(node)]
+            return type(node)(out) if isinstance(node, tuple) else out
+        arr = flat[prefix]
+        if tuple(arr.shape) != tuple(np.shape(node)):
+            raise ValueError(
+                f"checkpoint mismatch at {prefix}: {arr.shape} vs "
+                f"{np.shape(node)}")
+        return jax.numpy.asarray(arr, dtype=node.dtype)
+
+    return walk("", example)
+
+
+def save_checkpoint(path: str, params, opt_state, step: int) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = {f"p:{k}": v for k, v in _flatten(params).items()}
+    flat.update({f"o:{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(path, __step__=np.int64(step), **flat)
+
+
+def load_checkpoint(path: str, params_example, opt_example
+                    ) -> Tuple[Any, Any, int]:
+    with np.load(path) as z:
+        step = int(z["__step__"])
+        pf = {k[2:]: z[k] for k in z.files if k.startswith("p:")}
+        of = {k[2:]: z[k] for k in z.files if k.startswith("o:")}
+    params = _unflatten_onto(params_example, pf)
+    opt = _unflatten_onto(opt_example, of)
+    return params, opt, step

@@ -1,0 +1,131 @@
+"""Validate the paper's theorems numerically.
+
+These are the EXPERIMENTS.md §Paper-validation checks: Theorem 2.3's
+log-factor near-optimality, its tightness at tau_i = i, Theorem 3.2's
+expectation bound, Corollary 3.4 regimes, the §5.1 reduction of the
+universal recursions to the fixed model, and Theorem 5.5 partial
+participation."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (FixedTimes, PartialParticipationModel, UniversalModel,
+                        exponential_times, iteration_complexity, log_factor,
+                        lower_bound_recursion, msync_upper_recursion,
+                        run_m_sync_sgd, t_malenia, t_optimal, t_rand_upper,
+                        t_sync, t_sync_full, truncated_normal_times)
+
+L, DELTA, EPS = 1.0, 1.0, 1e-2
+
+
+def test_theorem_2_3_log_factor_sqrt_law():
+    # tau_i = sqrt(i): T_sync <= C * T_opt * log(n+1) with C modest.
+    for n in (10, 100, 1000):
+        taus = FixedTimes.sqrt_law(n).taus
+        for sigma2 in (1e-2, 1.0, 100.0):
+            ts, _ = t_sync(taus, L, DELTA, EPS, sigma2, c=1.0)
+            to, _ = t_optimal(taus, L, DELTA, EPS, sigma2, c=1.0)
+            assert ts <= to * log_factor(n) * 4.0
+            assert ts >= to * 0.99  # sync can never beat the optimum
+
+
+def test_theorem_2_3_log_factor_tight_at_linear():
+    # tau_i = i is the paper's tightness example: the ratio actually grows
+    # like log(n) (and never exceeds it modulo constants).
+    ratios = []
+    for n in (10, 100, 1000, 10000):
+        taus = FixedTimes.linear(n).taus
+        sigma2 = n * EPS  # sigma^2/eps = n — the interesting regime
+        ts, _ = t_sync(taus, L, DELTA, EPS, sigma2, c=1.0)
+        to, _ = t_optimal(taus, L, DELTA, EPS, sigma2, c=1.0)
+        ratios.append(ts / to)
+    assert ratios[-1] > ratios[0] * 1.5          # grows
+    for n, r in zip((10, 100, 1000, 10000), ratios):
+        assert r <= 2.0 * log_factor(n)          # but only logarithmically
+
+
+def test_sync_full_never_beats_optimal():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(2, 200))
+        taus = np.sort(rng.uniform(0.1, 50.0, n))
+        sigma2 = float(rng.uniform(0.001, 10.0))
+        tf = t_sync_full(taus, L, DELTA, EPS, sigma2, c=1.0)
+        to, _ = t_optimal(taus, L, DELTA, EPS, sigma2, c=1.0)
+        assert tf >= to * 0.999
+
+
+def test_iteration_complexity_matches_eq3():
+    assert iteration_complexity(1, 1, 1e-2, 1.0, 10) \
+        == math.ceil(16 * max(100.0, 1.0 * 1 / (10 * 1e-4)))
+
+
+def test_theorem_3_2_expectation_bound():
+    # E[T_rand] <= (16 LΔ/ε)(τ_m + R log n) max(1, σ²/(mε)): check the
+    # simulator's measured expectation against the closed form.
+    n, m = 16, 8
+    model = truncated_normal_times(np.sqrt(np.arange(1, n + 1)), sigma=0.5)
+    sigma2 = 1.0
+    K = iteration_complexity(L, DELTA, EPS, sigma2, m)
+    K_sim = 200  # simulate a prefix; time is additive in K (eq. 6)
+    times = [run_m_sync_sgd(model, K=K_sim, m=m, seed=s).total_time
+             for s in range(10)]
+    mean_per_iter = np.mean(times) / K_sim
+    bound_per_iter = (t_rand_upper(model.mean_times(), model.R, L, DELTA,
+                                   EPS, sigma2, m, c=16.0) / (16 * K)) * 16
+    # bound is per-iteration (τ_m + R log n); measured must respect it
+    assert mean_per_iter <= bound_per_iter * 1.05
+
+
+def test_corollary_3_4_exponential_regime():
+    # Exp(lam): tau_i = R = 1/lam; Sync SGD (m = n) nearly optimal.
+    n = 64
+    model = exponential_times(lam=2.0, n=n)
+    taus = model.mean_times()
+    sigma2 = n * EPS * 10  # sigma^2/eps >> n
+    up = t_rand_upper(taus, model.R, L, DELTA, EPS, sigma2, m=n, c=1.0)
+    to, _ = t_optimal(taus, L, DELTA, EPS, sigma2, c=1.0)
+    assert up <= to * log_factor(n) * 8.0
+
+
+def test_universal_recursions_reduce_to_fixed_model():
+    # §5.1: constant powers v_i = 1/tau_i make (13) give 2k/v_m steps.
+    n = 8
+    taus = np.arange(1.0, n + 1.0)
+    grid = np.arange(0.0, 2000.0, 1.0)
+    powers = np.repeat((1.0 / taus)[:, None], len(grid), axis=1)
+    model = UniversalModel(grid, powers)
+    sigma2 = 0.0  # K = 16 LΔ/ε
+    m = 3
+    ub = msync_upper_recursion(model, L, DELTA, 1.0, sigma2, m)
+    K = 16
+    assert ub == pytest.approx(2 * K * taus[m - 1], rel=0.01)
+
+
+def test_theorem_5_5_partial_participation_linear_time():
+    # p < 0.4 stragglers, equal power v: m-sync with m = (1-2p)n completes
+    # K iterations in O(K/v) — i.e. bounded per-iteration time <= 4/v.
+    n, p, v = 20, 0.2, 1.0
+    model = PartialParticipationModel(n=n, v=v, p=p, period=0.7, t_max=900.0)
+    m = int((1 - 2 * p) * n)
+    ub = msync_upper_recursion(model, L, DELTA, 1.0, 0.0, m)  # K = 16
+    assert ub <= 16 * 4.0 / v + 1e-6
+
+
+def test_malenia_gap_constant_for_powerlaw():
+    # §6: for tau_m = tau_1 m^alpha, alpha <= 4, tau_n / mean(tau) = O(1).
+    for alpha in (0.5, 1.0, 2.0, 4.0):
+        taus = FixedTimes.power_law(1000, alpha).taus
+        gap = taus[-1] / np.mean(taus)
+        assert gap <= alpha + 1 + 1e-9  # mean of m^alpha ~ n^alpha/(alpha+1)
+
+
+def test_lower_bound_recursion_monotone():
+    grid = np.arange(0.0, 500.0, 0.5)
+    powers = np.ones((4, len(grid)))
+    model = UniversalModel(grid, powers)
+    lb1 = lower_bound_recursion(model, L, DELTA, 1.0, 4.0, c1=4, c2=1)
+    lb2 = lower_bound_recursion(model, L, DELTA, 1.0, 16.0, c1=4, c2=1)
+    assert lb2 > lb1  # more noise -> larger batches -> more time

@@ -1,0 +1,145 @@
+"""Behavioural tests of the event-driven algorithm simulators (Alg 1/2/3,
+Rennala, Malenia) against the paper's exact wall-clock accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core import (FixedTimes, Problem, exponential_times,
+                        quadratic_worst_case, run_async_sgd, run_m_sync_sgd,
+                        run_malenia_sgd, run_rennala_sgd, run_sync_sgd,
+                        uniform_times)
+
+
+def test_sync_sgd_fixed_times_waits_for_slowest():
+    # Assumption 2.2: each iteration takes exactly tau_n (eq. (1) accounting).
+    model = FixedTimes(np.array([1.0, 2.0, 5.0]))
+    tr = run_sync_sgd(model, K=10)
+    assert tr.total_time == pytest.approx(10 * 5.0)
+    assert tr.iterations == 10
+    assert tr.gradients_used == 30  # all three aggregated each iteration
+
+
+def test_m_sync_fixed_times_waits_for_mth():
+    # Theorem 2.3 accounting: duration per iteration is tau_m.
+    model = FixedTimes(np.array([1.0, 2.0, 5.0, 100.0]))
+    tr = run_m_sync_sgd(model, K=20, m=2)
+    assert tr.total_time == pytest.approx(20 * 2.0)
+    # the slow workers' stale gradients are computed but discarded
+    assert tr.gradients_used == 40
+    assert tr.discard_fraction > 0
+
+
+def test_m_sync_m1_is_fastest_worker():
+    model = FixedTimes(np.array([0.5, 3.0, 3.0]))
+    tr = run_m_sync_sgd(model, K=8, m=1)
+    assert tr.total_time == pytest.approx(8 * 0.5)
+
+
+def test_async_sgd_every_arrival_updates():
+    model = FixedTimes(np.array([1.0, 1.5]))
+    tr = run_async_sgd(model, K=10)
+    assert tr.iterations == 10
+    assert tr.gradients_used == 10
+    # arrivals interleave: worker0 at 1,2,3..., worker1 at 1.5,3,...
+    assert tr.total_time <= 10 * 1.0  # much faster than sync on 2 workers
+
+
+def test_rennala_batch_timing_homogeneous():
+    # n equal workers, batch=n. Under the paper's "cannot stop
+    # computations" remark (§3), in-flight gradients go stale after each
+    # update, so steady state costs ~2 gradient-times per iteration — the
+    # same "N_i = 2" accounting as recursion (13).
+    model = FixedTimes(np.ones(4))
+    tr = run_rennala_sgd(model, K=5, batch=4)
+    assert 5.0 <= tr.total_time <= 2 * 5.0
+
+
+def test_rennala_harmonic_speedup():
+    # tau = [1, 10]: Rennala with batch 10 gets ~10 gradients per ~10s from
+    # the fast worker + 1 from the slow: faster than waiting 10s per *one*.
+    model = FixedTimes(np.array([1.0, 10.0]))
+    tr = run_rennala_sgd(model, K=3, batch=10)
+    sync = run_sync_sgd(model, K=3)
+    # sync: 3 iters * 10s = 30s for 3 updates of batch 2;
+    # rennala: ~3 * ~9.5s for 3 updates of batch 10 — more grads per second.
+    grads_per_sec_rennala = tr.gradients_used / tr.total_time
+    grads_per_sec_sync = sync.gradients_used / sync.total_time
+    assert grads_per_sec_rennala > 2 * grads_per_sec_sync
+
+
+def test_malenia_requires_all_workers():
+    model = FixedTimes(np.array([1.0, 4.0]))
+    tr = run_malenia_sgd(model, K=2, S=1.0)
+    # needs B_i >= 1 for every worker => at least tau_n per iteration
+    assert tr.total_time >= 2 * 4.0 - 1e-9
+
+
+def test_msync_converges_on_quadratic():
+    prob = quadratic_worst_case(d=50, p=0.5)
+    model = FixedTimes(FixedTimes.sqrt_law(8).taus)
+    tr = run_m_sync_sgd(model, K=3000, m=4, problem=prob, gamma=0.5,
+                        seed=1, record_every=100)
+    assert tr.grad_norms[-1] < tr.grad_norms[0] * 1e-2
+    assert np.all(np.isfinite(tr.values))
+
+
+def test_async_converges_on_quadratic():
+    prob = quadratic_worst_case(d=50, p=0.5)
+    model = FixedTimes(np.ones(4))
+    tr = run_async_sgd(model, K=4000, problem=prob, gamma=0.25,
+                       delay_adaptive=True, seed=2, record_every=200)
+    assert tr.grad_norms[-1] < tr.grad_norms[0] * 1e-2
+
+
+def test_rennala_converges_on_quadratic():
+    prob = quadratic_worst_case(d=50, p=0.5)
+    model = FixedTimes(np.ones(4))
+    tr = run_rennala_sgd(model, K=1500, batch=8, problem=prob, gamma=0.5,
+                         seed=3, record_every=100)
+    assert tr.grad_norms[-1] < tr.grad_norms[0] * 1e-2
+
+
+def test_random_times_mean_wallclock_close_to_tau():
+    # Exp(1) times, m=1 of 4. Busy workers must finish stale computations
+    # before starting fresh ones (§3 Remark), so the per-iteration time sits
+    # between the fresh-start best case E[min of 4 Exp] = 1/4 and the
+    # Theorem 3.2 bound E[max_{i<=m} tau] = E[tau] = 1.
+    model = exponential_times(lam=1.0, n=4)
+    ts = [run_m_sync_sgd(model, K=50, m=1, seed=s).total_time / 50
+          for s in range(20)]
+    assert 0.25 <= np.mean(ts) <= 1.0
+
+
+def test_uniform_noise_wallclock():
+    model = uniform_times(np.ones(8), half_width=0.5)
+    tr = run_sync_sgd(model, K=100, seed=0)
+    # E[max of 8 Unif(0.5,1.5)] = 0.5 + 8/9
+    assert tr.total_time / 100 == pytest.approx(0.5 + 8 / 9, rel=0.1)
+
+
+def test_discarded_gradients_accounted():
+    model = FixedTimes(np.array([1.0, 1.0, 7.0]))
+    tr = run_m_sync_sgd(model, K=30, m=2)
+    assert tr.gradients_computed > tr.gradients_used
+
+
+def test_ringmaster_discards_overly_stale():
+    from repro.core import run_ringmaster_asgd
+    # one worker 100x slower: its gradients carry huge delays and must be
+    # discarded rather than applied
+    model = FixedTimes(np.array([1.0, 1.0, 100.0]))
+    tr = run_ringmaster_asgd(model, K=300, max_delay=5)
+    assert tr.gradients_computed > tr.gradients_used  # stale ones dropped
+    assert tr.iterations == 300
+
+
+def test_ringmaster_converges_where_naive_async_diverges():
+    from repro.core import run_ringmaster_asgd
+    prob = quadratic_worst_case(d=50, p=0.5)
+    model = FixedTimes(np.concatenate([np.ones(4), [200.0]]))
+    # naive async with the same (large) constant stepsize goes unstable on
+    # a 200-step-delayed gradient; ringmaster caps staleness
+    ring = run_ringmaster_asgd(model, K=3000, max_delay=8, problem=prob,
+                               gamma=0.4, seed=0, record_every=200)
+    assert np.isfinite(ring.grad_norms[-1])
+    assert ring.grad_norms[-1] < ring.grad_norms[0] * 1e-2

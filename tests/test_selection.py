@@ -1,0 +1,118 @@
+"""Tests for §4 (optimal m selection) and §J (R estimation)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (FixedTimes, estimate_R, g_of_m, h_of_m, optimal_m,
+                        power_law_m)
+from repro.core.selection import OnlineTauEstimator, fit_power_law
+
+
+def test_prop_4_1_small_noise_gives_m1():
+    taus = np.arange(1.0, 101.0)
+    assert optimal_m(taus, sigma2=0.5, eps=1.0) == 1
+
+
+def test_prop_4_1_cap():
+    # minimizer must satisfy m <= min(ceil(sigma^2/eps), n)
+    taus = np.ones(100)  # equal times: larger m always at least as good
+    m = optimal_m(taus, sigma2=1.0, eps=0.05)  # sigma^2/eps = 20
+    assert m == 20
+
+
+def test_prop_4_1_sandwich():
+    # sigma^2 h(m) / eps <= g(m) <= 2 sigma^2 h(m) / eps on the capped range
+    taus = np.sort(np.random.default_rng(0).uniform(1, 10, 50))
+    sigma2, eps = 2.0, 0.1
+    cap = min(int(np.ceil(sigma2 / eps)), 50)
+    g = g_of_m(taus, sigma2, eps)[:cap]
+    h = h_of_m(taus)[:cap]
+    assert np.all(g >= sigma2 * h / eps - 1e-12)
+    assert np.all(g <= 2 * sigma2 * h / eps + 1e-12)
+
+
+@given(alpha=st.floats(0.0, 1.0), n=st.integers(2, 300),
+       ratio=st.floats(1.0, 1e4))
+@settings(max_examples=60, deadline=None)
+def test_prop_4_2_powerlaw_choice_optimal(alpha, n, ratio):
+    # For tau_m = tau_1 m^alpha (delta = 0), m = min(ceil(sigma2/eps), n)
+    # minimizes g  (h is non-increasing).
+    taus = FixedTimes.power_law(n, alpha).taus
+    eps = 1.0
+    sigma2 = ratio
+    m_choice = power_law_m(n, sigma2, eps)
+    g = g_of_m(taus, sigma2, eps)
+    # Prop 4.1's sandwich is tight only up to a factor 2 (the ceil in the
+    # cap), so "optimal" in Prop 4.2 means within 2x of the true minimum.
+    assert g[m_choice - 1] <= 2.0 * np.min(g) * (1 + 1e-9) + 1e-12
+
+
+def test_prop_4_2_with_offsets():
+    # tau_m = tau_1 m^alpha + delta_m: choice optimal once m >= (δ/τ1)^(1/α)
+    n, alpha, tau1, delta = 1000, 0.5, 1.0, 3.0
+    rng = np.random.default_rng(1)
+    deltas = rng.uniform(0, delta, n)
+    taus = FixedTimes.power_law(n, alpha, tau1, deltas).taus
+    sigma2, eps = 500.0, 1.0  # cap = 500 >= (3/1)^2 = 9
+    m_choice = power_law_m(n, sigma2, eps)
+    g = g_of_m(taus, sigma2, eps)
+    assert g[m_choice - 1] <= 2.5 * np.min(g)
+
+
+def test_estimate_R_exponential():
+    # Exp(1): theory says R = Θ(1); estimator should land near 1.
+    rng = np.random.default_rng(0)
+    times = rng.exponential(1.0, 20000)
+    R = estimate_R(times)
+    assert 0.5 < R < 2.5
+
+
+def test_estimate_R_constant_times_is_zero():
+    assert estimate_R(np.full(100, 3.3)) == 0.0
+
+
+def test_estimate_R_scales_with_noise():
+    rng = np.random.default_rng(0)
+    r_small = estimate_R(rng.normal(10, 0.1, 5000))
+    r_big = estimate_R(rng.normal(10, 1.0, 5000))
+    assert r_big > 5 * r_small
+
+
+def test_estimate_R_definition_holds():
+    rng = np.random.default_rng(3)
+    times = rng.gamma(4.0, 0.5, 4000)
+    R = estimate_R(times)
+    val = np.mean(np.exp(np.abs(times - times.mean()) / R))
+    assert val == pytest.approx(2.0, rel=1e-3)
+
+
+def test_fit_power_law_recovers_alpha():
+    taus = FixedTimes.power_law(500, 0.7, tau1=2.0).taus
+    tau1, alpha = fit_power_law(taus)
+    assert alpha == pytest.approx(0.7, abs=0.01)
+    assert tau1 == pytest.approx(2.0, rel=0.05)
+
+
+def test_online_estimator_converges_to_taus():
+    rng = np.random.default_rng(0)
+    true_taus = np.array([1.0, 2.0, 4.0, 8.0])
+    est = OnlineTauEstimator(4, beta=0.8, eps_target=0.1)
+    for _ in range(300):
+        est.update_times(true_taus + rng.normal(0, 0.05, 4))
+    assert np.allclose(est.tau_hat, true_taus, rtol=0.1)
+    est.update_sigma2(4.0)  # sigma^2/eps = 40: g = [40, 40, 53.3, 80]
+    m = est.suggest_m(eps=0.1)
+    g = g_of_m(true_taus, 4.0, 0.1)
+    assert g[m - 1] <= np.min(g) * 1.05  # noisy τ̂ may pick either of the tie
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=50),
+       st.floats(0.01, 100.0), st.floats(0.01, 10.0))
+@settings(max_examples=80, deadline=None)
+def test_optimal_m_is_argmin_property(taus, sigma2, eps):
+    taus = np.sort(np.asarray(taus))
+    m = optimal_m(taus, sigma2, eps)
+    g = g_of_m(taus, sigma2, eps)
+    assert g[m - 1] <= np.min(g) + 1e-9

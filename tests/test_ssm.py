@@ -1,0 +1,90 @@
+"""Property/unit tests for the SSM substrate (chunked scans vs oracle)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.ssm import chunked_scan, reference_scan
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+@pytest.mark.parametrize("with_u", [False, True])
+def test_chunked_matches_reference(chunk, with_u):
+    rng = np.random.default_rng(0)
+    B, T, H, K, V = 2, 37, 3, 8, 5
+    q, k = _rand(rng, B, T, H, K), _rand(rng, B, T, H, K)
+    v = _rand(rng, B, T, H, V)
+    w = jnp.asarray(rng.uniform(0.5, 0.999, (B, T, H, K)), jnp.float32)
+    u = 0.1 * _rand(rng, H, K) if with_u else None
+    s0 = _rand(rng, B, H, K, V)
+    yr, sr = reference_scan(q, k, v, w, u=u, state0=s0)
+    yc, sc = chunked_scan(q, k, v, w, u=u, state0=s0, chunk=chunk)
+    np.testing.assert_allclose(yr, yc, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(sr, sc, rtol=3e-4, atol=3e-4)
+
+
+@given(T=st.integers(1, 40), chunk=st.sampled_from([3, 8, 32]),
+       seed=st.integers(0, 100), with_u=st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_chunked_matches_reference_property(T, chunk, seed, with_u):
+    rng = np.random.default_rng(seed)
+    B, H, K, V = 1, 2, 4, 4
+    q, k = _rand(rng, B, T, H, K), _rand(rng, B, T, H, K)
+    v = _rand(rng, B, T, H, V)
+    w = jnp.asarray(rng.uniform(0.6, 0.999, (B, T, H, K)), jnp.float32)
+    u = 0.1 * _rand(rng, H, K) if with_u else None
+    yr, sr = reference_scan(q, k, v, w, u=u)
+    yc, sc = chunked_scan(q, k, v, w, u=u, chunk=chunk)
+    np.testing.assert_allclose(yr, yc, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(sr, sc, rtol=5e-4, atol=5e-4)
+
+
+def test_state_carries_across_calls():
+    # running two halves with carried state == one full run
+    rng = np.random.default_rng(1)
+    B, T, H, K, V = 1, 24, 2, 4, 4
+    q, k = _rand(rng, B, T, H, K), _rand(rng, B, T, H, K)
+    v = _rand(rng, B, T, H, V)
+    w = jnp.asarray(rng.uniform(0.7, 0.99, (B, T, H, K)), jnp.float32)
+    y_full, s_full = chunked_scan(q, k, v, w, chunk=8)
+    y1, s1 = chunked_scan(q[:, :12], k[:, :12], v[:, :12], w[:, :12], chunk=8)
+    y2, s2 = chunked_scan(q[:, 12:], k[:, 12:], v[:, 12:], w[:, 12:],
+                          state0=s1, chunk=8)
+    np.testing.assert_allclose(y_full, jnp.concatenate([y1, y2], 1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s_full, s2, rtol=1e-4, atol=1e-4)
+
+
+def test_decay_one_is_cumulative_sum():
+    # w == 1: state is a plain running sum of k⊗v; y_t = q_t · Σ_{j<=t} kv_j
+    rng = np.random.default_rng(2)
+    B, T, H, K, V = 1, 10, 1, 3, 3
+    q, k = _rand(rng, B, T, H, K), _rand(rng, B, T, H, K)
+    v = _rand(rng, B, T, H, V)
+    w = jnp.ones((B, T, H, K), jnp.float32)
+    y, s = chunked_scan(q, k, v, w, chunk=4)
+    kv = np.einsum("bthk,bthv->bthkv", np.asarray(k), np.asarray(v))
+    cum = np.cumsum(kv, axis=1)
+    y_ref = np.einsum("bthk,bthkv->bthv", np.asarray(q), cum)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s, cum[:, -1], rtol=1e-4, atol=1e-4)
+
+
+def test_strong_decay_forgets_history():
+    rng = np.random.default_rng(3)
+    B, T, H, K, V = 1, 16, 1, 4, 4
+    q, k = _rand(rng, B, T, H, K), _rand(rng, B, T, H, K)
+    v = _rand(rng, B, T, H, V)
+    w = jnp.full((B, T, H, K), 1e-3, jnp.float32)
+    _, s = chunked_scan(q, k, v, w, chunk=8)
+    # state ≈ last kv only
+    last = np.einsum("bhk,bhv->bhkv", np.asarray(k[:, -1]),
+                     np.asarray(v[:, -1]))
+    np.testing.assert_allclose(s, last, rtol=1e-2, atol=1e-2)

@@ -1,0 +1,100 @@
+"""Tests for the computation-time models (Assumptions 2.2/3.1/5.1/5.4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (FixedTimes, PartialParticipationModel,
+                        UniversalModel, chi2_times, exponential_times,
+                        gamma_times, powers_figure3, powers_figure4,
+                        shifted_exponential_times, truncated_normal_times,
+                        uniform_times)
+
+
+def test_fixed_times_sorted_factories():
+    m = FixedTimes.sqrt_law(10)
+    assert np.all(np.diff(m.taus) > 0)
+    assert m.sample_time(3, np.random.default_rng(0)) == pytest.approx(2.0)
+
+
+def test_subexp_samplers_match_reported_means():
+    rng = np.random.default_rng(0)
+    models = [
+        exponential_times(0.5, 8),
+        truncated_normal_times(np.linspace(1, 5, 8), 0.5),
+        gamma_times(np.linspace(1, 5, 8), var=0.25),
+        uniform_times(np.linspace(2, 6, 8), 1.0),
+        chi2_times([4, 9, 16, 25]),
+        shifted_exponential_times(np.ones(4), np.ones(4) * 2.0),
+    ]
+    for model in models:
+        for i in range(model.n):
+            s = np.mean([model.sample_time(i, rng) for _ in range(4000)])
+            assert s == pytest.approx(model.mean_times()[i], rel=0.1), model.name
+
+
+def test_all_samples_nonnegative():
+    rng = np.random.default_rng(1)
+    model = truncated_normal_times(np.full(4, 0.1), 2.0)  # heavy truncation
+    samples = [model.sample_time(i, rng) for i in range(4) for _ in range(500)]
+    assert min(samples) >= 0.0
+
+
+def test_truncated_normal_mean_exceeds_mu_under_truncation():
+    model = truncated_normal_times([0.5], sigma=1.0)
+    assert model.mean_times()[0] > 0.5
+
+
+def test_universal_constant_power_N():
+    grid = np.arange(0.0, 100.0, 0.5)
+    powers = np.full((2, len(grid)), 2.0)  # 2 grads/sec
+    m = UniversalModel(grid, powers)
+    assert m.N(0, 0.0, 1.0) == 2
+    assert m.N(0, 0.0, 0.49) == 0
+    assert m.time_for_integral(0, 0.0, 1.0) == pytest.approx(0.5, abs=1e-6)
+    # extrapolation past grid end uses final power
+    assert m.N(0, 0.0, 200.0) == 400
+
+
+def test_universal_zero_power_never_finishes():
+    grid = np.arange(0.0, 10.0, 0.5)
+    powers = np.zeros((1, len(grid)))
+    m = UniversalModel(grid, powers)
+    assert m.time_for_integral(0, 0.0, 1.0) == np.inf
+
+
+@given(st.floats(0.1, 5.0), st.floats(0.0, 20.0), st.floats(0.1, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_universal_integral_additivity(v, t0, dt):
+    grid = np.arange(0.0, 50.0, 0.25)
+    m = UniversalModel(grid, np.full((1, len(grid)), v))
+    mid = t0 + dt / 2
+    total = m.integral(0, t0, t0 + dt)
+    assert total == pytest.approx(
+        m.integral(0, t0, mid) + m.integral(0, mid, t0 + dt), rel=1e-6,
+        abs=1e-9)
+    assert total == pytest.approx(v * dt, rel=1e-6, abs=1e-9)
+
+
+def test_figure3_powers_shape_and_bounds():
+    m = powers_figure3(n=50, seed=0, t_max=50.0)
+    assert m.n == 50
+    assert np.all(m.powers >= 0)
+    assert np.max(m.powers) <= 1.0 + 1.0  # sin + noise margin
+
+
+def test_figure4_powers_floor():
+    m = powers_figure4(n=50, seed=0, t_max=50.0)
+    assert np.all(m.powers >= 0.1 - 1e-12)
+
+
+def test_partial_participation_bound():
+    n, p = 20, 0.25
+    m = PartialParticipationModel(n=n, v=1.0, p=p, t_max=60.0)
+    # at every grid instant at most floor(p*n) powers are zero
+    zeros_per_t = np.sum(m.powers == 0.0, axis=0)
+    assert np.max(zeros_per_t) <= int(p * n)
+    # and all nonzero powers equal v
+    nz = m.powers[m.powers > 0]
+    assert np.allclose(nz, 1.0)
