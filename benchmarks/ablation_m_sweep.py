@@ -7,7 +7,7 @@ minimizer sits at the Prop 4.1 m*."""
 
 import numpy as np
 
-from repro.core import FixedTimes, optimal_m, run_m_sync_sgd
+from repro.core import STRATEGIES, FixedTimes, optimal_m, simulate
 from repro.core.complexity import iteration_complexity
 
 
@@ -22,7 +22,7 @@ def run(fast: bool = True):
     for m in sorted({1, 2, 4, 8, 16, 32, 64, m_star}):
         K = iteration_complexity(L, Delta, eps, sigma2, m)
         K_sim = min(K, 80)               # time is additive in K
-        t = run_m_sync_sgd(model, K=K_sim, m=m).total_time
+        t = simulate(STRATEGIES["msync"](m=m), model, K=K_sim).total_time
         total = t / K_sim * K
         theory = K * float(np.sort(model.taus)[m - 1])
         measured[m] = total

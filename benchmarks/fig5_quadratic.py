@@ -11,8 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (FixedTimes, quadratic_worst_case, run_async_sgd,
-                        run_m_sync_sgd, run_rennala_sgd, run_sync_sgd)
+from repro.core import STRATEGIES, FixedTimes, quadratic_worst_case, simulate
 
 
 def run(fast: bool = True):
@@ -20,21 +19,23 @@ def run(fast: bool = True):
     d = 200 if fast else 1000
     model = FixedTimes.sqrt_law(n)
     prob = quadratic_worst_case(d=d, p=0.1)
-    target = None
     K = 150 if fast else 600
 
     rows = []
     runs = {
-        "sync_sgd": lambda: run_sync_sgd(
-            model, K=K, problem=prob, gamma=1.0, record_every=10),
-        "msync_sgd_m10": lambda: run_m_sync_sgd(
-            model, K=K, m=10, problem=prob, gamma=1.0, record_every=10),
+        "sync_sgd": lambda: simulate(
+            STRATEGIES["sync"](), model, K=K, problem=prob, gamma=1.0,
+            record_every=10),
+        "msync_sgd_m10": lambda: simulate(
+            STRATEGIES["msync"](m=10), model, K=K, problem=prob, gamma=1.0,
+            record_every=10),
         # async tolerates delay ~ n only with a much smaller stepsize
-        "async_sgd": lambda: run_async_sgd(
-            model, K=K * 60, problem=prob, gamma=0.02, delay_adaptive=True,
-            record_every=1000),
-        "rennala_sgd_b10": lambda: run_rennala_sgd(
-            model, K=K, batch=10, problem=prob, gamma=1.0, record_every=10),
+        "async_sgd": lambda: simulate(
+            STRATEGIES["async"](delay_adaptive=True), model, K=K * 60,
+            problem=prob, gamma=0.02, record_every=1000),
+        "rennala_sgd_b10": lambda: simulate(
+            STRATEGIES["rennala"](batch=10), model, K=K, problem=prob,
+            gamma=1.0, record_every=10),
     }
     results = {}
     for name, fn in runs.items():

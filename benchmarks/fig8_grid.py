@@ -9,8 +9,7 @@ steepens; m-sync is robust to n."""
 
 import numpy as np
 
-from repro.core import (FixedTimes, run_async_sgd, run_m_sync_sgd,
-                        run_rennala_sgd, run_sync_sgd, optimal_m)
+from repro.core import STRATEGIES, FixedTimes, optimal_m, simulate
 
 
 def run(fast: bool = True):
@@ -24,11 +23,12 @@ def run(fast: bool = True):
             sigma2_eps = 100.0   # sigma^2/eps used for m*
             m_star = optimal_m(model.taus, sigma2_eps, 1.0)
             runs = {
-                "sync": run_sync_sgd(model, K=K),
-                f"msync_m{m_star}": run_m_sync_sgd(model, K=K, m=m_star),
-                "async": run_async_sgd(model, K=K * max(m_star, 1)),
-                f"rennala_b{m_star}": run_rennala_sgd(model, K=K,
-                                                      batch=m_star),
+                "sync": simulate("sync", model, K=K),
+                f"msync_m{m_star}": simulate(
+                    STRATEGIES["msync"](m=m_star), model, K=K),
+                "async": simulate("async", model, K=K * max(m_star, 1)),
+                f"rennala_b{m_star}": simulate(
+                    STRATEGIES["rennala"](batch=m_star), model, K=K),
             }
             for name, tr in runs.items():
                 per_grad = tr.total_time / max(tr.gradients_used, 1)

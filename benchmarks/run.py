@@ -12,9 +12,13 @@ Modules:
   sec6_async_needed  §6/I asynchronicity-needed example
   table_mstar        Propositions 4.1/4.2 m* selection table
   malenia_het        §6 heterogeneous (Malenia) constant-gap table
+  sec6_heterogeneous §6 worker-exclusive f_i: m-Sync plateaus, Malenia works
   secj_R_estimation  §J sub-exponential R of real step times
   ablation_m_sweep   measured T(m) vs Theorem 2.3 closed form + Prop 4.1 m*
   thm55_participation  Theorem 5.5 window under the rotating adversary
+
+Simulator-backed modules select methods through the composable Strategy
+API (``repro.core.strategies``): ``simulate(STRATEGIES[name](...), ...)``.
 """
 
 from __future__ import annotations

@@ -8,7 +8,7 @@ Malenia (harmonic per-worker batching) drives every block down."""
 
 import numpy as np
 
-from repro.core import FixedTimes, run_malenia_sgd, run_m_sync_sgd
+from repro.core import STRATEGIES, FixedTimes, simulate
 from repro.core.oracle import heterogeneous_quadratics
 
 
@@ -31,9 +31,9 @@ def run(fast: bool = True):
     rows.append(("sec6het/msync_m4of8/rel_err", err_msync,
                  "plateaus: ignored blocks never updated"))
 
-    tr = run_malenia_sgd(model, K=400 if fast else 2000, S=1.0,
-                         problem=prob, gamma=0.3, seed=0,
-                         grads_by_worker=grad_i, record_every=100)
+    tr = simulate(STRATEGIES["malenia"](S=1.0, grads_by_worker=grad_i),
+                  model, K=400 if fast else 2000, problem=prob, gamma=0.3,
+                  seed=0, record_every=100)
     rows.append(("sec6het/malenia/final_gradnorm_sq", tr.grad_norms[-1],
                  f"converges (msync rel_err={err_msync:.3f})"))
     rows.append(("sec6het/msync_fails_malenia_works",

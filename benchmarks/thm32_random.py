@@ -4,7 +4,7 @@ across the paper's distributions (§3, §D.1, §K.3)."""
 
 import numpy as np
 
-from repro.core import (exponential_times, gamma_times, run_m_sync_sgd,
+from repro.core import (STRATEGIES, exponential_times, gamma_times, simulate,
                         truncated_normal_times, uniform_times)
 
 
@@ -23,7 +23,8 @@ def run(fast: bool = True):
     for name, model in cases.items():
         for m in (4, 16, n):
             mean_iter = np.mean([
-                run_m_sync_sgd(model, K=K, m=m, seed=s).total_time / K
+                simulate(STRATEGIES["msync"](m=m), model, K=K,
+                         seed=s).total_time / K
                 for s in range(reps)])
             taus = np.sort(model.mean_times())
             bound = taus[m - 1] + model.R * np.log(max(n, 2))

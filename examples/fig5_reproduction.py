@@ -9,8 +9,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import (FixedTimes, quadratic_worst_case, run_async_sgd,
-                        run_m_sync_sgd, run_rennala_sgd, run_sync_sgd)
+from repro.core import STRATEGIES, FixedTimes, quadratic_worst_case, simulate
 
 
 def main():
@@ -25,17 +24,18 @@ def main():
     K = args.iters
 
     runs = {
-        "Sync SGD": run_sync_sgd(model, K=K, problem=prob, gamma=1.0,
-                                 record_every=20),
-        "m-Sync m=10": run_m_sync_sgd(model, K=K, m=10, problem=prob,
-                                      gamma=1.0, record_every=20),
+        "Sync SGD": simulate(STRATEGIES["sync"](), model, K=K, problem=prob,
+                             gamma=1.0, record_every=20),
+        "m-Sync m=10": simulate(STRATEGIES["msync"](m=10), model, K=K,
+                                problem=prob, gamma=1.0, record_every=20),
         # async needs a ~50x smaller stepsize to tolerate delay ~ n
         # (Koloskova et al. 2022); the paper grid-searched 2^-16..2^4
-        "Async SGD": run_async_sgd(model, K=K * 60, problem=prob,
-                                   gamma=0.02, delay_adaptive=True,
-                                   record_every=1000),
-        "Rennala b=10": run_rennala_sgd(model, K=K, batch=10, problem=prob,
-                                        gamma=1.0, record_every=20),
+        "Async SGD": simulate(STRATEGIES["async"](delay_adaptive=True),
+                              model, K=K * 60, problem=prob, gamma=0.02,
+                              record_every=1000),
+        "Rennala b=10": simulate(STRATEGIES["rennala"](batch=10), model,
+                                 K=K, problem=prob, gamma=1.0,
+                                 record_every=20),
     }
     print(f"{'method':14s} {'total_s':>10s} {'final_gn':>12s} "
           f"{'s/useful_grad':>14s}")

@@ -16,7 +16,7 @@ tracked the change.
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core import SyncMode, SyncPolicy
+from repro.core import STRATEGIES
 from repro.core.time_models import SubExponentialTimes
 from repro.data import SyntheticLM
 from repro.models import build_model
@@ -47,13 +47,13 @@ def main():
     cfg = reduced(get_config("nanogpt-paper"), d_model=96,
                   layers_per_stage=2, vocab=256)
     steps = 60
-    for name, policy in [
-            ("FULL (fixed m=n)", SyncPolicy(SyncMode.FULL)),
+    for name, strat in [
+            ("FULL (fixed m=n)", STRATEGIES["sync"]()),
             ("AUTO_M (Prop 4.1, online)",
-             SyncPolicy(SyncMode.AUTO_M, eps_target=2.0))]:
+             STRATEGIES["auto_m"](eps_target=2.0))]:
         tm = RegimeSwitchTimes(n, switch_at=30)
         tr = Trainer(build_model(cfg), sgd(lr=0.3), n_workers=n,
-                     sync_policy=policy, time_model=tm, seed=0)
+                     strategy=strat, time_model=tm, seed=0)
         # faster EWMA so τ̂ tracks the switch within a few steps
         if tr.straggler is not None:
             tr.straggler.estimator.beta = 0.5

@@ -7,7 +7,7 @@ heterogeneous worker times, and watch AUTO_M pick the paper's optimal m.
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core import FixedTimes, SyncMode, SyncPolicy
+from repro.core import STRATEGIES, FixedTimes
 from repro.core.complexity import t_optimal, t_sync
 from repro.data import SyntheticLM
 from repro.models import build_model
@@ -25,15 +25,15 @@ def main():
     times = FixedTimes.sqrt_law(8)
     print("worker mean times:", np.round(times.taus, 2))
 
-    policies = {
-        "Sync SGD (Alg 1)": SyncPolicy(SyncMode.FULL),
-        "m-Sync SGD m=4 (Alg 3)": SyncPolicy(SyncMode.M_SYNC, m=4),
-        "AUTO_M (Prop 4.1)": SyncPolicy(SyncMode.AUTO_M, eps_target=0.5),
+    strategies = {
+        "Sync SGD (Alg 1)": STRATEGIES["sync"](),
+        "m-Sync SGD m=4 (Alg 3)": STRATEGIES["msync"](m=4),
+        "auto_m (Prop 4.1)": STRATEGIES["auto_m"](eps_target=0.5),
     }
-    for name, policy in policies.items():
+    for name, strat in strategies.items():
         data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64,
                            batch_size=16, seed=0)
-        tr = Trainer(model, sgd(lr=0.3), n_workers=8, sync_policy=policy,
+        tr = Trainer(model, sgd(lr=0.3), n_workers=8, strategy=strat,
                      time_model=times, seed=0)
         hist = tr.run(tr.init_state(), iter(data), num_steps=40,
                       log_every=10)

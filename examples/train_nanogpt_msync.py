@@ -16,8 +16,7 @@ import dataclasses
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core import (SyncMode, SyncPolicy, uniform_times,
-                        quadratic_worst_case, run_async_sgd)
+from repro.core import STRATEGIES, uniform_times
 from repro.data import CharCorpus
 from repro.models import build_model
 from repro.optim import adamw
@@ -37,13 +36,13 @@ def main():
     n = args.workers
     times = uniform_times(np.ones(n), half_width=0.5)  # §K.4 scenario (i)
 
-    for name, policy in [
-            ("sync (Alg 1)", SyncPolicy(SyncMode.FULL)),
+    for name, strat in [
+            ("sync (Alg 1)", STRATEGIES["sync"]()),
             (f"m-sync m={max(n - 1, 1)}",
-             SyncPolicy(SyncMode.M_SYNC, m=max(n - 1, 1)))]:
+             STRATEGIES["msync"](m=max(n - 1, 1)))]:
         model = build_model(cfg)
         tr = Trainer(model, adamw(lr=3e-3), n_workers=n,
-                     sync_policy=policy, time_model=times, seed=1)
+                     strategy=strat, time_model=times, seed=1)
 
         def gen():
             s = 0

@@ -12,10 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import uniform_times
+from repro.core import STRATEGIES, simulate, uniform_times
 from repro.core.oracle import from_jax
-from repro.core.algorithms import (run_m_sync_sgd, run_rennala_sgd,
-                                   run_sync_sgd)
 from repro.data import gaussian_mixture
 
 
@@ -46,14 +44,15 @@ def main():
     K = 120
 
     for name, fn in [
-            ("Sync SGD", lambda: run_sync_sgd(
-                model, K=K, problem=prob, gamma=0.5, record_every=20)),
-            ("m-Sync m=48", lambda: run_m_sync_sgd(
-                model, K=K, m=48, problem=prob, gamma=0.5,
+            ("Sync SGD", lambda: simulate(
+                STRATEGIES["sync"](), model, K=K, problem=prob, gamma=0.5,
                 record_every=20)),
-            ("Rennala b=64", lambda: run_rennala_sgd(
-                model, K=K, batch=64, problem=prob, gamma=0.5,
-                record_every=20))]:
+            ("m-Sync m=48", lambda: simulate(
+                STRATEGIES["msync"](m=48), model, K=K, problem=prob,
+                gamma=0.5, record_every=20)),
+            ("Rennala b=64", lambda: simulate(
+                STRATEGIES["rennala"](batch=64), model, K=K, problem=prob,
+                gamma=0.5, record_every=20))]:
         tr = fn()
         print(f"{name:14s} f: {tr.values[0]:.3f} -> {tr.values[-1]:.3f} "
               f"in {tr.total_time:7.1f}s simulated")

@@ -2,15 +2,18 @@
 
 Submodules:
   time_models   — Assumptions 2.2 / 3.1 / 5.1 / 5.4
-  algorithms    — event-driven Alg 1/2/3, Rennala, Malenia simulators
+  strategies    — AggregationStrategy protocol, STRATEGIES registry, and
+                  the single vectorized simulate() event engine
+  algorithms    — deprecated run_* shims over strategies.simulate
   complexity    — closed forms (1),(2),(4),(7),(16); recursions (12),(13)
   selection     — Prop 4.1/4.2 m*, R estimator (§J), online τ̂/σ̂
   oracle        — eq. (27) worst-case quadratic; JAX-model bridge
-  sync_engine   — participation-masked aggregation on a real mesh
+  sync_engine   — participation-masked aggregation on a real mesh, driven
+                  by the same strategy objects as the simulator
 """
 
-from .algorithms import (Problem, Trace, run_async_sgd, run_m_sync_sgd,
-                         run_malenia_sgd, run_rennala_sgd,
+from .algorithms import (Problem, Trace, msync_wallclock, run_async_sgd,
+                         run_m_sync_sgd, run_malenia_sgd, run_rennala_sgd,
                          run_ringmaster_asgd, run_sync_sgd)
 from .complexity import (iteration_complexity, log_factor,
                          lower_bound_recursion, msync_upper_recursion,
@@ -19,6 +22,10 @@ from .complexity import (iteration_complexity, log_factor,
 from .oracle import quadratic_worst_case
 from .selection import (OnlineTauEstimator, estimate_R, g_of_m, h_of_m,
                         optimal_m, power_law_m)
+from .strategies import (STRATEGIES, AggregationStrategy, Arrival, Async,
+                         AutoM, DeadlineSync, Decision, Dropout, FullSync,
+                         Malenia, MSync, Rennala, Ringmaster,
+                         SimState, make_strategy, simulate)
 from .sync_engine import (SimulatedStraggler, SyncMode, SyncPolicy,
                           first_m_mask, masked_group_mean,
                           participation_example_weights)

@@ -1,7 +1,20 @@
-"""Event-driven simulators of the paper's algorithms.
+"""Deprecated per-method entry points for the event-driven simulators.
+
+.. deprecated::
+    The five hand-rolled event loops that used to live here (plus
+    Ringmaster ASGD) are now ~20-line strategy classes in
+    :mod:`repro.core.strategies`, all driven by the single vectorized
+    :func:`repro.core.strategies.simulate` engine. Prefer::
+
+        from repro.core import STRATEGIES, simulate
+        trace = simulate(STRATEGIES["msync"](m=10), model, K, ...)
+
+    The ``run_*`` functions below are kept as thin shims with their exact
+    historical signatures; each delegates to ``simulate`` with the matching
+    strategy, so a seeded shim call is bitwise-identical to the new API.
 
 Implements, with exact wall-clock accounting (bubbles, stale computations,
-discards), the five methods the paper analyses/compares:
+discards), the methods the paper analyses/compares:
 
 * :func:`run_sync_sgd` — Algorithm 1 (``m = n`` special case below).
 * :func:`run_m_sync_sgd` — Algorithm 3 (m-Synchronous SGD): aggregate one
@@ -13,11 +26,8 @@ discards), the five methods the paper analyses/compares:
   asynchronous batch accumulation at the current iterate; batch size ``B``.
 * :func:`run_malenia_sgd` — Malenia SGD (heterogeneous): per-worker batches
   ``B_i``, stop collecting when the harmonic mean of ``B_i`` reaches ``S``.
-
-The simulators share a single event engine: a priority queue of
-``(finish_time, worker, iterate_version)`` events driven by a
-:class:`repro.core.time_models.TimeModel` (Assumptions 2.2/3.1) or a
-:class:`~repro.core.time_models.UniversalModel` (Assumption 5.1).
+* :func:`run_ringmaster_asgd` — Ringmaster ASGD (Maranjyan, Tyurin &
+  Richtárik 2025b): Asynchronous SGD with delay-capped discards.
 
 Semantics follow the paper's accounting exactly: a worker that is busy with
 a stale gradient finishes it first (the Remark in §3: computations cannot be
@@ -26,13 +36,13 @@ stopped), then starts a gradient at the current iterate.
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import math
+import warnings
 from typing import Callable, Optional, Union
 
 import numpy as np
 
+from .strategies import (Async, Malenia, MSync, Problem, Rennala, Ringmaster,
+                         Trace, simulate)
 from .time_models import TimeModel, UniversalModel
 
 __all__ = [
@@ -43,85 +53,21 @@ __all__ = [
     "run_async_sgd",
     "run_rennala_sgd",
     "run_malenia_sgd",
+    "run_ringmaster_asgd",
     "msync_wallclock",
 ]
 
-
-@dataclasses.dataclass
-class Trace:
-    """Wall-clock trace of one optimization run."""
-
-    times: np.ndarray          # wall-clock seconds at each recorded event
-    values: np.ndarray         # f(x) at those times (nan if not recorded)
-    grad_norms: np.ndarray     # ||grad f(x)||^2 at those times
-    iterations: int            # server updates performed
-    total_time: float          # wall-clock at termination
-    gradients_used: int        # stochastic gradients aggregated into updates
-    gradients_computed: int    # total computed (incl. discarded)
-
-    @property
-    def discard_fraction(self) -> float:
-        if self.gradients_computed == 0:
-            return 0.0
-        return 1.0 - self.gradients_used / self.gradients_computed
+_Model = Union[TimeModel, UniversalModel]
 
 
-@dataclasses.dataclass
-class Problem:
-    """An optimization problem with a stochastic first-order oracle."""
-
-    x0: np.ndarray
-    f: Callable[[np.ndarray], float]
-    grad: Callable[[np.ndarray], np.ndarray]                    # exact (for eval)
-    stoch_grad: Callable[[np.ndarray, np.random.Generator], np.ndarray]
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use "
+                  f"simulate(STRATEGIES[{new!r}](...), model, K, ...) "
+                  "from repro.core.strategies",
+                  DeprecationWarning, stacklevel=3)
 
 
-class _Engine:
-    """Shared worker event engine."""
-
-    def __init__(self, model: Union[TimeModel, UniversalModel],
-                 rng: np.random.Generator) -> None:
-        self.model = model
-        self.rng = rng
-        self.n = model.n
-        self.heap: list = []        # (finish_time, seq, worker, version)
-        self._seq = 0
-        self.busy_until = np.zeros(self.n)
-        self.computed = 0
-
-    def start(self, worker: int, t_now: float, version: int) -> None:
-        """Worker begins one gradient at time ``t_now`` for ``version``."""
-        if isinstance(self.model, UniversalModel):
-            t_fin = self.model.time_for_integral(worker, t_now, 1.0)
-        else:
-            t_fin = t_now + self.model.sample_time(worker, self.rng)
-        self._seq += 1
-        self.busy_until[worker] = t_fin
-        heapq.heappush(self.heap, (t_fin, self._seq, worker, version))
-
-    def pop(self):
-        t, _, w, v = heapq.heappop(self.heap)
-        self.computed += 1
-        return t, w, v
-
-
-def _recorder(problem: Optional[Problem], record_every: int):
-    times, vals, gnorms = [], [], []
-
-    def record(t: float, x: Optional[np.ndarray], k: int) -> None:
-        if problem is None or x is None:
-            return
-        if k % record_every:
-            return
-        times.append(t)
-        vals.append(problem.f(x))
-        g = problem.grad(x)
-        gnorms.append(float(np.dot(g, g)))
-
-    return times, vals, gnorms, record
-
-
-def run_m_sync_sgd(model: Union[TimeModel, UniversalModel],
+def run_m_sync_sgd(model: _Model,
                    K: int,
                    m: int,
                    problem: Optional[Problem] = None,
@@ -129,70 +75,23 @@ def run_m_sync_sgd(model: Union[TimeModel, UniversalModel],
                    seed: int = 0,
                    record_every: int = 1,
                    tol_grad_sq: Optional[float] = None) -> Trace:
-    """Algorithm 3. With ``problem=None`` runs timing-only (no math).
-
-    Each iteration: every *idle* worker starts a gradient at ``x^k``; busy
-    workers finish their stale gradient (discarded) and then start at
-    ``x^k``. The iteration ends when ``m`` gradients for version ``k`` have
-    arrived; late version-``k`` gradients are discarded (Algorithm 3 line 6).
-    """
-    rng = np.random.default_rng(seed)
-    eng = _Engine(model, rng)
-    n = eng.n
-    if not (1 <= m <= n):
-        raise ValueError(f"m={m} out of range [1, {n}]")
-    x = None if problem is None else problem.x0.copy()
-    times, vals, gnorms, record = _recorder(problem, record_every)
-    record(0.0, x, 0)
-
-    t = 0.0
-    used = 0
-    # All workers idle at t=0.
-    idle = set(range(n))
-    for k in range(K):
-        # Idle workers start now; busy ones will start (for version k) when
-        # their stale computation finishes — we model that by re-queueing on
-        # pop (see below).
-        for w in list(idle):
-            eng.start(w, t, k)
-        idle.clear()
-        got = 0
-        acc = None if x is None else np.zeros_like(x)
-        while got < m:
-            t_fin, w, v = eng.pop()
-            t = t_fin
-            if v == k:
-                got += 1
-                used += 1
-                if x is not None:
-                    acc += problem.stoch_grad(x, rng)
-                idle.add(w)  # done for this iteration
-            else:
-                # stale gradient: discard, start a fresh one at x^k
-                eng.start(w, t_fin, k)
-        if x is not None:
-            x = x - gamma * (acc / m)
-        record(t, x, k + 1)
-        if tol_grad_sq is not None and x is not None:
-            g = problem.grad(x)
-            if float(np.dot(g, g)) <= tol_grad_sq:
-                K = k + 1
-                break
-        # workers still computing version-k gradients: their results will be
-        # discarded; they stay busy (Remark §3: cannot stop computations).
-    return Trace(np.array(times), np.array(vals), np.array(gnorms),
-                 iterations=K, total_time=t, gradients_used=used,
-                 gradients_computed=eng.computed)
+    """Algorithm 3 (shim). With ``problem=None`` runs timing-only."""
+    _deprecated("run_m_sync_sgd", "msync")
+    return simulate(MSync(m=m), model, K, problem=problem, gamma=gamma,
+                    seed=seed, record_every=record_every,
+                    tol_grad_sq=tol_grad_sq)
 
 
 def run_sync_sgd(model, K, problem=None, gamma=0.0, seed=0, record_every=1,
                  tol_grad_sq=None) -> Trace:
-    """Algorithm 1 = m-Synchronous SGD with m = n."""
-    return run_m_sync_sgd(model, K, model.n, problem, gamma, seed,
-                          record_every, tol_grad_sq)
+    """Algorithm 1 = m-Synchronous SGD with m = n (shim)."""
+    _deprecated("run_sync_sgd", "sync")
+    return simulate(MSync(m=model.n), model, K, problem=problem, gamma=gamma,
+                    seed=seed, record_every=record_every,
+                    tol_grad_sq=tol_grad_sq)
 
 
-def run_async_sgd(model: Union[TimeModel, UniversalModel],
+def run_async_sgd(model: _Model,
                   K: int,
                   problem: Optional[Problem] = None,
                   gamma: float = 0.0,
@@ -200,60 +99,19 @@ def run_async_sgd(model: Union[TimeModel, UniversalModel],
                   record_every: int = 10,
                   delay_adaptive: bool = False,
                   tol_grad_sq: Optional[float] = None) -> Trace:
-    """Algorithm 2 — update on every arrival.
+    """Algorithm 2 (shim) — update on every arrival.
 
     ``delay_adaptive`` uses the Koloskova et al. (2022)-style rule
     ``gamma_k = gamma / (1 + delay_k / n)`` which keeps the method stable
     under unbounded delays without per-run tuning.
     """
-    rng = np.random.default_rng(seed)
-    eng = _Engine(model, rng)
-    n = eng.n
-    x = None if problem is None else problem.x0.copy()
-    times, vals, gnorms, record = _recorder(problem, record_every)
-    record(0.0, x, 0)
-
-    # Worker w is computing at iterate version[w]; server iterate has
-    # version k. Each arrival applies one update.
-    snapshots = {}  # version -> x at that version (for stale gradients)
-    if x is not None:
-        snapshots[0] = x.copy()
-    version = [0] * n
-    t = 0.0
-    for w in range(n):
-        eng.start(w, 0.0, 0)
-    used = 0
-    last_needed = np.zeros(n, dtype=int)  # min version still being computed
-    for k in range(K):
-        t, w, v = eng.pop()
-        delay = k - v
-        g_step = gamma / (1.0 + delay / max(n, 1)) if delay_adaptive else gamma
-        if x is not None:
-            gx = problem.stoch_grad(snapshots[v], rng)
-            x = x - g_step * gx
-        used += 1
-        if x is not None:
-            snapshots[k + 1] = x.copy()
-        version[w] = k + 1
-        last_needed[w] = k + 1
-        eng.start(w, t, k + 1)
-        # prune snapshots no longer needed
-        if x is not None and (k % (4 * n) == 0):
-            low = int(min(version))
-            for vv in [key for key in snapshots if key < low]:
-                del snapshots[vv]
-        record(t, x, k + 1)
-        if tol_grad_sq is not None and x is not None and k % record_every == 0:
-            g = problem.grad(x)
-            if float(np.dot(g, g)) <= tol_grad_sq:
-                K = k + 1
-                break
-    return Trace(np.array(times), np.array(vals), np.array(gnorms),
-                 iterations=K, total_time=t, gradients_used=used,
-                 gradients_computed=eng.computed)
+    _deprecated("run_async_sgd", "async")
+    return simulate(Async(delay_adaptive=delay_adaptive), model, K,
+                    problem=problem, gamma=gamma, seed=seed,
+                    record_every=record_every, tol_grad_sq=tol_grad_sq)
 
 
-def run_rennala_sgd(model: Union[TimeModel, UniversalModel],
+def run_rennala_sgd(model: _Model,
                     K: int,
                     batch: int,
                     problem: Optional[Problem] = None,
@@ -261,48 +119,14 @@ def run_rennala_sgd(model: Union[TimeModel, UniversalModel],
                     seed: int = 0,
                     record_every: int = 1,
                     tol_grad_sq: Optional[float] = None) -> Trace:
-    """Rennala SGD: asynchronous accumulation of ``batch`` gradients at x^k.
-
-    Workers compute continuously; a gradient computed at a stale iterate is
-    discarded and the worker immediately restarts at the current iterate.
-    When ``batch`` current-iterate gradients have accumulated, the server
-    steps.
-    """
-    rng = np.random.default_rng(seed)
-    eng = _Engine(model, rng)
-    n = eng.n
-    x = None if problem is None else problem.x0.copy()
-    times, vals, gnorms, record = _recorder(problem, record_every)
-    record(0.0, x, 0)
-    t = 0.0
-    used = 0
-    for w in range(n):
-        eng.start(w, 0.0, 0)
-    for k in range(K):
-        got = 0
-        acc = None if x is None else np.zeros_like(x)
-        while got < batch:
-            t, w, v = eng.pop()
-            if v == k:
-                got += 1
-                used += 1
-                if x is not None:
-                    acc += problem.stoch_grad(x, rng)
-            eng.start(w, t, k if got < batch else k + 1)
-        if x is not None:
-            x = x - gamma * (acc / batch)
-        record(t, x, k + 1)
-        if tol_grad_sq is not None and x is not None:
-            g = problem.grad(x)
-            if float(np.dot(g, g)) <= tol_grad_sq:
-                K = k + 1
-                break
-    return Trace(np.array(times), np.array(vals), np.array(gnorms),
-                 iterations=K, total_time=t, gradients_used=used,
-                 gradients_computed=eng.computed)
+    """Rennala SGD (shim): asynchronous accumulation of ``batch`` at x^k."""
+    _deprecated("run_rennala_sgd", "rennala")
+    return simulate(Rennala(batch=batch), model, K, problem=problem,
+                    gamma=gamma, seed=seed, record_every=record_every,
+                    tol_grad_sq=tol_grad_sq)
 
 
-def run_malenia_sgd(model: Union[TimeModel, UniversalModel],
+def run_malenia_sgd(model: _Model,
                     K: int,
                     S: float,
                     problem: Optional[Problem] = None,
@@ -312,65 +136,14 @@ def run_malenia_sgd(model: Union[TimeModel, UniversalModel],
                     grads_by_worker: Optional[Callable[
                         [int, np.ndarray, np.random.Generator], np.ndarray]] = None,
                     tol_grad_sq: Optional[float] = None) -> Trace:
-    """Malenia SGD (heterogeneous §6): collect per-worker batches ``B_i`` at
-    the current iterate until ``(1/n * sum_i 1/B_i)^{-1} >= S`` with all
-    ``B_i >= 1``; update with ``g = 1/n sum_i mean_j g_ij``.
-
-    ``grads_by_worker(i, x, rng)`` supplies worker-``i``-specific gradients
-    (``∇f_i``); defaults to the homogeneous oracle.
-    """
-    rng = np.random.default_rng(seed)
-    eng = _Engine(model, rng)
-    n = eng.n
-    x = None if problem is None else problem.x0.copy()
-    times, vals, gnorms, record = _recorder(problem, record_every)
-    record(0.0, x, 0)
-    t = 0.0
-    used = 0
-    for w in range(n):
-        eng.start(w, 0.0, 0)
-    for k in range(K):
-        B = np.zeros(n, dtype=int)
-        acc = (None if x is None
-               else [np.zeros_like(x) for _ in range(n)])
-
-        def ready() -> bool:
-            if np.any(B == 0):
-                return False
-            return n / float(np.sum(1.0 / B)) >= S
-
-        while not ready():
-            t, w, v = eng.pop()
-            if v == k:
-                B[w] += 1
-                used += 1
-                if x is not None:
-                    if grads_by_worker is not None:
-                        acc[w] += grads_by_worker(w, x, rng)
-                    else:
-                        acc[w] += problem.stoch_grad(x, rng)
-            eng.start(w, t, k if not ready() else k + 1)
-        if x is not None:
-            g = sum(acc[i] / B[i] for i in range(n)) / n
-            x = x - gamma * g
-        record(t, x, k + 1)
-        if tol_grad_sq is not None and x is not None:
-            g = problem.grad(x)
-            if float(np.dot(g, g)) <= tol_grad_sq:
-                K = k + 1
-                break
-    return Trace(np.array(times), np.array(vals), np.array(gnorms),
-                 iterations=K, total_time=t, gradients_used=used,
-                 gradients_computed=eng.computed)
+    """Malenia SGD (shim, heterogeneous §6)."""
+    _deprecated("run_malenia_sgd", "malenia")
+    return simulate(Malenia(S=S, grads_by_worker=grads_by_worker), model, K,
+                    problem=problem, gamma=gamma, seed=seed,
+                    record_every=record_every, tol_grad_sq=tol_grad_sq)
 
 
-def msync_wallclock(model: Union[TimeModel, UniversalModel], K: int, m: int,
-                    seed: int = 0) -> float:
-    """Wall-clock seconds for K iterations of Algorithm 3 (timing only)."""
-    return run_m_sync_sgd(model, K, m, problem=None, seed=seed).total_time
-
-
-def run_ringmaster_asgd(model: Union[TimeModel, UniversalModel],
+def run_ringmaster_asgd(model: _Model,
                         K: int,
                         max_delay: int,
                         problem: Optional[Problem] = None,
@@ -378,50 +151,13 @@ def run_ringmaster_asgd(model: Union[TimeModel, UniversalModel],
                         seed: int = 0,
                         record_every: int = 10,
                         tol_grad_sq: Optional[float] = None) -> Trace:
-    """Ringmaster ASGD (Maranjyan, Tyurin & Richtárik 2025b) — the first
-    Asynchronous SGD with optimal time complexity: like Algorithm 2, but a
-    gradient whose delay exceeds ``max_delay`` is DISCARDED (and the worker
-    restarted at the current iterate) instead of applied. This bounds the
-    effective staleness, allowing a constant stepsize.
-    """
-    rng = np.random.default_rng(seed)
-    eng = _Engine(model, rng)
-    n = eng.n
-    x = None if problem is None else problem.x0.copy()
-    times, vals, gnorms, record = _recorder(problem, record_every)
-    record(0.0, x, 0)
-    snapshots = {}
-    if x is not None:
-        snapshots[0] = x.copy()
-    t = 0.0
-    used = 0
-    version = [0] * n
-    for w in range(n):
-        eng.start(w, 0.0, 0)
-    k = 0
-    while k < K:
-        t, w, v = eng.pop()
-        delay = k - v
-        if delay <= max_delay:
-            if x is not None:
-                gx = problem.stoch_grad(snapshots[v], rng)
-                x = x - gamma * gx
-                snapshots[k + 1] = x.copy()
-            used += 1
-            k += 1
-            if tol_grad_sq is not None and x is not None \
-                    and k % record_every == 0:
-                g = problem.grad(x)
-                if float(np.dot(g, g)) <= tol_grad_sq:
-                    K = k
-            record(t, x, k)
-        # in either case the worker restarts at the current iterate
-        version[w] = k
-        eng.start(w, t, k)
-        if x is not None and (k % (4 * n) == 0):
-            low = min(version)
-            for vv in [key for key in snapshots if key < low]:
-                del snapshots[vv]
-    return Trace(np.array(times), np.array(vals), np.array(gnorms),
-                 iterations=K, total_time=t, gradients_used=used,
-                 gradients_computed=eng.computed)
+    """Ringmaster ASGD (shim) — delay-capped Asynchronous SGD."""
+    _deprecated("run_ringmaster_asgd", "ringmaster")
+    return simulate(Ringmaster(max_delay=max_delay), model, K,
+                    problem=problem, gamma=gamma, seed=seed,
+                    record_every=record_every, tol_grad_sq=tol_grad_sq)
+
+
+def msync_wallclock(model: _Model, K: int, m: int, seed: int = 0) -> float:
+    """Wall-clock seconds for K iterations of Algorithm 3 (timing only)."""
+    return simulate(MSync(m=m), model, K, seed=seed).total_time

@@ -9,6 +9,15 @@ batch-``m`` gradient — while keeping the collective a plain all-reduce,
 which is exactly the practical advantage of synchronous methods the paper's
 §8 argues for.
 
+Participation is resolved by the SAME strategy objects that drive the
+event simulator (:mod:`repro.core.strategies`): any strategy with
+``mesh = True`` (``sync``, ``msync``, ``auto_m``, ``deadline``) exposes
+:meth:`~repro.core.strategies.AggregationStrategy.mesh_mask`, which maps
+one round's drawn compute times to ``(mask, m, step_seconds)``. The old
+:class:`SyncMode`/:class:`SyncPolicy` pair is kept as a deprecated shim
+that resolves to a strategy (``SyncPolicy.to_strategy()``) — see the
+migration table in DESIGN.md §5.
+
 Two equivalent implementations are provided (tested against each other):
 
 * :func:`participation_example_weights` — fold the mask into *per-example
@@ -21,9 +30,9 @@ Two equivalent implementations are provided (tested against each other):
 Participation sources:
 
 * :class:`SimulatedStraggler` — draws per-group compute times from any
-  :class:`~repro.core.time_models.TimeModel` and selects the first ``m``
-  finishers (Algorithm 3 line 4) or a wall-clock deadline.
-* ``AUTO_M`` — combines :class:`~repro.core.selection.OnlineTauEstimator`
+  :class:`~repro.core.time_models.TimeModel` (one vectorized
+  ``sample_times`` call per round) and hands them to the strategy.
+* ``auto_m`` — combines :class:`~repro.core.selection.OnlineTauEstimator`
   with Proposition 4.1 to adapt ``m`` during training.
 """
 
@@ -32,13 +41,15 @@ from __future__ import annotations
 import dataclasses
 import enum
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .selection import OnlineTauEstimator, optimal_m
+from .selection import OnlineTauEstimator
+from .strategies import (AggregationStrategy, AutoM, DeadlineSync, FullSync,
+                         MSync, first_m_mask)
 from .time_models import TimeModel
 
 __all__ = ["SyncMode", "SyncPolicy", "SimulatedStraggler",
@@ -47,18 +58,42 @@ __all__ = ["SyncMode", "SyncPolicy", "SimulatedStraggler",
 
 
 class SyncMode(str, enum.Enum):
-    FULL = "full"          # Algorithm 1 — wait for everyone
-    M_SYNC = "m_sync"      # Algorithm 3 — first m finishers
-    AUTO_M = "auto_m"      # Algorithm 3 + Prop 4.1 online m selection
-    DEADLINE = "deadline"  # aggregate whoever finished by the deadline
+    """Deprecated: use the strategy names in STRATEGIES instead."""
+
+    FULL = "full"          # -> STRATEGIES["sync"]
+    M_SYNC = "m_sync"      # -> STRATEGIES["msync"]
+    AUTO_M = "auto_m"      # -> STRATEGIES["auto_m"]
+    DEADLINE = "deadline"  # -> STRATEGIES["deadline"]
 
 
 @dataclasses.dataclass
 class SyncPolicy:
+    """Deprecated shim: a named bundle of strategy parameters.
+
+    Kept so existing call sites (``SyncPolicy(SyncMode.M_SYNC, m=4)``)
+    continue to work; internally everything resolves through
+    :meth:`to_strategy`.
+    """
+
     mode: SyncMode = SyncMode.FULL
     m: Optional[int] = None              # for M_SYNC
     deadline: Optional[float] = None     # seconds, for DEADLINE
     eps_target: float = 1e-2             # ε for AUTO_M (Prop 4.1)
+
+    def to_strategy(self) -> AggregationStrategy:
+        if self.mode == SyncMode.FULL:
+            return FullSync()
+        if self.mode == SyncMode.M_SYNC:
+            if self.m is None:
+                raise ValueError("M_SYNC requires m")
+            return MSync(m=self.m)
+        if self.mode == SyncMode.AUTO_M:
+            return AutoM(eps_target=self.eps_target)
+        if self.mode == SyncMode.DEADLINE:
+            if self.deadline is None:
+                raise ValueError("DEADLINE requires deadline")
+            return DeadlineSync(deadline=self.deadline)
+        raise ValueError(f"unknown mode {self.mode}")
 
     def resolve_m(self, n: int, estimator: Optional[OnlineTauEstimator]
                   ) -> int:
@@ -75,50 +110,45 @@ class SyncPolicy:
         raise ValueError(f"resolve_m undefined for {self.mode}")
 
 
-def first_m_mask(times: np.ndarray, m: int) -> np.ndarray:
-    """Boolean mask of the first ``m`` finishers (ties broken by index)."""
-    order = np.argsort(times, kind="stable")
-    mask = np.zeros(len(times), dtype=bool)
-    mask[order[:m]] = True
-    return mask
-
-
 @dataclasses.dataclass
 class SimulatedStraggler:
     """Per-step participation masks from a computation-time model.
 
-    Tracks simulated wall-clock like Algorithm 3: the step duration is the
-    m-th order statistic of the drawn times; drawn times also feed the
-    online τ estimator for AUTO_M.
+    Tracks simulated wall-clock like Algorithm 3: each round draws all
+    per-group compute times with one vectorized ``sample_times`` call and
+    lets the strategy pick ``(mask, m, step_seconds)``; drawn times also
+    feed the online τ estimator for the ``auto_m`` strategy.
+
+    ``policy`` may be an :class:`~repro.core.strategies.AggregationStrategy`
+    (any ``mesh = True`` strategy) or a legacy :class:`SyncPolicy`.
     """
 
     model: TimeModel
-    policy: SyncPolicy
+    policy: Union[AggregationStrategy, SyncPolicy]
     seed: int = 0
 
     def __post_init__(self) -> None:
         self.rng = np.random.default_rng(self.seed)
-        self.estimator = OnlineTauEstimator(self.model.n,
-                                            eps_target=self.policy.eps_target)
+        self.strategy = (self.policy.to_strategy()
+                         if isinstance(self.policy, SyncPolicy)
+                         else self.policy)
+        if not self.strategy.mesh:
+            raise ValueError(
+                f"strategy {self.strategy.name!r} cannot drive a "
+                "synchronous mesh round (mesh=False)")
+        self.strategy.bind(self.model.n)
+        eps = getattr(self.strategy, "eps_target", 1e-2)
+        self.estimator = OnlineTauEstimator(self.model.n, eps_target=eps)
         self.wallclock = 0.0
+        self._workers = np.arange(self.model.n)
 
     def step(self) -> Tuple[np.ndarray, int, float]:
         """Returns ``(mask, m, step_seconds)`` for one training step."""
-        n = self.model.n
-        times = np.array([self.model.sample_time(i, self.rng)
-                          for i in range(n)])
-        if self.policy.mode == SyncMode.DEADLINE:
-            mask = times <= self.policy.deadline
-            if not mask.any():                       # never stall forever
-                mask = first_m_mask(times, 1)
-            dur = min(float(self.policy.deadline), float(times[mask].max()))
-        else:
-            m = self.policy.resolve_m(n, self.estimator)
-            mask = first_m_mask(times, m)
-            dur = float(np.sort(times)[m - 1])
+        times = self.model.sample_times(self._workers, self.rng)
+        mask, m, dur = self.strategy.mesh_mask(times, self.estimator)
         self.estimator.update_times(times)
         self.wallclock += dur
-        return mask, int(mask.sum()), dur
+        return mask, int(m), float(dur)
 
 
 def participation_example_weights(mask: jnp.ndarray, n_groups: int,

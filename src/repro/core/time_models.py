@@ -17,7 +17,16 @@ Implements the paper's four worker-compute assumptions:
 All models expose a unified event-simulator interface::
 
     sample_time(i, rng) -> float          # seconds for ONE gradient started now
-    (Universal models instead expose ``finish_time(i, t_start, k=1)``.)
+    sample_times(workers, rng) -> array   # batched draw for many workers
+    (Universal models instead expose ``time_for_integral`` /
+    ``finish_times(workers, t_start)``.)
+
+``sample_times`` is the engine's hot path: models with closed-form or
+vectorizable distributions override it (``FixedTimes`` is a pure gather;
+the distribution factories below install NumPy-vectorized samplers), so a
+round that restarts many workers costs one vector op instead of ``n``
+Python calls. The default falls back to per-worker ``sample_time`` calls
+in worker order, which keeps the RNG stream identical to the scalar path.
 
 Every random model also reports its ``(tau_i, R)`` sub-exponential
 certificate where known, so the theory in :mod:`repro.core.complexity` can be
@@ -58,6 +67,17 @@ class TimeModel:
     def sample_time(self, i: int, rng: np.random.Generator) -> float:
         raise NotImplementedError
 
+    def sample_times(self, workers: Sequence[int],
+                     rng: np.random.Generator) -> np.ndarray:
+        """Batched per-gradient times for ``workers`` (engine hot path).
+
+        The fallback draws per worker in order, so it consumes the RNG
+        stream exactly like sequential ``sample_time`` calls; subclasses
+        override with a single vectorized draw where possible.
+        """
+        return np.array([self.sample_time(int(i), rng) for i in workers],
+                        dtype=float)
+
     def mean_times(self) -> np.ndarray:
         """``tau_i = E[time for worker i]``, sorted or not — as configured."""
         raise NotImplementedError
@@ -81,6 +101,10 @@ class FixedTimes(TimeModel):
 
     def sample_time(self, i: int, rng: np.random.Generator) -> float:
         return float(self.taus[i])
+
+    def sample_times(self, workers: Sequence[int],
+                     rng: np.random.Generator) -> np.ndarray:
+        return self.taus[np.asarray(workers, dtype=int)]
 
     def mean_times(self) -> np.ndarray:
         return self.taus
@@ -114,13 +138,17 @@ class SubExponentialTimes(TimeModel):
 
     ``sampler(i, rng)`` must return a nonnegative float with mean
     ``taus[i]``; ``R`` is the common sub-exponential parameter (may be a
-    conservative upper bound).
+    conservative upper bound). ``batch_sampler(workers, rng)``, when
+    provided, draws one vectorized sample per listed worker — the engine
+    prefers it for bulk restarts.
     """
 
     taus: np.ndarray
     sampler: Callable[[int, np.random.Generator], float]
     R: float
     name: str = "subexp"
+    batch_sampler: Optional[Callable[[np.ndarray, np.random.Generator],
+                                     np.ndarray]] = None
 
     def __post_init__(self) -> None:
         self.taus = np.asarray(self.taus, dtype=float)
@@ -129,6 +157,15 @@ class SubExponentialTimes(TimeModel):
     def sample_time(self, i: int, rng: np.random.Generator) -> float:
         t = float(self.sampler(i, rng))
         return max(t, 0.0)
+
+    def sample_times(self, workers: Sequence[int],
+                     rng: np.random.Generator) -> np.ndarray:
+        workers = np.asarray(workers, dtype=int)
+        if self.batch_sampler is None:
+            return np.array([max(float(self.sampler(int(i), rng)), 0.0)
+                             for i in workers])
+        return np.maximum(np.asarray(self.batch_sampler(workers, rng),
+                                     dtype=float), 0.0)
 
     def mean_times(self) -> np.ndarray:
         return self.taus
@@ -163,8 +200,18 @@ def truncated_normal_times(mus: Sequence[float], sigma: float
             if t >= 0:
                 return t
 
+    def batch_sampler(workers: np.ndarray,
+                      rng: np.random.Generator) -> np.ndarray:
+        out = rng.normal(mus[workers], sigma)
+        while True:
+            bad = out < 0
+            if not bad.any():
+                return out
+            out[bad] = rng.normal(mus[workers][bad], sigma)
+
     return SubExponentialTimes(taus, sampler, R=float(sigma),
-                               name=f"truncnorm(sigma={sigma})")
+                               name=f"truncnorm(sigma={sigma})",
+                               batch_sampler=batch_sampler)
 
 
 def exponential_times(lam: float, n: int) -> SubExponentialTimes:
@@ -174,8 +221,9 @@ def exponential_times(lam: float, n: int) -> SubExponentialTimes:
     def sampler(i: int, rng: np.random.Generator) -> float:
         return rng.exponential(1.0 / lam)
 
-    return SubExponentialTimes(taus, sampler, R=1.0 / lam,
-                               name=f"exp(lam={lam})")
+    return SubExponentialTimes(
+        taus, sampler, R=1.0 / lam, name=f"exp(lam={lam})",
+        batch_sampler=lambda w, rng: rng.exponential(1.0 / lam, size=len(w)))
 
 
 def shifted_exponential_times(mus: Sequence[float], lams: Sequence[float]
@@ -188,8 +236,9 @@ def shifted_exponential_times(mus: Sequence[float], lams: Sequence[float]
     def sampler(i: int, rng: np.random.Generator) -> float:
         return mus[i] + rng.exponential(1.0 / lams[i])
 
-    return SubExponentialTimes(taus, sampler, R=float(np.max(1.0 / lams)),
-                               name="shifted-exp")
+    return SubExponentialTimes(
+        taus, sampler, R=float(np.max(1.0 / lams)), name="shifted-exp",
+        batch_sampler=lambda w, rng: mus[w] + rng.exponential(1.0 / lams[w]))
 
 
 def gamma_times(means: Sequence[float], var: float) -> SubExponentialTimes:
@@ -205,7 +254,9 @@ def gamma_times(means: Sequence[float], var: float) -> SubExponentialTimes:
     def sampler(i: int, rng: np.random.Generator) -> float:
         return rng.gamma(ks[i], thetas[i])
 
-    return SubExponentialTimes(means, sampler, R=R, name="gamma")
+    return SubExponentialTimes(
+        means, sampler, R=R, name="gamma",
+        batch_sampler=lambda w, rng: rng.gamma(ks[w], thetas[w]))
 
 
 def uniform_times(means: Sequence[float], half_width: float
@@ -216,8 +267,10 @@ def uniform_times(means: Sequence[float], half_width: float
     def sampler(i: int, rng: np.random.Generator) -> float:
         return rng.uniform(means[i] - half_width, means[i] + half_width)
 
-    return SubExponentialTimes(means, sampler, R=float(half_width),
-                               name=f"uniform(w={half_width})")
+    return SubExponentialTimes(
+        means, sampler, R=float(half_width), name=f"uniform(w={half_width})",
+        batch_sampler=lambda w, rng: rng.uniform(means[w] - half_width,
+                                                 means[w] + half_width))
 
 
 def chi2_times(dofs: Sequence[int]) -> SubExponentialTimes:
@@ -229,7 +282,9 @@ def chi2_times(dofs: Sequence[int]) -> SubExponentialTimes:
 
     return SubExponentialTimes(dofs.copy(), sampler,
                                R=float(2.0 * np.sqrt(np.max(dofs))),
-                               name="chi2")
+                               name="chi2",
+                               batch_sampler=lambda w, rng:
+                                   rng.chisquare(dofs[w]))
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +351,12 @@ class UniversalModel:
             else:
                 lo = mid
         return hi
+
+    def finish_times(self, workers: Sequence[int], t0: float,
+                     target: float = 1.0) -> np.ndarray:
+        """Batched :meth:`time_for_integral` for the event engine."""
+        return np.array([self.time_for_integral(int(i), t0, target)
+                         for i in workers])
 
 
 @dataclasses.dataclass

@@ -163,9 +163,10 @@ def collective_bytes(hlo: str) -> CollectiveStats:
                     if f"{kind}-done(" in rhs:
                         continue  # counted at -start
                     args = re.search(rf"{kind}(?:-start)?\(([^)]*)\)", rhs)
-                    ops = [] if not args else [
-                        a.strip().split(" ")[-1]
-                        for a in args.group(1).split(",") if a.strip()]
+                    # operand types may carry layout braces (f32[8,4]{1,0}),
+                    # so pick out the %names rather than splitting on ","
+                    ops = [] if not args else re.findall(r"%[\w.\-]+",
+                                                         args.group(1))
                     b = sum(symbols.get(o, 0) for o in ops)
                     if b == 0:
                         # operand defined in another computation (rare) —
@@ -279,8 +280,9 @@ def hlo_cost(hlo: str) -> dict:
             op_list = []
             first_paren = re.search(r"[\w\-]+\(([^)]*)\)", rhs)
             if first_paren:
-                for a in first_paren.group(1).split(","):
-                    a = a.strip().split(" ")[-1]
+                # %names only: operand types may carry layout braces
+                # (f32[8,4]{1,0}) whose commas break naive splitting
+                for a in re.findall(r"%[\w.\-]+", first_paren.group(1)):
                     if a in sym:
                         op_list.append(sym[a][1])
             if "dynamic-update-slice" in rhs or \
@@ -301,8 +303,8 @@ def hlo_cost(hlo: str) -> dict:
                 k = 1
                 opm = _OPERANDS_RE.search(rhs)
                 if cd and opm:
-                    lhs_name = opm.group(1).split(",")[0].strip() \
-                        .split(" ")[-1]
+                    names = re.findall(r"%[\w.\-]+", opm.group(1))
+                    lhs_name = names[0] if names else ""
                     lhs_dims = sym.get(lhs_name, (None, 0))[0]
                     if lhs_dims is not None:
                         for d in cd.group(1).split(","):

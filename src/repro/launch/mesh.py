@@ -10,17 +10,29 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "POD_SHAPE", "MULTIPOD_SHAPE"]
+__all__ = ["make_mesh_auto", "make_production_mesh", "POD_SHAPE",
+           "MULTIPOD_SHAPE"]
 
 POD_SHAPE = (16, 16)                 # 256 chips / pod (v5e-256)
 MULTIPOD_SHAPE = (2, 16, 16)         # 2 pods = 512 chips
 
 
+def make_mesh_auto(shape, axes):
+    """``jax.make_mesh`` with Auto axis types, portable across jax versions.
+
+    We shard via in_shardings + constraints (GSPMD), not the
+    explicit-sharding API. ``AxisType`` only exists on jax >= 0.5; older
+    jax is Auto-only, so plain ``make_mesh`` is equivalent there.
+    """
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTIPOD_SHAPE if multi_pod else POD_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    # Auto axis types: we shard via in_shardings + constraints (GSPMD),
-    # not the explicit-sharding API.
-    from jax.sharding import AxisType
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)

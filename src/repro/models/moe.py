@@ -23,7 +23,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 
 from .layers import dense_init
 
@@ -202,7 +202,7 @@ def moe_apply(p: dict, x: jnp.ndarray, ctx, cfg,
                       up_spec if "expert_gate" in p else P(),
                       up_spec, P(model_axis, w_dp, None)),
             out_specs=(out_spec, P()),
-            check_vma=False,
+            check_rep=False,
         )(x, p["router"], p.get("expert_gate", jnp.zeros((), x.dtype)),
           p["expert_up"], p["expert_down"])
 

@@ -2,8 +2,10 @@
 
 Every step:
   1. the straggler model (Assumption 2.2/3.1 instance) draws per-worker
-     compute times and the :class:`~repro.core.sync_engine.SyncPolicy`
-     resolves the participation mask (FULL / M_SYNC / AUTO_M / DEADLINE);
+     compute times in one vectorized call and the aggregation strategy
+     (:mod:`repro.core.strategies`; ``sync`` / ``msync`` / ``auto_m`` /
+     ``deadline`` — or a legacy :class:`~repro.core.sync_engine.SyncPolicy`)
+     resolves the participation mask;
   2. the mask is folded into per-example loss weights
      (:func:`participation_example_weights`) so the ordinary data-parallel
      all-reduce computes exactly the Algorithm 3 estimator;
@@ -20,12 +22,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.strategies import (AggregationStrategy, make_strategy)
 from ..core.sync_engine import (SimulatedStraggler, SyncPolicy, SyncMode,
                                 participation_example_weights)
 from ..core.time_models import TimeModel
@@ -57,11 +60,18 @@ class Trainer:
     def __init__(self, model: Model, optimizer: Optimizer, *,
                  n_workers: int = 8,
                  sync_policy: Optional[SyncPolicy] = None,
+                 strategy: Optional[Union[str, AggregationStrategy]] = None,
                  time_model: Optional[TimeModel] = None,
                  ctx: Optional[ShardCtx] = None,
                  remat: bool = False, seed: int = 0,
                  impl: str = "ref", grad_delay: int = 0) -> None:
-        """``grad_delay=d > 0`` runs the SPMD-realizable form of
+        """``strategy`` is any mesh-capable aggregation strategy (an
+        :class:`~repro.core.strategies.AggregationStrategy` instance or a
+        ``STRATEGIES`` registry name); ``sync_policy`` is the deprecated
+        enum-based spelling of the same thing and must not be combined
+        with it.
+
+        ``grad_delay=d > 0`` runs the SPMD-realizable form of
         Asynchronous SGD (Algorithm 2): the gradient is computed at the
         parameters from ``d`` steps ago and applied to the current ones —
         the pipelined/delayed-gradient schedule a synchronous pod can
@@ -73,14 +83,22 @@ class Trainer:
         self.ctx = ctx or ShardCtx.null()
         self.remat = remat
         self.impl = impl
-        self.policy = sync_policy or SyncPolicy(SyncMode.FULL)
-        self.straggler = (SimulatedStraggler(time_model, self.policy,
+        if strategy is not None and sync_policy is not None:
+            raise ValueError("pass either strategy= or sync_policy=, "
+                             "not both")
+        if isinstance(strategy, str):
+            strategy = make_strategy(strategy)
+        if strategy is None:
+            strategy = (sync_policy or SyncPolicy(SyncMode.FULL)) \
+                .to_strategy()
+        self.strategy = strategy
+        self.straggler = (SimulatedStraggler(time_model, strategy,
                                              seed=seed)
                           if time_model is not None else None)
         self.grad_delay = grad_delay
-        if grad_delay and self.policy.mode != SyncMode.FULL:
+        if grad_delay and strategy.name != "sync":
             raise ValueError("grad_delay is an asynchronous-baseline mode; "
-                             "combine with SyncMode.FULL only")
+                             "combine with the full-sync strategy only")
         self._param_fifo: list = []
         self._seed = seed
         self._step_fn = None

@@ -1,0 +1,82 @@
+"""Shared test config: a deterministic stand-in for ``hypothesis``.
+
+Five test modules use a small subset of the hypothesis API (``@given`` /
+``@settings`` with ``integers`` / ``floats`` / ``booleans`` /
+``sampled_from`` / ``lists``), but the container bakes no ``hypothesis``
+wheel and nothing may be pip-installed. When the real package is present
+it is used untouched; otherwise this conftest registers a minimal
+replacement that runs each property test on ``max_examples`` examples
+drawn from a per-test fixed seed. Coverage is thinner than real
+hypothesis (no shrinking, no adversarial edge-case heuristics), but the
+properties are exercised across their whole domain and failures are
+reproducible.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+try:
+    import hypothesis  # noqa: F401  (real package wins)
+except ImportError:
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            elements.draw(rng)
+            for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+    def given(*gargs, **gkwargs):
+        def deco(fn):
+            def wrapper():
+                n_ex = getattr(wrapper, "_max_examples", 20)
+                seed = zlib.crc32(fn.__name__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n_ex):
+                    drawn = [s.draw(rng) for s in gargs]
+                    kw = {k: s.draw(rng) for k, s in gkwargs.items()}
+                    fn(*drawn, **kw)
+            # no functools.wraps: __wrapped__ would leak the property's
+            # signature and make pytest look for same-named fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__dict__.update(fn.__dict__)
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    for _f in (integers, floats, booleans, sampled_from, lists):
+        setattr(_st, _f.__name__, _f)
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

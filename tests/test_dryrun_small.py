@@ -26,8 +26,8 @@ def _run(arch: str, shape: str) -> dict:
         import repro.launch.dryrun as dr
         from repro.launch.hlo_analysis import collective_bytes, hlo_cost
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_auto
+        mesh = make_mesh_auto((2, 4), ("data", "model"))
         fn, args, shards, meta = dr.build_lowerable("{arch}", "{shape}",
                                                     mesh)
         with mesh:
@@ -37,8 +37,12 @@ def _run(arch: str, shape: str) -> dict:
             txt = compiled.as_text()
         cost = hlo_cost(txt)
         coll = collective_bytes(txt)
+        # jaxlib < 0.5 has no peak_memory_in_bytes; sum the components
+        peak = getattr(mem, "peak_memory_in_bytes", 0) or (
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes)
         print(json.dumps({{
-            "peak": mem.peak_memory_in_bytes,
+            "peak": peak,
             "flops": cost["flops"],
             "coll": coll.total_bytes,
             "model_flops": meta.get("model_flops", 0.0),

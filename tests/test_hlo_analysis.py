@@ -36,8 +36,8 @@ SCAN_PROG = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.hlo_analysis import hlo_cost, collective_bytes
     N, L = 128, 7
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((2, 4), ("data", "model"))
     shard = NamedSharding(mesh, P(None, "model"))
     def f(x, ws):
         def body(x, w):
@@ -55,6 +55,8 @@ SCAN_PROG = textwrap.dedent("""
     cost = hlo_cost(txt)
     coll = collective_bytes(txt)
     raw = c.cost_analysis()
+    if isinstance(raw, (list, tuple)):   # jax < 0.5 returns one per device
+        raw = raw[0]
     print(json.dumps({"flops": cost["flops"], "bytes": cost["bytes"],
                       "raw_flops": float(raw["flops"]),
                       "ar": coll.by_kind["all-reduce"],

@@ -40,8 +40,8 @@ CODE = textwrap.dedent("""
         batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
         base, _ = m.loss(params, batch)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_auto
+        mesh = make_mesh_auto((2, 4), ("data", "model"))
         ctx = ShardCtx(mesh=mesh, dp_axes=("data",), model_axis="model",
                        attn_mode=heads_mode)
         with mesh:

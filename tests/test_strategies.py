@@ -1,0 +1,294 @@
+"""Tests for the composable Strategy API (repro.core.strategies): legacy
+parity, registry round-trips, the vectorized fast path, the new deadline /
+dropout strategies, and the strategy-driven mesh participation."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (STRATEGIES, Dropout, FixedTimes, MSync,
+                        SimulatedStraggler, exponential_times, make_strategy,
+                        quadratic_worst_case, simulate, uniform_times)
+from repro.core.algorithms import (run_async_sgd, run_m_sync_sgd,
+                                   run_malenia_sgd, run_rennala_sgd,
+                                   run_ringmaster_asgd, run_sync_sgd)
+
+
+def _assert_traces_identical(a, b):
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.values, b.values)
+    np.testing.assert_array_equal(a.grad_norms, b.grad_norms)
+    assert a.total_time == b.total_time
+    assert a.iterations == b.iterations
+    assert a.gradients_used == b.gradients_used
+    assert a.gradients_computed == b.gradients_computed
+    assert a.discard_fraction == b.discard_fraction
+
+
+@pytest.fixture
+def prob():
+    return quadratic_worst_case(d=40, p=0.5)
+
+
+# ---------------------------------------------------------------- parity
+# Two layers of parity:
+# 1. each legacy run_* shim must produce a seeded trace bitwise-identical
+#    to the same strategy run through simulate() directly (routing);
+# 2. the trace must match GOLDEN values captured by executing the
+#    pre-refactor per-method event loops (git 208eda2,
+#    src/repro/core/algorithms.py) on the same seeds — this pins behavior
+#    to the REMOVED implementation, which the shim-vs-simulate comparison
+#    alone cannot do (both sides share the new engine).
+# Golden floats are exact except where the engine's gamma*(mult)
+# associativity differs from the legacy gamma/(...) by a few ulps.
+
+_GOLDEN = {
+    # total_time, iterations, used, computed, sum(times), sum(values),
+    # grad_norms[-1]
+    "msync": (240.0, 120, 240, 290, 3000.0,
+              14.220883731893153, 2.649644685689712e-4),
+    "sync_uniform": (72.99527930728364, 60, 360, 360, 2226.734633511154,
+                     67.03647806048981, 8.650569666167693e-3),
+    "async_tol": (470.0, 801, 801, 801, 9628.0,
+                  24.53928370849114, 9.538576727998534e-4),
+    "rennala_exp": (36.27058435285476, 50, 200, 349, 959.038663433911,
+                    46.936874623568976, 5.227684367408059e-3),
+    "malenia": (356.0, 25, 435, 483, 4565.0,
+                44.280622540763765, 2.9687374556976717e-2),
+    "ringmaster": (100.0, 200, 200, 201, 1050.0,
+                   14.098384511555627, 4.0897176741069125e-4),
+}
+
+
+def _assert_golden(tr, key):
+    tt, it, used, comp, tsum, vsum, gn = _GOLDEN[key]
+    assert tr.total_time == tt
+    assert tr.iterations == it
+    assert tr.gradients_used == used
+    assert tr.gradients_computed == comp
+    assert float(tr.times.sum()) == pytest.approx(tsum, rel=1e-12)
+    assert float(tr.values.sum()) == pytest.approx(vsum, rel=1e-9)
+    assert float(tr.grad_norms[-1]) == pytest.approx(gn, rel=1e-9)
+
+
+def test_parity_msync(prob):
+    model = FixedTimes(np.array([1.0, 2.0, 5.0, 100.0]))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = run_m_sync_sgd(model, K=120, m=2, problem=prob, gamma=0.4,
+                                seed=7, record_every=5)
+    new = simulate(STRATEGIES["msync"](m=2), model, K=120, problem=prob,
+                   gamma=0.4, seed=7, record_every=5)
+    _assert_traces_identical(legacy, new)
+    _assert_golden(new, "msync")
+
+
+def test_parity_sync(prob):
+    model = uniform_times(np.ones(6), 0.3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = run_sync_sgd(model, K=60, problem=prob, gamma=0.2, seed=1)
+    new = simulate(STRATEGIES["sync"](), model, K=60, problem=prob,
+                   gamma=0.2, seed=1)
+    _assert_traces_identical(legacy, new)
+    _assert_golden(new, "sync_uniform")
+
+
+def test_parity_async_with_tol(prob):
+    # covers the tolerance-exit cadence too (legacy checked the
+    # pre-increment iteration counter: tol_offset = 1)
+    model = FixedTimes(np.array([1.0, 2.0, 5.0, 100.0]))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = run_async_sgd(model, K=3000, problem=prob, gamma=0.05,
+                               delay_adaptive=True, seed=2,
+                               record_every=20, tol_grad_sq=1e-3)
+    new = simulate(STRATEGIES["async"](delay_adaptive=True), model, K=3000,
+                   problem=prob, gamma=0.05, seed=2, record_every=20,
+                   tol_grad_sq=1e-3)
+    _assert_traces_identical(legacy, new)
+    _assert_golden(new, "async_tol")
+
+
+def test_parity_rennala(prob):
+    model = exponential_times(lam=2.0, n=5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = run_rennala_sgd(model, K=50, batch=4, problem=prob,
+                                 gamma=0.3, seed=3)
+    new = simulate(STRATEGIES["rennala"](batch=4), model, K=50,
+                   problem=prob, gamma=0.3, seed=3)
+    _assert_traces_identical(legacy, new)
+    _assert_golden(new, "rennala_exp")
+
+
+def test_parity_malenia(prob):
+    model = FixedTimes(np.array([1.0, 4.0, 9.0]))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = run_malenia_sgd(model, K=25, S=2.0, problem=prob,
+                                 gamma=0.3, seed=4)
+    new = simulate(STRATEGIES["malenia"](S=2.0), model, K=25, problem=prob,
+                   gamma=0.3, seed=4)
+    _assert_traces_identical(legacy, new)
+    _assert_golden(new, "malenia")
+
+
+def test_parity_ringmaster(prob):
+    model = FixedTimes(np.array([1.0, 1.0, 60.0]))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = run_ringmaster_asgd(model, K=200, max_delay=4,
+                                     problem=prob, gamma=0.2, seed=5,
+                                     record_every=10)
+    new = simulate(STRATEGIES["ringmaster"](max_delay=4), model, K=200,
+                   problem=prob, gamma=0.2, seed=5, record_every=10)
+    _assert_traces_identical(legacy, new)
+    _assert_golden(new, "ringmaster")
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_round_trip_every_name():
+    model = FixedTimes(np.ones(4))
+    assert set(STRATEGIES) >= {"sync", "msync", "auto_m", "async",
+                               "rennala", "malenia", "ringmaster",
+                               "deadline", "dropout"}
+    for name in STRATEGIES:
+        strat = STRATEGIES[name]()         # default-constructible
+        tr = simulate(strat, model, K=3)
+        assert tr.iterations == 3, name
+        assert tr.total_time > 0, name
+
+
+def test_make_strategy_and_string_dispatch():
+    model = FixedTimes(np.array([1.0, 2.0]))
+    a = simulate(make_strategy("msync", m=1), model, K=5)
+    b = simulate("sync", model, K=5)
+    assert a.total_time == pytest.approx(5 * 1.0)
+    assert b.total_time == pytest.approx(5 * 2.0)
+    with pytest.raises(KeyError):
+        make_strategy("nope")
+
+
+# ------------------------------------------------------- vectorized engine
+def test_fast_path_matches_generic_loop_bitwise():
+    # Dropout(p=0) has identical semantics to its inner m-sync but is
+    # routed through the generic event loop, so it cross-checks the
+    # round-vectorized timing fast path exactly (deterministic model).
+    for taus, m in [(np.array([1.0, 2.0, 5.0, 100.0]), 2),
+                    (np.ones(5), 2), (np.ones(5), 5),
+                    (np.array([1.0, 1.0, 2.0, 2.0, 3.0, 6.0]), 3)]:
+        model = FixedTimes(taus)
+        fast = simulate(MSync(m=m), model, K=37)
+        slow = simulate(Dropout(MSync(m=m), p=0.0), model, K=37)
+        assert fast.total_time == slow.total_time
+        assert fast.gradients_used == slow.gradients_used
+        assert fast.gradients_computed == slow.gradients_computed
+
+
+def test_sample_times_matches_scalar_stream():
+    # default batched sampling must consume the RNG exactly like the
+    # scalar path (vectorized overrides only change the draw order)
+    model = uniform_times(np.arange(1.0, 5.0), 0.25)
+    a = model.sample_times(np.arange(4), np.random.default_rng(0))
+    r = np.random.default_rng(0)
+    b = np.array([model.sample_time(i, r) for i in range(4)])
+    np.testing.assert_allclose(a, b)
+    fixed = FixedTimes(np.array([3.0, 1.0, 2.0]))
+    np.testing.assert_array_equal(
+        fixed.sample_times([2, 0], np.random.default_rng(1)), [2.0, 3.0])
+
+
+# ------------------------------------------------------------- new methods
+def test_deadline_steps_at_deadline_with_arrivals():
+    model = FixedTimes(np.array([0.5, 0.9, 30.0]))
+    tr = simulate(STRATEGIES["deadline"](deadline=1.0), model, K=4)
+    # each round: workers 0,1 make the deadline, the server fires at 1.0s
+    assert tr.total_time == pytest.approx(4 * 1.0)
+    assert tr.gradients_used == 8
+
+
+def test_deadline_steps_early_when_everyone_finishes():
+    model = FixedTimes(np.array([1.0, 2.0, 3.0]))
+    tr = simulate(STRATEGIES["deadline"](deadline=100.0), model, K=5)
+    assert tr.total_time == pytest.approx(5 * 3.0)   # never waits to 100
+    assert tr.gradients_used == 15
+
+
+def test_deadline_never_stalls_without_arrivals():
+    model = FixedTimes(np.array([0.5, 0.7, 30.0]))
+    tr = simulate(STRATEGIES["deadline"](deadline=0.1), model, K=3)
+    # nobody makes the 0.1s deadline: step on the first arrival instead
+    assert tr.total_time == pytest.approx(3 * 0.5)
+    assert tr.gradients_used == 3
+
+
+def test_deadline_converges(prob):
+    model = uniform_times(np.ones(6), 0.4)
+    tr = simulate(STRATEGIES["deadline"](deadline=1.1), model, K=1500,
+                  problem=prob, gamma=0.4, seed=0, record_every=100)
+    assert tr.grad_norms[-1] < tr.grad_norms[0] * 1e-2
+
+
+def test_dropout_rotating_adversary_discards():
+    # 25% of workers dead at any instant, rotating each second: the
+    # wrapper must suppress some arrivals that plain m-sync would accept
+    model = FixedTimes(np.ones(8) * 0.9)
+    plain = simulate(MSync(m=4), model, K=20)
+    noisy = simulate(Dropout(MSync(m=4), p=0.25, period=1.0), model, K=20)
+    assert noisy.gradients_computed > plain.gradients_computed
+    assert noisy.total_time >= plain.total_time
+    assert noisy.gradients_used == plain.gradients_used == 20 * 4
+
+
+def test_strategy_param_validation():
+    with pytest.raises(ValueError):
+        Dropout(MSync(m=1), p=1.0)      # would never finish an iteration
+    with pytest.raises(ValueError):
+        Dropout(MSync(m=1), period=0.0)
+    with pytest.raises(ValueError):
+        STRATEGIES["deadline"](deadline=0.0)
+    with pytest.raises(ValueError):
+        simulate(MSync(m=0), FixedTimes(np.ones(3)), K=2)
+
+
+def test_dropout_composes_with_async(prob):
+    model = FixedTimes(np.ones(4))
+    tr = simulate(Dropout(STRATEGIES["async"](), p=0.3, period=2.0), model,
+                  K=600, problem=prob, gamma=0.2, seed=1, record_every=50)
+    assert tr.discard_fraction > 0          # adversary suppressed some
+    assert tr.grad_norms[-1] < tr.grad_norms[0] * 1e-1
+
+
+# ---------------------------------------------------------------- mesh path
+def test_strategy_drives_mesh_masks():
+    model = FixedTimes(np.array([1.0, 2.0, 3.0, 100.0]))
+    st = SimulatedStraggler(model, STRATEGIES["msync"](m=3))
+    mask, m, dur = st.step()
+    assert m == 3 and dur == pytest.approx(3.0)
+    np.testing.assert_array_equal(mask, [True, True, True, False])
+
+
+def test_deadline_strategy_on_mesh():
+    model = FixedTimes(np.array([0.5, 0.9, 30.0]))
+    st = SimulatedStraggler(model, STRATEGIES["deadline"](deadline=1.0))
+    mask, m, dur = st.step()
+    assert m == 2 and dur <= 1.0
+    assert mask[0] and mask[1] and not mask[2]
+
+
+def test_async_strategy_rejected_on_mesh():
+    model = FixedTimes(np.ones(4))
+    with pytest.raises(ValueError):
+        SimulatedStraggler(model, STRATEGIES["async"]())
+
+
+def test_legacy_syncpolicy_still_resolves():
+    from repro.core import SyncMode, SyncPolicy
+    strat = SyncPolicy(SyncMode.M_SYNC, m=2).to_strategy()
+    assert isinstance(strat, MSync)
+    model = FixedTimes(np.array([1.0, 5.0, 9.0]))
+    st = SimulatedStraggler(model, SyncPolicy(SyncMode.M_SYNC, m=2))
+    _, m, dur = st.step()
+    assert (m, dur) == (2, pytest.approx(5.0))

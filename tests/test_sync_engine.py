@@ -81,7 +81,7 @@ def test_masked_group_mean_shard_map():
     if jax.device_count() < 4:
         pytest.skip("needs 4 devices")
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    from jax.experimental.shard_map import shard_map
     from repro.core import masked_group_mean
     mesh = Mesh(np.array(jax.devices()[:4]), ("dp",))
     grads = jnp.arange(4.0)          # per-group scalar "gradient"
