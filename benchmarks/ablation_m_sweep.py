@@ -3,31 +3,40 @@
 For tau_i = sqrt(i), sweep m and compare the SIMULATED time of K(m)
 iterations (event simulator, exact accounting) against the closed form
 K(m) * tau_m = 16 max(LΔ/ε, σ²LΔ/(mε²)) * tau_m, and check the measured
-minimizer sits at the Prop 4.1 m*."""
+minimizer sits at the Prop 4.1 m*. The whole m grid runs as one
+``run_experiment`` sweep at a fixed K_sim = 80 rounds (time is additive
+in K, so each m's total is extrapolated to its own K(m) budget)."""
 
 import numpy as np
 
-from repro.core import STRATEGIES, FixedTimes, optimal_m, simulate
+from repro.core import optimal_m
 from repro.core.complexity import iteration_complexity
+from repro.exp import make_scenario, run_experiment
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, seeds: int = 8):
     n = 64
-    model = FixedTimes.sqrt_law(n)
+    model = make_scenario("fixed_sqrt", n)
     L = Delta = 1.0
     eps, sigma2 = 0.05, 2.0              # sigma^2/eps = 40
     m_star = optimal_m(model.taus, sigma2, eps)
+    ms = sorted({1, 2, 4, 8, 16, 32, 64, m_star})
+    Ks = {m: iteration_complexity(L, Delta, eps, sigma2, m) for m in ms}
+    # time is additive in K: simulate K_sim = 80 rounds (< K(m) for every
+    # m here) in one vectorized m-grid sweep and extrapolate to K(m)
+    res = run_experiment("msync", model, n=n, K=80, seeds=seeds,
+                         grid={"m": ms})
     rows = []
     measured = {}
-    for m in sorted({1, 2, 4, 8, 16, 32, 64, m_star}):
-        K = iteration_complexity(L, Delta, eps, sigma2, m)
-        K_sim = min(K, 80)               # time is additive in K
-        t = simulate(STRATEGIES["msync"](m=m), model, K=K_sim).total_time
-        total = t / K_sim * K
+    for r in res.rows:
+        m = r["params"]["m"]
+        K, K_sim = Ks[m], 80
+        total = r["total_time_mean"] / K_sim * K
         theory = K * float(np.sort(model.taus)[m - 1])
         measured[m] = total
         rows.append((f"msweep/m={m}/sim_seconds", total,
-                     f"theory={theory:.0f} K={K}"))
+                     f"±{r['total_time_std'] / K_sim * K:.4g} over "
+                     f"{r['seeds']} seeds theory={theory:.0f} K={K}"))
     best = min(measured, key=measured.get)
     rows.append(("msweep/measured_argmin_m", best,
                  f"prop41_mstar={m_star} "

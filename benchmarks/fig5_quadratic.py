@@ -1,56 +1,53 @@
-"""Figure 5 reproduction: quadratic optimization, n=1000 workers,
+"""Figure 5 reproduction: quadratic optimization, n workers,
 tau_i = sqrt(i), comparing Synchronous SGD, m-Synchronous SGD (m=10),
 Asynchronous SGD and Rennala SGD on simulated wall-clock time.
 
 Paper's claim: Sync SGD is slow (stragglers with large tau_i); m-Sync with
 m=10 matches the optimal asynchronous methods despite one gradient per
-worker per iteration.
+worker per iteration. Each method runs through ``run_experiment`` across
+seeds; the reported time-to-target is the cross-seed median (q50) of the
+wall-clock to reach a quarter of the initial gradient norm.
 """
 
 from __future__ import annotations
 
-import numpy as np
+from repro.core import quadratic_worst_case
+from repro.exp import run_experiment
 
-from repro.core import STRATEGIES, FixedTimes, quadratic_worst_case, simulate
 
-
-def run(fast: bool = True):
+def run(fast: bool = True, seeds: int = 8):
     n = 200 if fast else 1000
     d = 200 if fast else 1000
-    model = FixedTimes.sqrt_law(n)
     prob = quadratic_worst_case(d=d, p=0.1)
     K = 150 if fast else 600
 
-    rows = []
-    runs = {
-        "sync_sgd": lambda: simulate(
-            STRATEGIES["sync"](), model, K=K, problem=prob, gamma=1.0,
-            record_every=10),
-        "msync_sgd_m10": lambda: simulate(
-            STRATEGIES["msync"](m=10), model, K=K, problem=prob, gamma=1.0,
-            record_every=10),
+    cases = {
+        "sync_sgd": (("sync", {}), dict(K=K, gamma=1.0, record_every=10)),
+        "msync_sgd_m10": (("msync", {"m": 10}),
+                          dict(K=K, gamma=1.0, record_every=10)),
         # async tolerates delay ~ n only with a much smaller stepsize
-        "async_sgd": lambda: simulate(
-            STRATEGIES["async"](delay_adaptive=True), model, K=K * 60,
-            problem=prob, gamma=0.02, record_every=1000),
-        "rennala_sgd_b10": lambda: simulate(
-            STRATEGIES["rennala"](batch=10), model, K=K, problem=prob,
-            gamma=1.0, record_every=10),
+        "async_sgd": (("async", {"delay_adaptive": True}),
+                      dict(K=K * 60, gamma=0.02, record_every=1000)),
+        "rennala_sgd_b10": (("rennala", {"batch": 10}),
+                            dict(K=K, gamma=1.0, record_every=10)),
     }
-    results = {}
-    for name, fn in runs.items():
-        tr = fn()
-        results[name] = tr
-        # time to reach half the initial gradient norm (robust target)
-        g0 = tr.grad_norms[0]
-        hit = np.argmax(tr.grad_norms <= 0.25 * g0)
-        t_hit = tr.times[hit] if tr.grad_norms[hit] <= 0.25 * g0 \
-            else float("inf")
-        rows.append((f"fig5/{name}/time_to_quarter_gradnorm", t_hit,
-                     f"final_gn={tr.grad_norms[-1]:.3e}"))
+    rows = []
+    t50 = {}
+    for name, (spec, kw) in cases.items():
+        res = run_experiment(spec, "fixed_sqrt", n=n, K=kw["K"],
+                             seeds=seeds, problem=prob, gamma=kw["gamma"],
+                             record_every=kw["record_every"],
+                             target_frac=0.25)
+        r = res.rows[0]
+        t50[name] = r["time_to_target_q50"]
+        rows.append((f"fig5/{name}/time_to_quarter_gradnorm",
+                     r["time_to_target_q50"],
+                     f"q10={r['time_to_target_q10']:.4g} "
+                     f"q90={r['time_to_target_q90']:.4g} over "
+                     f"{r['seeds']} seeds "
+                     f"hit_rate={r['time_to_target_hit_rate']:.2f}"))
     # the paper's ordering: msync ≈ rennala ≈ async << sync
-    t = {k: rows[i][1] for i, k in enumerate(runs)}
-    ratio = t["sync_sgd"] / max(t["msync_sgd_m10"], 1e-9)
+    ratio = t50["sync_sgd"] / max(t50["msync_sgd_m10"], 1e-9)
     rows.append(("fig5/sync_over_msync_time_ratio", ratio,
                  "paper: >> 1 (sync pays stragglers)"))
     return rows

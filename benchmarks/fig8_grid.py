@@ -1,41 +1,46 @@
 """Figure 8/9 grid (K.1/K.2): method comparison across computation-time
 laws and noise levels, plus robustness to growing n.
 
-Timing-only simulation (gradient math factored out): per-useful-gradient
-wall time for each method, across tau in {sqrt(i), i, i^1.2} and n in
-{100, 1000}. The paper's qualitative claims checked downstream (tests):
-m-sync tracks the asynchronous methods; full sync degrades as the tau law
-steepens; m-sync is robust to n."""
+Timing-only simulation (gradient math factored out) through the
+experiment layer: per-useful-gradient wall time, mean ± std across
+seeds, for each method × tau law × n. Fixed-time scenarios are routed
+through the seed-batched vectorized engine. The paper's qualitative
+claims are checked downstream (tests): m-sync tracks the asynchronous
+methods; full sync degrades as the tau law steepens; m-sync is robust
+to n."""
 
-import numpy as np
+from repro.core import optimal_m
+from repro.exp import make_scenario, run_experiment
 
-from repro.core import STRATEGIES, FixedTimes, optimal_m, simulate
+LAWS = {"sqrt": ("fixed_sqrt", {}),
+        "linear": ("fixed_linear", {}),
+        "pow1.2": ("fixed_power", {"alpha": 1.2})}
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, seeds: int = 8):
     rows = []
     K = 60 if fast else 300
-    for law, fn in {"sqrt": FixedTimes.sqrt_law,
-                    "linear": FixedTimes.linear,
-                    "pow1.2": lambda n: FixedTimes.power_law(n, 1.2)}.items():
+    for law, (scen, scen_kw) in LAWS.items():
         for n in ((100,) if fast else (100, 1000)):
-            model = fn(n)
+            model = make_scenario(scen, n, **scen_kw)
             sigma2_eps = 100.0   # sigma^2/eps used for m*
             m_star = optimal_m(model.taus, sigma2_eps, 1.0)
-            runs = {
-                "sync": simulate("sync", model, K=K),
-                f"msync_m{m_star}": simulate(
-                    STRATEGIES["msync"](m=m_star), model, K=K),
-                "async": simulate("async", model, K=K * max(m_star, 1)),
-                f"rennala_b{m_star}": simulate(
-                    STRATEGIES["rennala"](batch=m_star), model, K=K),
+            cases = {
+                "sync": (("sync", {}), K),
+                f"msync_m{m_star}": (("msync", {"m": m_star}), K),
+                "async": (("async", {}), K * max(m_star, 1)),
+                f"rennala_b{m_star}": (("rennala", {"batch": m_star}), K),
             }
-            for name, tr in runs.items():
-                per_grad = tr.total_time / max(tr.gradients_used, 1)
+            for name, (spec, K_run) in cases.items():
+                res = run_experiment(spec, model, n=n, K=K_run, seeds=seeds)
+                r = res.rows[0]
                 rows.append(
                     (f"fig8/{law}/n={n}/{name}/s_per_useful_grad",
-                     per_grad,
-                     f"discard={tr.discard_fraction:.2f}"))
+                     r["s_per_useful_grad_mean"],
+                     f"±{r['s_per_useful_grad_std']:.4g} over "
+                     f"{r['seeds']} seeds "
+                     f"discard={r['discard_fraction_mean']:.2f} "
+                     f"backend={r['backend']}"))
     return rows
 
 

@@ -2,6 +2,10 @@
 
 Prints ``name,value,derived`` CSV. ``--slow`` runs the paper-scale
 versions (n=1000 etc.); default is the fast CI-friendly scale.
+``--seeds N`` overrides the seed-sweep width of the experiment-layer
+modules (those whose ``run()`` accepts a ``seeds`` kwarg); ``--json``
+additionally writes every row plus per-module timings as a JSON artifact
+(uploaded by CI).
 
 Modules:
   fig5_quadratic     Figure 5 (quadratic, n workers, tau=sqrt(i))
@@ -16,21 +20,25 @@ Modules:
   secj_R_estimation  §J sub-exponential R of real step times
   ablation_m_sweep   measured T(m) vs Theorem 2.3 closed form + Prop 4.1 m*
   thm55_participation  Theorem 5.5 window under the rotating adversary
+  simbatch_speed     simulate_batch >= 5x acceptance smoke (ISSUE 2)
 
-Simulator-backed modules select methods through the composable Strategy
-API (``repro.core.strategies``): ``simulate(STRATEGIES[name](...), ...)``.
+Simulator-backed modules run through the experiment layer
+(``repro.exp.run_experiment``): strategies × scenarios × seed sweeps via
+the batched engine, reporting mean ± std across seeds.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import sys
 import time
 
 from . import (ablation_m_sweep, fig5_quadratic, fig8_grid, malenia_het,
                sec6_async_needed, sec6_heterogeneous, sec53_gap,
-               secj_R_estimation, table_mstar, thm23_logfactor,
-               thm32_random, thm55_participation)
+               secj_R_estimation, simbatch_speed, table_mstar,
+               thm23_logfactor, thm32_random, thm55_participation)
 
 MODULES = [
     ("fig5_quadratic", fig5_quadratic),
@@ -45,6 +53,7 @@ MODULES = [
     ("ablation_m_sweep", ablation_m_sweep),
     ("thm55_participation", thm55_participation),
     ("sec6_heterogeneous", sec6_heterogeneous),
+    ("simbatch_speed", simbatch_speed),
 ]
 
 
@@ -53,23 +62,46 @@ def main() -> None:
     ap.add_argument("--slow", action="store_true",
                     help="paper-scale runs (n=1000, long horizons)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="seed-sweep width for experiment-layer modules")
+    ap.add_argument("--json", default=None,
+                    help="also write rows + timings to this JSON file")
     args = ap.parse_args()
 
     print("name,value,derived")
     failures = 0
+    all_rows = []
+    timings = {}
     for name, mod in MODULES:
         if args.only and args.only not in name:
             continue
+        kwargs = {"fast": not args.slow}
+        if args.seeds is not None \
+                and "seeds" in inspect.signature(mod.run).parameters:
+            kwargs["seeds"] = args.seeds
         t0 = time.time()
         try:
-            rows = mod.run(fast=not args.slow)
+            rows = mod.run(**kwargs)
             for rname, val, derived in rows:
                 print(f"{rname},{val},{derived}", flush=True)
-            print(f"_timing/{name},{time.time() - t0:.1f},seconds",
+                all_rows.append({"name": rname, "value": val,
+                                 "derived": derived})
+            timings[name] = time.time() - t0
+            print(f"_timing/{name},{timings[name]:.1f},seconds",
                   flush=True)
         except Exception as e:  # keep the harness going; report at exit
             failures += 1
             print(f"_error/{name},{type(e).__name__},{e}", flush=True)
+            all_rows.append({"name": f"_error/{name}",
+                             "value": type(e).__name__, "derived": str(e)})
+    if args.json:
+        from repro.exp.runner import sanitize_json
+        with open(args.json, "w") as fh:
+            json.dump(sanitize_json(
+                {"meta": {"slow": args.slow, "seeds": args.seeds,
+                          "only": args.only, "failures": failures},
+                 "timings_s": timings,
+                 "rows": all_rows}), fh, indent=2, default=str)
     if failures:
         sys.exit(1)
 

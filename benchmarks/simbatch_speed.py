@@ -1,0 +1,77 @@
+"""Acceptance smoke for the batched engine: ``simulate_batch`` must be
+≥ 5x faster than a serial per-seed ``simulate()`` loop for timing-only
+m-sync at n=1000 × 32 seeds (ISSUE 2), and must agree with the serial
+results.
+
+The serial baseline already runs the round-vectorized scalar fast path
+(~54x over the event loop), so this measures batching gain on top of it.
+The JAX backend (one jitted (seeds, rounds, workers) program) is timed
+after one warmup call — JIT compilation is a one-time cost, amortized
+across every sweep of the same shape. The NumPy vectorized backend's
+ratio is reported as context (exact RNG parity, smaller speedup)."""
+
+import time
+
+import numpy as np
+
+from repro.core import STRATEGIES, simulate, simulate_batch
+from repro.exp import make_scenario
+
+
+def run(fast: bool = True):
+    # no seeds override: n=1000 × 32 seeds is the acceptance shape
+    n, S = 1000, 32
+    K = 120 if fast else 600
+    m = 10
+    model = make_scenario("fixed_sqrt", n)
+
+    t0 = time.perf_counter()
+    serial = [simulate(STRATEGIES["msync"](m=m), model, K=K, seed=s)
+              for s in range(S)]
+    t_serial = time.perf_counter() - t0
+
+    spec = ("msync", {"m": m})
+    simulate_batch(spec, model, K=K, seeds=S, backend="jax")   # JIT warmup
+    t_jax = min(_timed(lambda: simulate_batch(spec, model, K=K, seeds=S,
+                                              backend="jax"))
+                for _ in range(3))
+    batch = simulate_batch(spec, model, K=K, seeds=S, backend="jax")
+    for s, tr in enumerate(serial):
+        bt = batch.traces[0][s]
+        assert np.isclose(bt.total_time, tr.total_time, rtol=1e-5), s
+        assert bt.gradients_computed == tr.gradients_computed, s
+        assert bt.gradients_used == tr.gradients_used, s
+
+    t_vec = min(_timed(lambda: simulate_batch(spec, model, K=K, seeds=S,
+                                              backend="vectorized"))
+                for _ in range(3))
+
+    speedup = t_serial / t_jax
+    rows = [
+        (f"simbatch/n={n}/S={S}/serial_s", t_serial, f"K={K} m={m}"),
+        (f"simbatch/n={n}/S={S}/jax_batch_s", t_jax,
+         f"speedup={speedup:.1f}x (warm)"),
+        (f"simbatch/n={n}/S={S}/numpy_batch_s", t_vec,
+         f"speedup={t_serial / t_vec:.1f}x (exact RNG parity)"),
+        ("simbatch/speedup_vs_serial", speedup,
+         "acceptance: >= 5x, results identical"),
+    ]
+    assert speedup >= 5.0, (
+        f"simulate_batch jax backend only {speedup:.1f}x over the serial "
+        f"per-seed loop (need >= 5x)")
+    return rows
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main():
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

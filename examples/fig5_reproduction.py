@@ -1,15 +1,17 @@
 """End-to-end reproduction of the paper's Figure 5: quadratic optimization
 with n workers, tau_i = sqrt(i) — Sync vs m-Sync vs Async vs Rennala,
-gradient norm against simulated wall-clock.
+gradient norm against simulated wall-clock, mean ± std across seeds
+through the experiment layer (``repro.exp.run_experiment``).
 
-    PYTHONPATH=src python examples/fig5_reproduction.py [--n 1000]
+    PYTHONPATH=src python examples/fig5_reproduction.py [--n 1000] [--seeds 8]
 """
 
 import argparse
 
 import numpy as np
 
-from repro.core import STRATEGIES, FixedTimes, quadratic_worst_case, simulate
+from repro.core import quadratic_worst_case
+from repro.exp import run_experiment
 
 
 def main():
@@ -17,33 +19,43 @@ def main():
     ap.add_argument("--n", type=int, default=300)
     ap.add_argument("--d", type=int, default=300)
     ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--seeds", type=int, default=4)
+    ap.add_argument("--json", default=None,
+                    help="write the summary rows as a JSON artifact")
     args = ap.parse_args()
 
-    model = FixedTimes.sqrt_law(args.n)
     prob = quadratic_worst_case(d=args.d, p=0.1)
     K = args.iters
 
-    runs = {
-        "Sync SGD": simulate(STRATEGIES["sync"](), model, K=K, problem=prob,
-                             gamma=1.0, record_every=20),
-        "m-Sync m=10": simulate(STRATEGIES["msync"](m=10), model, K=K,
-                                problem=prob, gamma=1.0, record_every=20),
+    cases = {
+        "Sync SGD": (("sync", {}), dict(K=K, gamma=1.0, record_every=20)),
+        "m-Sync m=10": (("msync", {"m": 10}),
+                        dict(K=K, gamma=1.0, record_every=20)),
         # async needs a ~50x smaller stepsize to tolerate delay ~ n
         # (Koloskova et al. 2022); the paper grid-searched 2^-16..2^4
-        "Async SGD": simulate(STRATEGIES["async"](delay_adaptive=True),
-                              model, K=K * 60, problem=prob, gamma=0.02,
-                              record_every=1000),
-        "Rennala b=10": simulate(STRATEGIES["rennala"](batch=10), model,
-                                 K=K, problem=prob, gamma=1.0,
-                                 record_every=20),
+        "Async SGD": (("async", {"delay_adaptive": True}),
+                      dict(K=K * 60, gamma=0.02, record_every=1000)),
+        "Rennala b=10": (("rennala", {"batch": 10}),
+                         dict(K=K, gamma=1.0, record_every=20)),
     }
-    print(f"{'method':14s} {'total_s':>10s} {'final_gn':>12s} "
-          f"{'s/useful_grad':>14s}")
-    for name, tr in runs.items():
-        print(f"{name:14s} {tr.total_time:10.1f} {tr.grad_norms[-1]:12.3e} "
-              f"{tr.total_time / max(tr.gradients_used, 1):14.4f}")
-    print("\npaper: m-Sync(10) ~ Async ~ Rennala; Sync pays the "
-          "sqrt(n) straggler every iteration.")
+    print(f"{'method':14s} {'total_s':>16s} {'final_gn':>12s} "
+          f"{'s/useful_grad':>20s}")
+    for name, (spec, kw) in cases.items():
+        res = run_experiment(
+            spec, "fixed_sqrt", n=args.n, K=kw["K"], seeds=args.seeds,
+            problem=prob, gamma=kw["gamma"],
+            record_every=kw["record_every"], target_frac=0.25,
+            json_path=args.json and f"{args.json}.{spec[0]}.json",
+            name=f"fig5/{name}")
+        r = res.rows[0]
+        gn_last = np.array([tr.grad_norms[-1]
+                            for tr in res.batch.traces[0]])
+        print(f"{name:14s} {r['total_time_mean']:9.1f} ±{r['total_time_std']:5.1f} "
+              f"{gn_last.mean():12.3e} "
+              f"{r['s_per_useful_grad_mean']:13.4f} "
+              f"±{r['s_per_useful_grad_std']:.4f}")
+    print(f"\n({args.seeds} seeds; paper: m-Sync(10) ~ Async ~ Rennala; "
+          f"Sync pays the sqrt(n) straggler every iteration.)")
 
 
 if __name__ == "__main__":

@@ -3,21 +3,29 @@
 CIFAR-10 is not downloadable in this offline container; we use a matched
 Gaussian-mixture stand-in (3072 -> 32 -> 10, logistic loss) — the paper's
 claim under test (method ordering under Unif(1-s,1+s) equal-mean times) is
-dataset-agnostic.
+dataset-agnostic. Runs through ``run_experiment`` (the "uniform"
+scenario) so each method reports mean ± std across seeds.
 
-    PYTHONPATH=src python examples/two_layer_nn_msync.py
+    PYTHONPATH=src python examples/two_layer_nn_msync.py [--seeds 3]
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import STRATEGIES, simulate, uniform_times
 from repro.core.oracle import from_jax
 from repro.data import gaussian_mixture
+from repro.exp import run_experiment
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--iters", type=int, default=120)
+    args = ap.parse_args()
+
     X, y = gaussian_mixture(num_classes=10, dim=3072, n=20000, seed=0)
 
     def init(key):
@@ -40,22 +48,23 @@ def main():
 
     prob = from_jax(loss_fn, init(jax.random.key(0)), batch_sampler)
     n = 64
-    model = uniform_times(np.ones(n), half_width=0.5)  # §K.4 scenario (i)
-    K = 120
+    K = args.iters
 
-    for name, fn in [
-            ("Sync SGD", lambda: simulate(
-                STRATEGIES["sync"](), model, K=K, problem=prob, gamma=0.5,
-                record_every=20)),
-            ("m-Sync m=48", lambda: simulate(
-                STRATEGIES["msync"](m=48), model, K=K, problem=prob,
-                gamma=0.5, record_every=20)),
-            ("Rennala b=64", lambda: simulate(
-                STRATEGIES["rennala"](batch=64), model, K=K, problem=prob,
-                gamma=0.5, record_every=20))]:
-        tr = fn()
-        print(f"{name:14s} f: {tr.values[0]:.3f} -> {tr.values[-1]:.3f} "
-              f"in {tr.total_time:7.1f}s simulated")
+    for name, spec, m_kw in [
+            ("Sync SGD", ("sync", {}), {}),
+            ("m-Sync m=48", ("msync", {"m": 48}), {}),
+            ("Rennala b=64", ("rennala", {"batch": 64}), {})]:
+        # §K.4 scenario (i): Unif(1-s, 1+s) equal-mean times
+        res = run_experiment(spec, "uniform", n=n, K=K, seeds=args.seeds,
+                             problem=prob, gamma=0.5, record_every=20,
+                             scenario_kwargs={"half_width": 0.5})
+        trs = res.batch.traces[0]
+        f0 = np.mean([tr.values[0] for tr in trs])
+        f1 = np.array([tr.values[-1] for tr in trs])
+        r = res.rows[0]
+        print(f"{name:14s} f: {f0:.3f} -> {f1.mean():.3f}±{f1.std():.3f} "
+              f"in {r['total_time_mean']:7.1f}±{r['total_time_std']:.1f}s "
+              f"simulated ({r['seeds']} seeds)")
     print("\npaper §K.4: with equal means, Sync SGD ~ Rennala (Cor 3.4).")
 
 

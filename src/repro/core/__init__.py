@@ -4,6 +4,10 @@ Submodules:
   time_models   — Assumptions 2.2 / 3.1 / 5.1 / 5.4
   strategies    — AggregationStrategy protocol, STRATEGIES registry, and
                   the single vectorized simulate() event engine
+  batch         — simulate_batch()/TraceBatch: multi-seed × grid sweeps
+                  (seed-batched NumPy fast path; serial fallback)
+  batch_jax     — JAX backend for simulate_batch (vmap over seeds,
+                  optional Pallas top-m kernel); JaxProblem oracle
   algorithms    — deprecated run_* shims over strategies.simulate
   complexity    — closed forms (1),(2),(4),(7),(16); recursions (12),(13)
   selection     — Prop 4.1/4.2 m*, R estimator (§J), online τ̂/σ̂
@@ -15,6 +19,7 @@ Submodules:
 from .algorithms import (Problem, Trace, msync_wallclock, run_async_sgd,
                          run_m_sync_sgd, run_malenia_sgd, run_rennala_sgd,
                          run_ringmaster_asgd, run_sync_sgd)
+from .batch import TraceBatch, simulate_batch
 from .complexity import (iteration_complexity, log_factor,
                          lower_bound_recursion, msync_upper_recursion,
                          t_malenia, t_optimal, t_rand_upper, t_sync,

@@ -1,0 +1,268 @@
+"""Batched multi-seed simulation: :func:`simulate_batch` and
+:class:`TraceBatch` — the vectorized sibling of :func:`repro.core.simulate`.
+
+The paper's claims are statements about *distributions* of wall-clock time
+(Assumptions 2.2/3.1/5.1/5.4), so every figure needs seed sweeps, not
+single runs. ``simulate_batch`` runs one strategy under one time model
+across ``S`` seeds and an optional parameter grid in a single call and
+returns a :class:`TraceBatch` with cross-seed summaries (mean ± std,
+time-to-target quantiles).
+
+Backends (``backend=``):
+
+* ``"serial"`` — per-(grid-point, seed) :func:`simulate` calls. Works for
+  every strategy/model/problem combination and is trace-for-trace
+  identical to scalar runs by construction.
+* ``"vectorized"`` — the seed-batched round-vectorized m-sync timing
+  engine (:func:`repro.core.strategies._fast_msync_timing_batch`): one
+  ``(seeds, rounds, workers)`` array program. Timing-only m-sync family
+  under non-universal models; exact per-seed RNG parity with the scalar
+  fast path.
+* ``"jax"`` — :mod:`repro.core.batch_jax`: ``jax.vmap`` over seeds with a
+  ``lax.scan`` round recursion (optionally using the Pallas top-m
+  partial-sort kernel for the per-round m-th order statistic).
+  Distribution-equal, not RNG-stream-equal; matches NumPy within float
+  tolerance for deterministic models/oracles.
+* ``"auto"`` (default) — ``vectorized`` when eligible, else ``serial``.
+
+Grid semantics: ``grid`` maps parameter names to value sequences and the
+cartesian product is swept. Keys in :data:`SIM_GRID_KEYS` override the
+corresponding :func:`simulate` argument; every other key is passed to the
+strategy factory (so ``{"m": [1, 4, 16]}`` sweeps ``MSync(m=...)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+from .strategies import (AggregationStrategy, MSync, STRATEGIES, Trace,
+                         _fast_msync_timing_batch, make_strategy, simulate)
+from .time_models import TimeModel, UniversalModel
+
+__all__ = ["TraceBatch", "simulate_batch", "SIM_GRID_KEYS"]
+
+# grid keys routed to simulate() itself; everything else goes to the
+# strategy factory
+SIM_GRID_KEYS = ("K", "gamma", "record_every", "tol_grad_sq")
+
+StrategySpec = Union[str, AggregationStrategy,
+                     "tuple[str, Dict[str, Any]]", Callable[..., Any]]
+
+
+@dataclasses.dataclass
+class TraceBatch:
+    """Traces of ``G`` grid points × ``S`` seeds plus cross-seed reducers.
+
+    ``traces[g][s]`` is the full per-run :class:`Trace` (timing-only
+    backends leave the recorded arrays empty, exactly like the scalar fast
+    path). Scalar per-run fields are exposed as ``(G, S)`` arrays through
+    :meth:`stat`, and :meth:`summary` produces the mean ± std rows the
+    benchmark layer reports.
+    """
+
+    strategy: str                      # display name of the swept strategy
+    grid: List[Dict[str, Any]]         # one kwargs dict per grid point
+    seeds: np.ndarray                  # (S,) seeds, in run order
+    traces: List[List[Trace]]          # [G][S]
+    backend: str                       # backend that actually ran
+
+    # ------------------------------------------------------------ arrays
+    def stat(self, field: str) -> np.ndarray:
+        """``(G, S)`` array of a scalar Trace field/property."""
+        return np.array([[getattr(tr, field) for tr in row]
+                         for row in self.traces], dtype=float)
+
+    @property
+    def total_time(self) -> np.ndarray:
+        return self.stat("total_time")
+
+    def time_to_target(self, frac: float = 0.25) -> np.ndarray:
+        """``(G, S)`` wall-clock time at which ``||∇f||²`` first drops to
+        ``frac`` × its initial recorded value (``inf`` if never; ``nan``
+        for timing-only traces)."""
+        out = np.full((len(self.traces), len(self.seeds)), np.nan)
+        for g, row in enumerate(self.traces):
+            for s, tr in enumerate(row):
+                if len(tr.grad_norms) == 0:
+                    continue
+                tgt = frac * tr.grad_norms[0]
+                hit = np.flatnonzero(tr.grad_norms <= tgt)
+                out[g, s] = tr.times[hit[0]] if hit.size else np.inf
+        return out
+
+    # ----------------------------------------------------------- summary
+    def summary(self, target_frac: Optional[float] = None,
+                quantiles: Sequence[float] = (0.1, 0.5, 0.9)) -> List[dict]:
+        """One dict per grid point: mean ± std across seeds of total time,
+        seconds per useful gradient and discard fraction, plus
+        time-to-target quantiles when ``target_frac`` is given."""
+        tt = self.total_time
+        used = np.maximum(self.stat("gradients_used"), 1.0)
+        per_grad = tt / used
+        disc = self.stat("discard_fraction")
+        rows = []
+        for g, params in enumerate(self.grid):
+            row = {
+                "strategy": self.strategy,
+                "params": dict(params),
+                "seeds": len(self.seeds),
+                "backend": self.backend,
+                "total_time_mean": float(tt[g].mean()),
+                "total_time_std": float(tt[g].std()),
+                "s_per_useful_grad_mean": float(per_grad[g].mean()),
+                "s_per_useful_grad_std": float(per_grad[g].std()),
+                "discard_fraction_mean": float(disc[g].mean()),
+                "iterations_mean": float(self.stat("iterations")[g].mean()),
+            }
+            if target_frac is not None:
+                t2t = self.time_to_target(target_frac)[g]
+                finite = t2t[np.isfinite(t2t)]
+                row["time_to_target_frac"] = target_frac
+                row["time_to_target_hit_rate"] = (
+                    float(np.mean(np.isfinite(t2t))) if len(t2t) else 0.0)
+                for q in quantiles:
+                    row[f"time_to_target_q{int(round(q * 100))}"] = (
+                        float(np.quantile(finite, q)) if finite.size
+                        else float("inf"))
+            rows.append(row)
+        return rows
+
+
+# ---------------------------------------------------------------------------
+# strategy specs and grids
+# ---------------------------------------------------------------------------
+
+def _as_spec(strategy: StrategySpec):
+    """Normalize to ``(display_name, factory(**kw), base_kwargs)``."""
+    if isinstance(strategy, str):
+        if strategy not in STRATEGIES:
+            make_strategy(strategy)    # raises KeyError with known names
+        return strategy, STRATEGIES[strategy], {}
+    if isinstance(strategy, tuple):
+        name, kw = strategy
+        make_strategy(name, **kw)      # validate early, with a clear error
+        return name, STRATEGIES[name], dict(kw)
+    if isinstance(strategy, AggregationStrategy):
+        inst = strategy
+
+        def factory(**kw):
+            if kw:
+                raise ValueError(
+                    "grid sweeps over strategy parameters need a re-"
+                    "instantiable spec — pass a name or (name, kwargs), "
+                    f"not the instance {inst.name!r}")
+            return inst
+        return inst.name, factory, {}
+    if callable(strategy):
+        return getattr(strategy, "name", getattr(strategy, "__name__",
+                                                 "strategy")), strategy, {}
+    raise TypeError(f"bad strategy spec: {strategy!r}")
+
+
+def _grid_points(grid: Optional[Mapping[str, Sequence]]) -> List[Dict]:
+    if not grid:
+        return [{}]
+    keys = list(grid)
+    return [dict(zip(keys, combo))
+            for combo in itertools.product(*(grid[k] for k in keys))]
+
+
+def _vectorized_eligible(strategy: AggregationStrategy, model,
+                         problem, K: int, tol_grad_sq) -> bool:
+    """Mirror of the scalar fast-path guard in :func:`simulate`."""
+    return (problem is None and tol_grad_sq is None
+            and not isinstance(model, UniversalModel)
+            and not strategy.uses_alarm
+            and isinstance(strategy, MSync)
+            and type(strategy).on_arrival is MSync.on_arrival
+            and type(strategy).on_step is AggregationStrategy.on_step
+            and K > 0)
+
+
+# ---------------------------------------------------------------------------
+# the batched driver
+# ---------------------------------------------------------------------------
+
+def simulate_batch(strategy: StrategySpec,
+                   model: Union[TimeModel, UniversalModel],
+                   K: int,
+                   problem=None,
+                   gamma: float = 0.0,
+                   seeds: Union[int, Sequence[int]] = 8,
+                   grid: Optional[Mapping[str, Sequence]] = None,
+                   record_every: int = 1,
+                   tol_grad_sq: Optional[float] = None,
+                   backend: str = "auto",
+                   use_pallas: bool = False) -> TraceBatch:
+    """Run ``strategy`` under ``model`` across ``seeds`` × ``grid``.
+
+    ``seeds`` is an int (→ ``range(seeds)``) or an explicit sequence.
+    With ``seeds=[s]`` and the default backends the result reproduces
+    scalar ``simulate(..., seed=s)`` trace-for-trace. See the module
+    docstring for backend and grid semantics.
+    """
+    seed_list = list(range(seeds)) if isinstance(seeds, (int, np.integer)) \
+        else [int(s) for s in seeds]
+    if not seed_list:
+        raise ValueError("need at least one seed")
+    if backend not in ("auto", "serial", "vectorized", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    name, factory, base_kw = _as_spec(strategy)
+    points = _grid_points(grid)
+
+    traces: List[List[Trace]] = []
+    used_backends = []
+    for pt in points:
+        sim_kw = {k: pt[k] for k in pt if k in SIM_GRID_KEYS}
+        strat_kw = {**base_kw, **{k: v for k, v in pt.items()
+                                  if k not in SIM_GRID_KEYS}}
+        K_pt = int(sim_kw.pop("K", K))
+        gamma_pt = float(sim_kw.pop("gamma", gamma))
+        re_pt = int(sim_kw.pop("record_every", record_every))
+        tol_pt = sim_kw.pop("tol_grad_sq", tol_grad_sq)
+
+        strat = factory(**strat_kw)
+        if isinstance(strat, str):     # factory returned a registry name
+            strat = make_strategy(strat)
+        strat.bind(model.n)
+
+        chosen = backend
+        if backend == "auto":
+            chosen = "vectorized" if _vectorized_eligible(
+                strat, model, problem, K_pt, tol_pt) else "serial"
+        if chosen == "vectorized":
+            if not _vectorized_eligible(strat, model, problem, K_pt,
+                                        tol_pt):
+                raise ValueError(
+                    "vectorized backend needs timing-only m-sync arrival "
+                    "semantics under a sampled (non-universal) time model")
+            rngs = [np.random.default_rng(s) for s in seed_list]
+            row = _fast_msync_timing_batch(strat._m, model, K_pt, rngs)
+        elif chosen == "jax":
+            if tol_pt is not None:
+                raise NotImplementedError(
+                    "tol_grad_sq early exit is not supported by the jax "
+                    "backend (fixed-length scan); use backend='serial'")
+            from .batch_jax import simulate_batch_jax
+            row = simulate_batch_jax(strat, model, K_pt, problem=problem,
+                                     gamma=gamma_pt, seeds=seed_list,
+                                     record_every=re_pt,
+                                     use_pallas=use_pallas)
+        else:
+            row = [simulate(factory(**strat_kw), model, K_pt,
+                            problem=problem, gamma=gamma_pt, seed=s,
+                            record_every=re_pt, tol_grad_sq=tol_pt)
+                   for s in seed_list]
+        traces.append(row)
+        used_backends.append(chosen)
+
+    # auto can pick different backends per grid point; report faithfully
+    backend_label = used_backends[0] if len(set(used_backends)) == 1 \
+        else "+".join(sorted(set(used_backends)))
+    return TraceBatch(strategy=name, grid=points,
+                      seeds=np.asarray(seed_list), traces=traces,
+                      backend=backend_label)

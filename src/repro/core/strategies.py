@@ -41,7 +41,7 @@ from typing import Callable, Dict, List, Optional, Union
 
 import numpy as np
 
-from .time_models import TimeModel, UniversalModel
+from .time_models import FixedTimes, TimeModel, UniversalModel
 
 __all__ = [
     "Trace",
@@ -82,6 +82,7 @@ class Trace:
     total_time: float          # wall-clock at termination
     gradients_used: int        # stochastic gradients aggregated into updates
     gradients_computed: int    # total computed (incl. discarded)
+    x_final: Optional[np.ndarray] = None   # last iterate (math runs only)
 
     @property
     def discard_fraction(self) -> float:
@@ -244,14 +245,22 @@ class MSync(AggregationStrategy):
     Accepted workers idle until the step; late version-``k`` results are
     discarded (the worker restarts at the new iterate: §3 Remark,
     computations cannot be stopped).
+
+    ``grads_by_worker(i, x, rng)`` supplies worker-specific oracles
+    (``∇f_i``) exactly as for :class:`Malenia` — used by the §6
+    heterogeneous experiment to show why m-sync with ``m < n`` plateaus
+    when worker ``i`` exclusively holds ``f_i``. Defaults to the problem's
+    homogeneous oracle.
     """
 
     name = "msync"
     mesh = True
     idle_on_accept = True
 
-    def __init__(self, m: Optional[int] = None) -> None:
+    def __init__(self, m: Optional[int] = None,
+                 grads_by_worker: Optional[Callable] = None) -> None:
         self.m = m
+        self.grads_by_worker = grads_by_worker
 
     def bind(self, n: int) -> None:
         self._m = n if self.m is None else self.m
@@ -262,6 +271,11 @@ class MSync(AggregationStrategy):
         if ev.version != st.k:
             return Decision.DISCARD
         return Decision.STEP if st.got + 1 == self._m else Decision.ACCEPT
+
+    def gradient(self, worker, x, rng, problem):
+        if self.grads_by_worker is not None:
+            return self.grads_by_worker(worker, x, rng)
+        return problem.stoch_grad(x, rng)
 
     def mesh_mask(self, times: np.ndarray, estimator=None):
         m = min(self._m, len(times))
@@ -626,6 +640,113 @@ def _fast_msync_timing(m: int, model: TimeModel, K: int,
                  gradients_computed=computed)
 
 
+def _row_lexsort(t_key: np.ndarray, seq_key: np.ndarray) -> np.ndarray:
+    """Per-row ``np.lexsort((seq, t))`` for ``(S, n)`` keys.
+
+    Two-pass stable-argsort lexsort, vectorized along axis 1 (row-wise C
+    sorts — ~5x faster than one flattened global lexsort with a row key):
+    pre-sort by the secondary key, then a stable sort by the primary key
+    preserves the secondary order within ties.
+    """
+    o1 = np.argsort(seq_key, axis=1, kind="stable")
+    o2 = np.argsort(np.take_along_axis(t_key, o1, axis=1), axis=1,
+                    kind="stable")
+    return np.take_along_axis(o1, o2, axis=1)
+
+
+def _fast_msync_timing_batch(m: int, model: TimeModel, K: int,
+                             rngs: List[np.random.Generator]) -> List[Trace]:
+    """Seed-batched :func:`_fast_msync_timing`: ``S`` independent runs as
+    one ``(seeds, workers)`` array program over ``K`` rounds.
+
+    State is carried in ``(S, n)`` matrices (finish times, tie-break seqs,
+    versions) and each round reduces to masked order statistics — the
+    ``(seeds, rounds, workers)`` batching of the scalar fast path. RNG
+    parity is exact per seed: deterministic models draw with no RNG at all
+    (a pure broadcast of ``tau``), and random models draw from each seed's
+    own generator in the scalar path's exact order (stale restarts in pop
+    order, then accepted restarts in worker order), so
+    ``batch[rngs=[default_rng(s)]]`` is bitwise-identical to the scalar
+    fast path at seed ``s`` for every model.
+    """
+    n = model.n
+    S = len(rngs)
+    taus = model.taus if type(model) is FixedTimes else None
+    all_w = np.arange(n)
+    ft = model.sample_times_seeds(all_w, rngs).astype(float)
+    fseq = np.broadcast_to(np.arange(1, n + 1, dtype=np.int64),
+                           (S, n)).copy()
+    ver = np.zeros((S, n), dtype=np.int64)
+    seq_c = np.full(S, n, dtype=np.int64)
+    computed = np.zeros(S, dtype=np.int64)
+    t = np.zeros(S)
+    srows = np.arange(S)[:, None]
+    INF = np.inf
+
+    for k in range(K):
+        stale = ver < k
+        if stale.any():
+            if taus is not None:
+                d = np.broadcast_to(taus, (S, n))
+            else:
+                d = np.zeros((S, n))
+                for s, rng in enumerate(rngs):
+                    sw = np.flatnonzero(stale[s])
+                    if sw.size:        # draw in the scalar path's pop order
+                        sp = sw[np.lexsort((fseq[s, sw], ft[s, sw]))]
+                        d[s, sp] = np.asarray(model.sample_times(sp, rng),
+                                              dtype=float)
+            e_time = ft + d
+            # restart seqs follow pop order: rank stale workers by (ft, seq)
+            pop_order = _row_lexsort(np.where(stale, ft, INF), fseq)
+            rank = np.empty((S, n), dtype=np.int64)
+            np.put_along_axis(rank, pop_order,
+                              np.broadcast_to(np.arange(n, dtype=np.int64),
+                                              (S, n)), axis=1)
+            rseq = seq_c[:, None] + 1 + rank
+            n_stale = stale.sum(axis=1)
+            cand_t = np.where(stale, e_time, ft)
+            cand_seq = np.where(stale, rseq, fseq)
+        else:
+            e_time = rseq = None
+            n_stale = 0
+            cand_t, cand_seq = ft, fseq
+        seq_c = seq_c + n_stale
+        order = _row_lexsort(cand_t, cand_seq)
+        end = order[:, m - 1:m]
+        T = np.take_along_axis(cand_t, end, axis=1)          # (S, 1)
+        end_seq = np.take_along_axis(cand_seq, end, axis=1)
+        if e_time is not None:
+            popped = stale & ((ft < T) | ((ft == T) & (fseq < end_seq)))
+            ft = np.where(popped, e_time, ft)
+            fseq = np.where(popped, rseq, fseq)
+            ver = np.where(popped, k, ver)
+            computed += popped.sum(axis=1)
+        computed += m
+        t = T[:, 0]
+        # bulk restart of the m accepted workers, in worker order
+        acc = np.zeros((S, n), dtype=bool)
+        acc[srows, order[:, :m]] = True
+        if taus is not None:
+            new_d = np.broadcast_to(taus, (S, n))
+        else:
+            new_d = np.zeros((S, n))
+            for s, rng in enumerate(rngs):
+                aw = np.flatnonzero(acc[s])
+                new_d[s, aw] = np.asarray(model.sample_times(aw, rng),
+                                          dtype=float)
+        acc_rank = np.cumsum(acc, axis=1) - 1
+        ft = np.where(acc, T + new_d, ft)
+        fseq = np.where(acc, seq_c[:, None] + 1 + acc_rank, fseq)
+        ver = np.where(acc, k + 1, ver)
+        seq_c = seq_c + m
+
+    e = np.array([])
+    return [Trace(e, e, e, iterations=K, total_time=float(t[s]),
+                  gradients_used=m * K, gradients_computed=int(computed[s]))
+            for s in range(S)]
+
+
 def simulate(strategy: Union[str, AggregationStrategy],
              model: Union[TimeModel, UniversalModel],
              K: int,
@@ -834,4 +955,4 @@ def simulate(strategy: Union[str, AggregationStrategy],
 
     return Trace(np.array(times), np.array(vals), np.array(gnorms),
                  iterations=k, total_time=t, gradients_used=used,
-                 gradients_computed=computed)
+                 gradients_computed=computed, x_final=x)

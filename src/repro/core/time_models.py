@@ -78,6 +78,19 @@ class TimeModel:
         return np.array([self.sample_time(int(i), rng) for i in workers],
                         dtype=float)
 
+    def sample_times_seeds(self, workers: Sequence[int],
+                           rngs: Sequence[np.random.Generator]) -> np.ndarray:
+        """Multi-seed batched draw: one ``(seeds, workers)`` matrix.
+
+        Row ``s`` consumes ``rngs[s]`` exactly as one :meth:`sample_times`
+        call would, so per-seed RNG-stream parity with scalar runs is
+        preserved (the seed-batched ``simulate_batch`` engine depends on
+        this). Models whose draws are RNG-free (:class:`FixedTimes`)
+        override with a pure broadcast.
+        """
+        return np.stack([np.asarray(self.sample_times(workers, rng),
+                                    dtype=float) for rng in rngs])
+
     def mean_times(self) -> np.ndarray:
         """``tau_i = E[time for worker i]``, sorted or not — as configured."""
         raise NotImplementedError
@@ -105,6 +118,12 @@ class FixedTimes(TimeModel):
     def sample_times(self, workers: Sequence[int],
                      rng: np.random.Generator) -> np.ndarray:
         return self.taus[np.asarray(workers, dtype=int)]
+
+    def sample_times_seeds(self, workers: Sequence[int],
+                           rngs: Sequence[np.random.Generator]) -> np.ndarray:
+        # deterministic: no RNG consumed, one broadcast for all seeds
+        return np.broadcast_to(self.taus[np.asarray(workers, dtype=int)],
+                               (len(rngs), len(workers))).copy()
 
     def mean_times(self) -> np.ndarray:
         return self.taus
@@ -140,7 +159,10 @@ class SubExponentialTimes(TimeModel):
     ``taus[i]``; ``R`` is the common sub-exponential parameter (may be a
     conservative upper bound). ``batch_sampler(workers, rng)``, when
     provided, draws one vectorized sample per listed worker — the engine
-    prefers it for bulk restarts.
+    prefers it for bulk restarts. ``jax_sampler(key) -> (n,)``, when
+    provided, draws one full round of per-worker times with ``jax.random``
+    — the ``simulate_batch`` JAX backend needs it (distribution-equal to
+    the NumPy samplers, not stream-equal).
     """
 
     taus: np.ndarray
@@ -149,6 +171,7 @@ class SubExponentialTimes(TimeModel):
     name: str = "subexp"
     batch_sampler: Optional[Callable[[np.ndarray, np.random.Generator],
                                      np.ndarray]] = None
+    jax_sampler: Optional[Callable] = None
 
     def __post_init__(self) -> None:
         self.taus = np.asarray(self.taus, dtype=float)
@@ -221,9 +244,14 @@ def exponential_times(lam: float, n: int) -> SubExponentialTimes:
     def sampler(i: int, rng: np.random.Generator) -> float:
         return rng.exponential(1.0 / lam)
 
+    def jax_sampler(key):
+        import jax
+        return jax.random.exponential(key, (n,)) / lam
+
     return SubExponentialTimes(
         taus, sampler, R=1.0 / lam, name=f"exp(lam={lam})",
-        batch_sampler=lambda w, rng: rng.exponential(1.0 / lam, size=len(w)))
+        batch_sampler=lambda w, rng: rng.exponential(1.0 / lam, size=len(w)),
+        jax_sampler=jax_sampler)
 
 
 def shifted_exponential_times(mus: Sequence[float], lams: Sequence[float]
@@ -236,9 +264,14 @@ def shifted_exponential_times(mus: Sequence[float], lams: Sequence[float]
     def sampler(i: int, rng: np.random.Generator) -> float:
         return mus[i] + rng.exponential(1.0 / lams[i])
 
+    def jax_sampler(key):
+        import jax
+        return mus + jax.random.exponential(key, mus.shape) / lams
+
     return SubExponentialTimes(
         taus, sampler, R=float(np.max(1.0 / lams)), name="shifted-exp",
-        batch_sampler=lambda w, rng: mus[w] + rng.exponential(1.0 / lams[w]))
+        batch_sampler=lambda w, rng: mus[w] + rng.exponential(1.0 / lams[w]),
+        jax_sampler=jax_sampler)
 
 
 def gamma_times(means: Sequence[float], var: float) -> SubExponentialTimes:
@@ -254,9 +287,14 @@ def gamma_times(means: Sequence[float], var: float) -> SubExponentialTimes:
     def sampler(i: int, rng: np.random.Generator) -> float:
         return rng.gamma(ks[i], thetas[i])
 
+    def jax_sampler(key):
+        import jax
+        return jax.random.gamma(key, ks) * thetas
+
     return SubExponentialTimes(
         means, sampler, R=R, name="gamma",
-        batch_sampler=lambda w, rng: rng.gamma(ks[w], thetas[w]))
+        batch_sampler=lambda w, rng: rng.gamma(ks[w], thetas[w]),
+        jax_sampler=jax_sampler)
 
 
 def uniform_times(means: Sequence[float], half_width: float
@@ -267,10 +305,20 @@ def uniform_times(means: Sequence[float], half_width: float
     def sampler(i: int, rng: np.random.Generator) -> float:
         return rng.uniform(means[i] - half_width, means[i] + half_width)
 
+    def jax_sampler(key):
+        import jax
+        import jax.numpy as jnp
+        u = jax.random.uniform(key, means.shape,
+                               minval=-half_width, maxval=half_width)
+        # same clamp the engine applies to every NumPy draw via
+        # sample_time / sample_times (times are nonnegative a.s.)
+        return jnp.maximum(means + u, 0.0)
+
     return SubExponentialTimes(
         means, sampler, R=float(half_width), name=f"uniform(w={half_width})",
         batch_sampler=lambda w, rng: rng.uniform(means[w] - half_width,
-                                                 means[w] + half_width))
+                                                 means[w] + half_width),
+        jax_sampler=jax_sampler)
 
 
 def chi2_times(dofs: Sequence[int]) -> SubExponentialTimes:

@@ -1,0 +1,19 @@
+"""Experiment layer: named scenarios × strategies × seed sweeps.
+
+``repro.exp`` sits on top of the core Strategy API and the batched
+simulator (DESIGN.md):
+
+* :data:`~repro.exp.scenarios.SCENARIOS` — string-keyed registry of the
+  paper's compute regimes (fixed sqrt/linear/power-law times, each
+  sub-exponential family, universal and partial-participation powers),
+  mirroring :data:`repro.core.strategies.STRATEGIES`.
+* :func:`~repro.exp.runner.run_experiment` — one call for "run this
+  method under this scenario across S seeds and a parameter grid",
+  returning mean ± std / time-to-target summaries with JSON output.
+"""
+
+from .runner import ExperimentResult, csv_rows, run_experiment
+from .scenarios import SCENARIOS, make_scenario, register_scenario
+
+__all__ = ["SCENARIOS", "make_scenario", "register_scenario",
+           "run_experiment", "ExperimentResult", "csv_rows"]

@@ -1,0 +1,137 @@
+"""``run_experiment`` — the one driver every figure/benchmark goes through.
+
+Couples a strategy spec, a named scenario (or a model instance), a seed
+sweep and an optional parameter grid into a single
+:func:`repro.core.simulate_batch` call, then reduces the
+:class:`~repro.core.batch.TraceBatch` into summary rows (mean ± std
+across seeds, time-to-target quantiles) with JSON output for CI
+artifacts. :func:`csv_rows` renders a summary as plain harness-style
+``(name, value, derived)`` triples for callers that don't need custom
+derived columns (the in-tree benchmarks hand-format richer ones).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.batch import TraceBatch, simulate_batch
+
+from .scenarios import make_scenario
+
+__all__ = ["ExperimentResult", "run_experiment", "csv_rows"]
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """A named experiment: its meta, the raw TraceBatch and summary rows."""
+
+    name: str
+    meta: Dict[str, Any]
+    batch: TraceBatch
+    rows: List[Dict[str, Any]]
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(sanitize_json(self.as_dict()), fh, indent=2,
+                      default=_jsonable)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "meta": self.meta, "rows": self.rows}
+
+
+def _jsonable(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
+def sanitize_json(obj):
+    """Replace non-finite floats with strings: ``json.dump`` would emit
+    the bare token ``Infinity`` (invalid JSON — rejected by jq /
+    ``JSON.parse``) for inf time-to-target quantiles."""
+    if isinstance(obj, dict):
+        return {k: sanitize_json(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize_json(v) for v in obj]
+    if isinstance(obj, (float, np.floating)) and not np.isfinite(obj):
+        return str(obj)                          # "inf" / "-inf" / "nan"
+    return obj
+
+
+def run_experiment(strategy,
+                   scenario: Union[str, object],
+                   n: int,
+                   K: int,
+                   *,
+                   seeds: Union[int, Sequence[int]] = 8,
+                   grid: Optional[Mapping[str, Sequence]] = None,
+                   problem=None,
+                   gamma: float = 0.0,
+                   record_every: int = 1,
+                   tol_grad_sq: Optional[float] = None,
+                   backend: str = "auto",
+                   use_pallas: bool = False,
+                   scenario_kwargs: Optional[Dict[str, Any]] = None,
+                   target_frac: Optional[float] = None,
+                   json_path: Optional[str] = None,
+                   name: Optional[str] = None) -> ExperimentResult:
+    """Run ``strategy`` under ``scenario`` across ``seeds`` × ``grid``.
+
+    ``scenario`` is a name from :data:`~repro.exp.scenarios.SCENARIOS`
+    (built with ``n`` and ``scenario_kwargs``) or an already-constructed
+    time model (then ``n`` must equal ``model.n``). ``target_frac``
+    enables time-to-target reporting: wall-clock until ``||∇f||²`` falls
+    to that fraction of its initial value, quantiled across seeds.
+    ``json_path`` writes the summary as a JSON artifact.
+    """
+    if isinstance(scenario, str):
+        model = make_scenario(scenario, n, **(scenario_kwargs or {}))
+        scen_name = scenario
+    else:
+        model = scenario
+        scen_name = getattr(model, "name", type(model).__name__)
+    if model.n != n:
+        raise ValueError(f"scenario has n={model.n}, asked for n={n}")
+
+    batch = simulate_batch(strategy, model, K, problem=problem, gamma=gamma,
+                           seeds=seeds, grid=grid, record_every=record_every,
+                           tol_grad_sq=tol_grad_sq, backend=backend,
+                           use_pallas=use_pallas)
+    rows = batch.summary(target_frac=target_frac)
+    for row in rows:
+        row["scenario"] = scen_name
+        row["n"] = n
+        row["K"] = K
+    meta = {"strategy": batch.strategy, "scenario": scen_name, "n": n,
+            "K": K, "seeds": list(map(int, batch.seeds)),
+            "backend": batch.backend,
+            "grid": batch.grid if grid else None}
+    result = ExperimentResult(name=name or f"{batch.strategy}@{scen_name}",
+                              meta=meta, batch=batch, rows=rows)
+    if json_path:
+        result.to_json(json_path)
+    return result
+
+
+def csv_rows(result: ExperimentResult, prefix: str,
+             value_key: str = "total_time_mean"):
+    """Benchmark-harness ``(name, value, derived)`` triples: one per grid
+    point, value = ``value_key``, derived = ``± std`` plus seed count."""
+    out = []
+    std_key = value_key.replace("_mean", "_std")
+    for row in result.rows:
+        params = "/".join(f"{k}={v}" for k, v in row["params"].items())
+        label = f"{prefix}/{params}" if params else prefix
+        std = row.get(std_key)
+        derived = (f"±{std:.4g} over {row['seeds']} seeds"
+                   if std is not None else f"{row['seeds']} seeds")
+        out.append((label, row[value_key], derived))
+    return out

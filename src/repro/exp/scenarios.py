@@ -1,0 +1,130 @@
+"""String-keyed registry of the paper's compute regimes.
+
+``SCENARIOS`` mirrors :data:`repro.core.strategies.STRATEGIES`: every
+compute-time regime the paper simulates gets a name, so benchmarks,
+examples and ad-hoc sweeps select ``(method, scenario)`` pairs by string
+instead of hand-constructing models. A scenario factory takes ``n`` (the
+worker count) plus regime-specific keyword overrides and returns the
+:class:`~repro.core.time_models.TimeModel` /
+:class:`~repro.core.time_models.UniversalModel` instance.
+
+Registered regimes:
+
+===================== ======================================= ============
+name                  model                                   assumption
+===================== ======================================= ============
+fixed_sqrt            tau_i = tau1·sqrt(i)                    2.2 (Fig 5)
+fixed_linear          tau_i = tau1·i                          2.2 (Thm 2.3)
+fixed_power           tau_i = tau1·i^alpha                    2.2 (eq. 10)
+truncnorm             N(mu_i, sigma²) truncated to [0, ∞)     3.1
+exponential           Exp(lam), i.i.d. workers                3.1 (§3)
+shifted_exp           mu_i + Exp(lam_i)                       3.1 (§D.1)
+gamma                 Gamma(mean tau_i, common var)           3.1 (§K.3)
+uniform               Unif(tau_i − w, tau_i + w)              3.1 (§K.3/4)
+chi2                  chi²_{k_i}                              3.1 (§D.1)
+universal_fig3        sin-powers grid (Figure 3)              5.1
+universal_fig4        offset sin-powers grid (Figure 4)       5.1
+partial_participation rotating ≤ p·n dead workers             5.4
+===================== ======================================= ============
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.time_models import (FixedTimes, PartialParticipationModel,
+                                    chi2_times, exponential_times,
+                                    gamma_times, powers_figure3,
+                                    powers_figure4,
+                                    shifted_exponential_times,
+                                    truncated_normal_times, uniform_times)
+
+__all__ = ["SCENARIOS", "register_scenario", "make_scenario"]
+
+SCENARIOS: Dict[str, Callable] = {}
+
+
+def register_scenario(name: str):
+    def deco(factory):
+        SCENARIOS[name] = factory
+        return factory
+    return deco
+
+
+def make_scenario(name: str, n: int, **kwargs):
+    """``SCENARIOS[name](n, **kwargs)`` with a helpful error."""
+    try:
+        factory = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"known: {sorted(SCENARIOS)}") from None
+    return factory(n, **kwargs)
+
+
+# --------------------------------------------------------------- fixed (2.2)
+@register_scenario("fixed_sqrt")
+def fixed_sqrt(n: int, tau1: float = 1.0):
+    return FixedTimes.sqrt_law(n, tau1)
+
+
+@register_scenario("fixed_linear")
+def fixed_linear(n: int, tau1: float = 1.0):
+    return FixedTimes.linear(n, tau1)
+
+
+@register_scenario("fixed_power")
+def fixed_power(n: int, alpha: float = 1.2, tau1: float = 1.0):
+    return FixedTimes.power_law(n, alpha, tau1)
+
+
+# ------------------------------------------------------ sub-exponential (3.1)
+@register_scenario("truncnorm")
+def truncnorm(n: int, sigma: float = 0.5):
+    return truncated_normal_times(np.sqrt(np.arange(1, n + 1)), sigma)
+
+
+@register_scenario("exponential")
+def exponential(n: int, lam: float = 1.0):
+    return exponential_times(lam, n)
+
+
+@register_scenario("shifted_exp")
+def shifted_exp(n: int, lam: float = 1.0):
+    return shifted_exponential_times(np.sqrt(np.arange(1, n + 1)),
+                                     np.full(n, lam))
+
+
+@register_scenario("gamma")
+def gamma(n: int, var: float = 0.25):
+    return gamma_times(np.sqrt(np.arange(1, n + 1)), var)
+
+
+@register_scenario("uniform")
+def uniform(n: int, half_width: float = 0.5):
+    return uniform_times(np.ones(n), half_width)
+
+
+@register_scenario("chi2")
+def chi2(n: int, max_dof: int = 8):
+    return chi2_times(1 + np.arange(n) % max_dof)
+
+
+# ------------------------------------------------------------ universal (5.1)
+@register_scenario("universal_fig3")
+def universal_fig3(n: int, seed: int = 0, t_max: float = 400.0):
+    return powers_figure3(n=n, seed=seed, t_max=t_max)
+
+
+@register_scenario("universal_fig4")
+def universal_fig4(n: int, seed: int = 0, t_max: float = 400.0):
+    return powers_figure4(n=n, seed=seed, t_max=t_max)
+
+
+# -------------------------------------------------- partial participation (5.4)
+@register_scenario("partial_participation")
+def partial_participation(n: int, v: float = 1.0, p: float = 0.2,
+                          period: float = 40.0, t_max: float = 4000.0):
+    return PartialParticipationModel(n=n, v=v, p=p, period=period,
+                                     t_max=t_max)

@@ -14,11 +14,20 @@ import jax
 
 from .flash_attention import flash_attention_pallas
 from .moe_gmm import moe_gmm_pallas
+from .order_stats import mth_smallest as _mth_smallest_dispatch
 from .rwkv_scan import rwkv_scan_pallas
 
-__all__ = ["flash_attention", "rwkv_scan", "moe_gmm"]
+__all__ = ["flash_attention", "rwkv_scan", "moe_gmm", "mth_smallest"]
 
 INTERPRET = True  # CPU container; set False on TPU
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def mth_smallest(x, *, m: int):
+    # CPU (INTERPRET=True): fused iterative/top_k dispatch; on TPU the
+    # VMEM-resident Pallas partial-sort kernel
+    return _mth_smallest_dispatch(x, m, use_pallas=not INTERPRET,
+                                  interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))

@@ -9,6 +9,7 @@ batched decode step — is the unit the decode dry-run shapes lower.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Callable, List, Optional
 
 import jax
@@ -48,7 +49,7 @@ class ServeEngine:
     # --------------------------------------------------------- serving
     def generate(self, requests: List[Request]) -> List[Request]:
         """Run all requests to completion with slot-based batching."""
-        queue = list(requests)
+        queue = deque(requests)            # O(1) popleft on refill
         slots: List[Optional[Request]] = [None] * self.B
         caches = [self.model.init_cache(1, self.max_len)
                   for _ in range(self.B)]
@@ -57,7 +58,7 @@ class ServeEngine:
         def refill():
             for i in range(self.B):
                 if slots[i] is None and queue:
-                    req = queue.pop(0)
+                    req = queue.popleft()
                     slots[i] = req
                     caches[i] = self.model.init_cache(1, self.max_len)
                     # prefill token-by-token (simple; a production engine

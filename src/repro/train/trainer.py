@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+from collections import deque
 from typing import Any, Dict, Iterator, Optional, Union
 
 import jax
@@ -99,7 +100,7 @@ class Trainer:
         if grad_delay and strategy.name != "sync":
             raise ValueError("grad_delay is an asynchronous-baseline mode; "
                              "combine with the full-sync strategy only")
-        self._param_fifo: list = []
+        self._param_fifo: deque = deque()   # delayed-gradient params, O(1) popleft
         self._seed = seed
         self._step_fn = None
 
@@ -153,7 +154,7 @@ class Trainer:
             self._param_fifo.append(state.params)
             grad_params = self._param_fifo[0]
             if len(self._param_fifo) > self.grad_delay:
-                self._param_fifo.pop(0)
+                self._param_fifo.popleft()
         else:
             grad_params = None
         params, opt_state, metrics = self._step_fn(

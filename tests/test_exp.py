@@ -1,0 +1,91 @@
+"""Tests for the experiment layer (repro.exp): the SCENARIOS registry,
+run_experiment summaries/JSON, and the MSync per-worker oracle hook the
+§6 heterogeneous benchmark rides on."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import FixedTimes, simulate
+from repro.core.oracle import heterogeneous_quadratics
+from repro.core.strategies import MSync
+from repro.core.time_models import SubExponentialTimes, UniversalModel
+from repro.exp import SCENARIOS, csv_rows, make_scenario, run_experiment
+
+
+EXPECTED = {"fixed_sqrt", "fixed_linear", "fixed_power", "truncnorm",
+            "exponential", "shifted_exp", "gamma", "uniform", "chi2",
+            "universal_fig3", "universal_fig4", "partial_participation"}
+
+
+def test_scenarios_registry_covers_paper_regimes():
+    assert set(SCENARIOS) >= EXPECTED
+    for name in EXPECTED:
+        n = 6
+        model = make_scenario(name, n)
+        assert model.n == n, name
+        assert isinstance(model, (FixedTimes, SubExponentialTimes,
+                                  UniversalModel)), name
+    with pytest.raises(KeyError):
+        make_scenario("nope", 4)
+
+
+def test_scenario_kwargs_forwarded():
+    model = make_scenario("fixed_power", 5, alpha=2.0)
+    np.testing.assert_allclose(model.taus, np.arange(1, 6, dtype=float) ** 2)
+
+
+def test_run_experiment_summary_and_json(tmp_path):
+    path = tmp_path / "exp.json"
+    res = run_experiment("msync", "fixed_sqrt", n=16, K=12, seeds=4,
+                         grid={"m": [2, 16]}, json_path=str(path),
+                         name="unit")
+    assert [r["params"] for r in res.rows] == [{"m": 2}, {"m": 16}]
+    for r in res.rows:
+        assert r["seeds"] == 4
+        assert r["scenario"] == "fixed_sqrt"
+        assert np.isfinite(r["total_time_mean"])
+    # m=16 (full sync) is slower per round than m=2
+    assert res.rows[1]["total_time_mean"] > res.rows[0]["total_time_mean"]
+    data = json.loads(path.read_text())
+    assert data["name"] == "unit"
+    assert data["meta"]["backend"] == "vectorized"
+    assert len(data["rows"]) == 2
+
+    rows = csv_rows(res, "unit", "total_time_mean")
+    assert rows[0][0] == "unit/m=2"
+    assert "over 4 seeds" in rows[0][2]
+
+
+def test_run_experiment_accepts_model_instance():
+    model = FixedTimes(np.array([1.0, 3.0]))
+    res = run_experiment("sync", model, n=2, K=4, seeds=2)
+    assert res.rows[0]["total_time_mean"] == pytest.approx(12.0)
+    with pytest.raises(ValueError):
+        run_experiment("sync", model, n=3, K=4, seeds=2)
+
+
+def test_msync_grads_by_worker_hook():
+    """Satellite: MSync takes the per-worker oracle hook Malenia has; with
+    worker-exclusive blocks and fixed sqrt-law times, blocks owned by the
+    n-m slow workers receive NO update, exactly the §6 argument."""
+    n, d_per = 6, 4
+    prob, grad_i, x_star = heterogeneous_quadratics(n, d_per=d_per, seed=0)
+    model = FixedTimes.sqrt_law(n)
+    m = 3
+    tr = simulate(MSync(m=m, grads_by_worker=grad_i), model, K=60,
+                  problem=prob, gamma=0.3, seed=0, record_every=10)
+    assert tr.x_final is not None
+    slow = tr.x_final[m * d_per:]
+    fast = tr.x_final[:m * d_per]
+    np.testing.assert_array_equal(slow, np.zeros_like(slow))
+    assert np.linalg.norm(fast - x_star[:m * d_per]) \
+        < 0.5 * np.linalg.norm(x_star[:m * d_per])
+
+
+def test_sec6_benchmark_rows_still_certify_the_claim():
+    from benchmarks.sec6_heterogeneous import run
+    rows = dict((r[0], r[1]) for r in run(fast=True, seeds=2))
+    assert rows["sec6het/msync_m4of8/rel_err"] > 0.5
+    assert rows["sec6het/msync_fails_malenia_works"] == 1.0

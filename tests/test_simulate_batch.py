@@ -1,0 +1,245 @@
+"""Tests for the batched multi-seed engine (repro.core.batch /
+repro.core.batch_jax / repro.kernels.order_stats): seed parity with the
+scalar simulator, backend equivalence, grid semantics and the TraceBatch
+reducers."""
+
+import numpy as np
+import pytest
+
+from repro.core import (STRATEGIES, FixedTimes, TraceBatch,
+                        exponential_times, quadratic_worst_case,
+                        simulate, simulate_batch, uniform_times)
+from repro.core.strategies import MSync, _fast_msync_timing_batch
+
+
+def _assert_trace_equal(a, b):
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.values, b.values)
+    np.testing.assert_array_equal(a.grad_norms, b.grad_norms)
+    assert a.total_time == b.total_time
+    assert a.iterations == b.iterations
+    assert a.gradients_used == b.gradients_used
+    assert a.gradients_computed == b.gradients_computed
+    assert a.discard_fraction == b.discard_fraction
+
+
+# ------------------------------------------------------------- seed parity
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_single_seed_reproduces_scalar_simulate(name):
+    """ISSUE 2 satellite: simulate_batch(..., seeds=[s]) must reproduce
+    scalar simulate(..., seed=s) trace-for-trace (times, grad norms,
+    discard fraction) for EVERY registered strategy."""
+    model = uniform_times(np.ones(5), 0.3)
+    prob = quadratic_worst_case(d=20, p=0.5)
+    for s in (0, 7):
+        tb = simulate_batch(name, model, K=25, problem=prob, gamma=0.2,
+                            seeds=[s], record_every=5)
+        sc = simulate(STRATEGIES[name](), model, K=25, problem=prob,
+                      gamma=0.2, seed=s, record_every=5)
+        _assert_trace_equal(tb.traces[0][0], sc)
+
+
+@pytest.mark.parametrize("model_fn", [
+    lambda: FixedTimes(np.array([1.0, 2.0, 5.0, 100.0])),
+    lambda: FixedTimes(np.ones(7)),
+    lambda: exponential_times(1.0, 12),
+    lambda: uniform_times(np.sqrt(np.arange(1, 13)), 0.4),
+])
+def test_vectorized_backend_exact_parity(model_fn):
+    """The seed-batched fast path must match the scalar fast path exactly
+    per seed — including RNG-stream parity for random models."""
+    model = model_fn()
+    for m in (1, 3, model.n):
+        tb = simulate_batch(("msync", {"m": m}), model, K=31,
+                            seeds=[0, 3, 11], backend="vectorized")
+        assert tb.backend == "vectorized"
+        for s, tr in zip([0, 3, 11], tb.traces[0]):
+            sc = simulate(MSync(m=m), model, K=31, seed=s)
+            assert tr.total_time == sc.total_time
+            assert tr.gradients_used == sc.gradients_used
+            assert tr.gradients_computed == sc.gradients_computed
+            assert tr.iterations == sc.iterations
+
+
+def test_auto_backend_selection():
+    model = FixedTimes(np.arange(1.0, 9.0))
+    assert simulate_batch("msync", model, K=3, seeds=2).backend \
+        == "vectorized"
+    prob = quadratic_worst_case(d=10, p=0.5)
+    assert simulate_batch("msync", model, K=3, seeds=2, problem=prob,
+                          gamma=0.1).backend == "serial"
+    assert simulate_batch("async", model, K=3, seeds=2).backend == "serial"
+    with pytest.raises(ValueError):
+        simulate_batch("async", model, K=3, seeds=2, backend="vectorized")
+    with pytest.raises(ValueError):
+        simulate_batch("msync", model, K=3, seeds=2, backend="nope")
+
+
+def test_fast_batch_internal_consistency():
+    # direct engine check at a size where every round has stale workers
+    model = FixedTimes.sqrt_law(40)
+    rngs = [np.random.default_rng(s) for s in range(3)]
+    trs = _fast_msync_timing_batch(5, model, 23, rngs)
+    for s, tr in enumerate(trs):
+        sc = simulate(MSync(m=5), model, K=23, seed=s)
+        assert tr.total_time == sc.total_time
+        assert tr.gradients_computed == sc.gradients_computed
+
+
+# ------------------------------------------------------------------- grids
+def test_grid_sweeps_strategy_and_sim_params():
+    model = FixedTimes(np.array([1.0, 2.0, 4.0, 8.0]))
+    tb = simulate_batch("msync", model, K=10, seeds=2,
+                        grid={"m": [1, 4], "K": [5, 10]})
+    assert [g for g in tb.grid] == [{"m": 1, "K": 5}, {"m": 1, "K": 10},
+                                    {"m": 4, "K": 5}, {"m": 4, "K": 10}]
+    tt = tb.total_time
+    assert tt.shape == (4, 2)
+    # m=1 -> 1s/round; m=4 -> 8s/round; K scales linearly
+    assert tt[0, 0] == pytest.approx(5.0)
+    assert tt[1, 0] == pytest.approx(10.0)
+    assert tt[2, 0] == pytest.approx(40.0)
+    assert tt[3, 0] == pytest.approx(80.0)
+
+
+def test_grid_on_instance_spec_rejected():
+    model = FixedTimes(np.ones(4))
+    with pytest.raises(ValueError):
+        simulate_batch(MSync(m=2), model, K=3, seeds=2, grid={"m": [1, 2]})
+    # instance without a strategy-param grid is fine
+    tb = simulate_batch(MSync(m=2), model, K=3, seeds=2)
+    assert tb.traces[0][0].iterations == 3
+
+
+# ------------------------------------------------------------- TraceBatch
+def test_tracebatch_summary_and_time_to_target():
+    model = uniform_times(np.ones(6), 0.4)
+    prob = quadratic_worst_case(d=20, p=0.5)
+    tb = simulate_batch(("msync", {"m": 4}), model, K=150, problem=prob,
+                        gamma=0.4, seeds=4, record_every=10)
+    rows = tb.summary(target_frac=0.25)
+    assert len(rows) == 1
+    r = rows[0]
+    assert r["seeds"] == 4
+    assert r["total_time_std"] > 0          # random model => seed spread
+    assert r["time_to_target_hit_rate"] == 1.0
+    assert r["time_to_target_q10"] <= r["time_to_target_q50"] \
+        <= r["time_to_target_q90"]
+    t2t = tb.time_to_target(0.25)
+    assert t2t.shape == (1, 4)
+    assert np.isfinite(t2t).all()
+    # timing-only traces report nan
+    tb2 = simulate_batch("msync", model, K=5, seeds=2)
+    assert np.isnan(tb2.time_to_target()).all()
+
+
+# ------------------------------------------------------------- jax backend
+def test_jax_backend_matches_numpy_within_tolerance():
+    """ISSUE 2 satellite: the JAX backend must match the NumPy backend
+    within tolerance (generic-position fixed times)."""
+    rng = np.random.default_rng(42)
+    model = FixedTimes(rng.uniform(0.5, 3.0, 48))
+    tb_np = simulate_batch(("msync", {"m": 6}), model, K=30, seeds=3)
+    tb_jx = simulate_batch(("msync", {"m": 6}), model, K=30, seeds=3,
+                           backend="jax")
+    np.testing.assert_allclose(tb_jx.total_time, tb_np.total_time,
+                               rtol=1e-5)
+    np.testing.assert_array_equal(tb_jx.stat("gradients_computed"),
+                                  tb_np.stat("gradients_computed"))
+    np.testing.assert_array_equal(tb_jx.stat("gradients_used"),
+                                  tb_np.stat("gradients_used"))
+
+
+def test_jax_backend_tie_heavy_model():
+    # equal times => the exact tie-quota branch must fire and still
+    # accept exactly m per round
+    model = FixedTimes(np.ones(8))
+    tb_jx = simulate_batch(("msync", {"m": 3}), model, K=12, seeds=2,
+                           backend="jax")
+    tb_np = simulate_batch(("msync", {"m": 3}), model, K=12, seeds=2)
+    np.testing.assert_allclose(tb_jx.total_time, tb_np.total_time)
+    np.testing.assert_array_equal(tb_jx.stat("gradients_used"),
+                                  tb_np.stat("gradients_used"))
+
+
+def test_jax_backend_math_path_matches_deterministic_oracle():
+    from repro.core.batch_jax import quadratic_worst_case_jax
+    rng = np.random.default_rng(1)
+    model = FixedTimes(np.sort(rng.uniform(0.5, 2.0, 12)))
+    # p=1 makes the eq. (27) gate deterministic: xi/p == 1 always
+    prob_np = quadratic_worst_case(d=40, p=1.0)
+    prob_jx = quadratic_worst_case_jax(d=40, p=1.0)
+    tb_np = simulate_batch(("msync", {"m": 4}), model, K=25,
+                           problem=prob_np, gamma=0.5, seeds=2,
+                           record_every=5)
+    tb_jx = simulate_batch(("msync", {"m": 4}), model, K=25,
+                           problem=prob_jx, gamma=0.5, seeds=2,
+                           record_every=5, backend="jax")
+    a, b = tb_np.traces[0][0], tb_jx.traces[0][0]
+    np.testing.assert_allclose(a.times, b.times, rtol=1e-5)
+    np.testing.assert_allclose(a.values, b.values, rtol=1e-3, atol=1e-6)
+    np.testing.assert_allclose(a.grad_norms, b.grad_norms, rtol=1e-3,
+                               atol=1e-6)
+    assert b.x_final is not None and b.x_final.shape == (40,)
+
+
+def test_jax_backend_random_model_distribution_equal():
+    model = exponential_times(1.0, 16)
+    tb_jx = simulate_batch(("msync", {"m": 4}), model, K=20, seeds=48,
+                           backend="jax")
+    tb_np = simulate_batch(("msync", {"m": 4}), model, K=20, seeds=48,
+                           backend="vectorized")
+    # different RNG streams, same distribution: compare cross-seed means
+    assert tb_jx.total_time.mean() == pytest.approx(
+        tb_np.total_time.mean(), rel=0.15)
+    # and every jax seed is a distinct draw
+    assert len(np.unique(tb_jx.total_time)) > 1
+
+
+def test_jax_backend_rejects_unsupported():
+    model = FixedTimes(np.ones(4))
+    with pytest.raises(NotImplementedError):
+        simulate_batch("async", model, K=3, seeds=2, backend="jax")
+    prob = quadratic_worst_case(d=10, p=0.5)
+    with pytest.raises(NotImplementedError):
+        simulate_batch("msync", model, K=3, seeds=2, problem=prob,
+                       gamma=0.1, backend="jax")
+
+
+# ------------------------------------------------------------ order stats
+def test_mth_smallest_kernels_match_sort():
+    import jax.numpy as jnp
+
+    from repro.kernels.order_stats import (mth_smallest,
+                                           mth_smallest_iterative,
+                                           mth_smallest_pallas)
+    rng = np.random.default_rng(3)
+    x = rng.uniform(0.0, 1.0, (5, 37))
+    x[1, :9] = 0.25                  # duplicate tie class
+    ref = np.sort(x, axis=1)
+    xj = jnp.asarray(x)
+    for m in (1, 3, 9, 36, 37):
+        want = ref[:, m - 1]
+        np.testing.assert_allclose(np.asarray(mth_smallest(xj, m)), want,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(mth_smallest_iterative(xj, m)), want, rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(mth_smallest_pallas(xj, m)), want, rtol=1e-6)
+    with pytest.raises(ValueError):
+        mth_smallest(xj, 0)
+
+
+# -------------------------------------------------------- time model hooks
+def test_sample_times_seeds_stream_parity():
+    model = uniform_times(np.arange(1.0, 6.0), 0.25)
+    got = model.sample_times_seeds(np.arange(5),
+                                   [np.random.default_rng(s)
+                                    for s in (0, 4)])
+    for row, s in zip(got, (0, 4)):
+        np.testing.assert_array_equal(
+            row, model.sample_times(np.arange(5), np.random.default_rng(s)))
+    fixed = FixedTimes(np.array([3.0, 1.0, 2.0]))
+    np.testing.assert_array_equal(
+        fixed.sample_times_seeds([2, 0], [np.random.default_rng(0)] * 3),
+        [[2.0, 3.0]] * 3)
