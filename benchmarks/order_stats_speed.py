@@ -1,0 +1,84 @@
+"""Pallas top-m partial-sort kernel vs ``lax.top_k`` vs the iterative
+tie-class extraction, at the paper-relevant shapes (ISSUE 3 satellite).
+
+The batched simulators need the m-th smallest of ``(S, n)`` candidates
+per round. This benchmark times the three lowerings at n ∈ {1e3, 1e5}
+(plus the jitted scan-shaped dispatch) and asserts they agree. On this
+CPU-only container the Pallas kernel runs in interpret mode
+(``repro.kernels.ops.INTERPRET``, i.e. ``REPRO_PALLAS_INTERPRET`` unset
+or ``=1``) — interpret timings measure the Python kernel body, NOT TPU
+performance; the number that matters on CPU is iterative vs top_k. On a
+real TPU set ``REPRO_PALLAS_INTERPRET=0`` to compile the kernel and get
+a meaningful Pallas column.
+"""
+
+import time
+
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.order_stats import (mth_smallest_iterative,
+                                       mth_smallest_pallas)
+
+
+def _timed(fn, reps: int = 5) -> float:
+    fn()                                     # warmup / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(fast: bool = True):
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    rows = []
+    S = 32
+    # both sizes even in fast mode — n=1e5 is the whole point (top_k's
+    # CPU lowering scales badly); fast mode trims the m sweep instead
+    sizes = [1_000, 100_000]
+    ms = (10,) if fast else (10, 64)
+    interpret = ops.INTERPRET
+
+    topk = jax.jit(lambda x, m: -lax.top_k(-x, m)[0][..., m - 1],
+                   static_argnames="m")
+    iterative = jax.jit(mth_smallest_iterative, static_argnames="m")
+
+    for n in sizes:
+        x = jnp.asarray(np.random.default_rng(0).uniform(0.0, 1.0, (S, n)))
+        for m in ms:
+            ref = np.sort(np.asarray(x), axis=1)[:, m - 1]
+            t_iter = _timed(lambda: jax.block_until_ready(iterative(x, m=m)))
+            t_topk = _timed(lambda: jax.block_until_ready(topk(x, m=m)))
+            t_pal = _timed(lambda: jax.block_until_ready(
+                mth_smallest_pallas(x, m, interpret=interpret)), reps=2)
+            for name, fn in [("iterative", lambda: iterative(x, m=m)),
+                             ("topk", lambda: topk(x, m=m)),
+                             ("pallas", lambda: mth_smallest_pallas(
+                                 x, m, interpret=interpret))]:
+                np.testing.assert_allclose(np.asarray(fn()), ref,
+                                           rtol=1e-6, err_msg=name)
+            tag = f"order_stats/n={n}/m={m}"
+            rows.append((f"{tag}/iterative_s", t_iter,
+                         f"S={S} fused extraction"))
+            rows.append((f"{tag}/topk_s", t_topk,
+                         f"iter/topk={t_iter / t_topk:.2f}"))
+            rows.append((f"{tag}/pallas_s", t_pal,
+                         "interpret (CPU)" if interpret
+                         else "compiled (TPU lane)"))
+    rows.append(("order_stats/interpret", float(interpret),
+                 "REPRO_PALLAS_INTERPRET=0 for compiled TPU runs"))
+    return rows
+
+
+def main():
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Perf regression gate: compare a fresh ``BENCH_simbatch.json`` against
+the committed baseline (ISSUE 3 satellite).
+
+Rules (tolerance ±30% by default, ``REPRO_PERF_TOL`` overrides):
+
+* ``speedup_vs_serial.*`` — one-sided floors: a measured speedup may
+  exceed the baseline freely but must not drop below
+  ``baseline * (1 - tol)`` (perf regression).
+* ``total_time_mean.*`` — two-sided: these are *simulated* wall-clock
+  outputs, so drift in either direction is a behavior change, not noise.
+
+Keys present in the baseline but missing from the measurement (or vice
+versa) fail loudly — silently dropping a tracked metric is how perf
+gates rot, and mismatched ``meta`` shapes (n/S/K/fast) fail as a config
+mismatch rather than masquerading as drift.
+
+Speedup ratios are hardware-sensitive: a baseline recorded on a fast
+dev box would set floors a slower CI runner cannot meet even without a
+regression. The committed baseline in ``benchmarks/baselines/`` is
+therefore seeded *conservatively* — its speedup entries are chosen so
+the -30% floors land at the acceptance criteria asserted inside
+``simbatch_speed.py`` itself (jax 7.15 → floor 5x, counter 5.72 →
+floor 4x), while ``total_time_mean`` entries are exact simulated
+outputs (machine-independent, tight drift detectors). To tighten the
+speedup floors, regenerate the baseline ON THE RUNNER CLASS IT GATES
+(``python -m benchmarks.run --only simbatch`` there, then copy
+``BENCH_simbatch.json`` over the baseline) — never from a dev box.
+Loosen a noisy lane with ``REPRO_PERF_TOL`` rather than deleting
+metrics.
+
+    python -m benchmarks.perf_gate BENCH_simbatch.json \
+        benchmarks/baselines/BENCH_simbatch.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def compare(measured: dict, baseline: dict, tol: float) -> list:
+    """Return a list of failure strings (empty => gate passes)."""
+    failures = []
+    for key in ("n", "S", "K", "m", "fast"):
+        got = measured.get("meta", {}).get(key)
+        want = baseline.get("meta", {}).get(key)
+        if got != want:
+            failures.append(
+                f"meta.{key}: measured {got!r} vs baseline {want!r} — "
+                f"benchmark config mismatch, not a perf result; "
+                f"regenerate the baseline")
+    if failures:
+        return failures
+
+    def keys_match(section):
+        a = set(measured.get(section, {}))
+        b = set(baseline.get(section, {}))
+        for missing in sorted(b - a):
+            failures.append(f"{section}.{missing}: missing from measurement")
+        for extra in sorted(a - b):
+            failures.append(f"{section}.{extra}: not in baseline — "
+                            f"re-commit benchmarks/baselines/")
+        return sorted(a & b)
+
+    for key in keys_match("speedup_vs_serial"):
+        got = measured["speedup_vs_serial"][key]
+        want = baseline["speedup_vs_serial"][key]
+        if got < want * (1.0 - tol):
+            failures.append(
+                f"speedup_vs_serial.{key}: {got:.2f}x < "
+                f"{want:.2f}x * (1 - {tol:.0%}) — perf regression")
+    for key in keys_match("total_time_mean"):
+        got = measured["total_time_mean"][key]
+        want = baseline["total_time_mean"][key]
+        if abs(got - want) > tol * abs(want):
+            failures.append(
+                f"total_time_mean.{key}: {got:.6g} vs baseline "
+                f"{want:.6g} (> ±{tol:.0%}) — simulated-output drift")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("measured", help="fresh BENCH_simbatch.json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("REPRO_PERF_TOL", "0.30")))
+    args = ap.parse_args()
+    with open(args.measured) as fh:
+        measured = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    failures = compare(measured, baseline, args.tol)
+    for f in failures:
+        print(f"PERF GATE FAIL: {f}")
+    if not failures:
+        print(f"perf gate OK (tol ±{args.tol:.0%}, "
+              f"{len(measured.get('speedup_vs_serial', {}))} speedups, "
+              f"{len(measured.get('total_time_mean', {}))} totals)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,7 +20,10 @@ Modules:
   secj_R_estimation  §J sub-exponential R of real step times
   ablation_m_sweep   measured T(m) vs Theorem 2.3 closed form + Prop 4.1 m*
   thm55_participation  Theorem 5.5 window under the rotating adversary
-  simbatch_speed     simulate_batch >= 5x acceptance smoke (ISSUE 2)
+  simbatch_speed     simulate_batch jax >= 5x / counter >= 4x acceptance
+                     smokes; writes the BENCH_simbatch.json perf baseline
+  order_stats_speed  Pallas top-m kernel vs lax.top_k vs iterative
+                     extraction at n in {1e3, 1e5}
 
 Simulator-backed modules run through the experiment layer
 (``repro.exp.run_experiment``): strategies × scenarios × seed sweeps via
@@ -36,8 +39,8 @@ import sys
 import time
 
 from . import (ablation_m_sweep, fig5_quadratic, fig8_grid, malenia_het,
-               sec6_async_needed, sec6_heterogeneous, sec53_gap,
-               secj_R_estimation, simbatch_speed, table_mstar,
+               order_stats_speed, sec6_async_needed, sec6_heterogeneous,
+               sec53_gap, secj_R_estimation, simbatch_speed, table_mstar,
                thm23_logfactor, thm32_random, thm55_participation)
 
 MODULES = [
@@ -54,6 +57,7 @@ MODULES = [
     ("thm55_participation", thm55_participation),
     ("sec6_heterogeneous", sec6_heterogeneous),
     ("simbatch_speed", simbatch_speed),
+    ("order_stats_speed", order_stats_speed),
 ]
 
 

@@ -1,15 +1,30 @@
-"""Acceptance smoke for the batched engine: ``simulate_batch`` must be
-≥ 5x faster than a serial per-seed ``simulate()`` loop for timing-only
-m-sync at n=1000 × 32 seeds (ISSUE 2), and must agree with the serial
-results.
+"""Acceptance smoke + perf baseline for the batched engine.
+
+Two asserted floors at the n=1000 × 32-seed acceptance shape:
+
+* ``backend="jax"`` must be ≥ 5x over a serial per-seed ``simulate()``
+  loop for timing-only m-sync under the deterministic ``fixed_sqrt``
+  model (ISSUE 2), agreeing with the serial results; and
+* ``backend="vectorized"`` with ``rng_scheme="counter"`` must be ≥ 4x
+  over serial under a *random* model (``exponential`` — ISSUE 3: the
+  per-seed stream draws capped the old vectorized backend at ~1.2x).
 
 The serial baseline already runs the round-vectorized scalar fast path
-(~54x over the event loop), so this measures batching gain on top of it.
-The JAX backend (one jitted (seeds, rounds, workers) program) is timed
-after one warmup call — JIT compilation is a one-time cost, amortized
-across every sweep of the same shape. The NumPy vectorized backend's
-ratio is reported as context (exact RNG parity, smaller speedup)."""
+(~54x over the event loop), so both floors measure batching gain on top
+of it. The JAX backend is timed after one warmup call — JIT compilation
+is a one-time cost, amortized across every sweep of the same shape. The
+stream-scheme ratio is reported as context (exact RNG parity, smaller
+speedup).
 
+``run()`` also writes ``BENCH_simbatch.json`` (per-backend
+``speedup_vs_serial`` plus simulated ``total_time_mean`` per benchmark
+model): the perf regression gate (``benchmarks/perf_gate.py``, run by
+CI) compares it against the committed baseline in
+``benchmarks/baselines/``.
+"""
+
+import json
+import os
 import time
 
 import numpy as np
@@ -17,20 +32,23 @@ import numpy as np
 from repro.core import STRATEGIES, simulate, simulate_batch
 from repro.exp import make_scenario
 
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_simbatch.json")
+
 
 def run(fast: bool = True):
     # no seeds override: n=1000 × 32 seeds is the acceptance shape
     n, S = 1000, 32
     K = 120 if fast else 600
     m = 10
-    model = make_scenario("fixed_sqrt", n)
+    spec = ("msync", {"m": m})
 
+    # -------------------------- deterministic model: jax >= 5x (ISSUE 2)
+    model = make_scenario("fixed_sqrt", n)
     t0 = time.perf_counter()
     serial = [simulate(STRATEGIES["msync"](m=m), model, K=K, seed=s)
               for s in range(S)]
     t_serial = time.perf_counter() - t0
 
-    spec = ("msync", {"m": m})
     simulate_batch(spec, model, K=K, seeds=S, backend="jax")   # JIT warmup
     t_jax = min(_timed(lambda: simulate_batch(spec, model, K=K, seeds=S,
                                               backend="jax"))
@@ -41,24 +59,73 @@ def run(fast: bool = True):
         assert np.isclose(bt.total_time, tr.total_time, rtol=1e-5), s
         assert bt.gradients_computed == tr.gradients_computed, s
         assert bt.gradients_used == tr.gradients_used, s
+    fixed_total_mean = float(np.mean([tr.total_time for tr in serial]))
 
     t_vec = min(_timed(lambda: simulate_batch(spec, model, K=K, seeds=S,
                                               backend="vectorized"))
                 for _ in range(3))
 
+    # ------------------------------ random model: counter >= 4x (ISSUE 3)
+    rmodel = make_scenario("exponential", n)
+    t0 = time.perf_counter()
+    rserial = [simulate(STRATEGIES["msync"](m=m), rmodel, K=K, seed=s)
+               for s in range(S)]
+    t_rserial = time.perf_counter() - t0
+    t_counter = min(_timed(lambda: simulate_batch(
+        spec, rmodel, K=K, seeds=S, backend="vectorized",
+        rng_scheme="counter")) for _ in range(3))
+    t_stream = min(_timed(lambda: simulate_batch(
+        spec, rmodel, K=K, seeds=S, backend="vectorized",
+        rng_scheme="stream")) for _ in range(3))
+    cbatch = simulate_batch(spec, rmodel, K=K, seeds=S,
+                            backend="vectorized", rng_scheme="counter")
+    exp_total_mean = float(cbatch.total_time.mean())
+    # distribution sanity: counter means track the per-seed-stream serial
+    # runs (same model, same shape)
+    rserial_mean = float(np.mean([tr.total_time for tr in rserial]))
+    assert np.isclose(exp_total_mean, rserial_mean, rtol=0.15), \
+        (exp_total_mean, rserial_mean)
+
     speedup = t_serial / t_jax
+    speedup_counter = t_rserial / t_counter
     rows = [
         (f"simbatch/n={n}/S={S}/serial_s", t_serial, f"K={K} m={m}"),
         (f"simbatch/n={n}/S={S}/jax_batch_s", t_jax,
          f"speedup={speedup:.1f}x (warm)"),
         (f"simbatch/n={n}/S={S}/numpy_batch_s", t_vec,
-         f"speedup={t_serial / t_vec:.1f}x (exact RNG parity)"),
+         f"speedup={t_serial / t_vec:.1f}x (fixed model)"),
         ("simbatch/speedup_vs_serial", speedup,
          "acceptance: >= 5x, results identical"),
+        (f"simbatch/exp/n={n}/S={S}/serial_s", t_rserial, f"K={K} m={m}"),
+        (f"simbatch/exp/n={n}/S={S}/counter_s", t_counter,
+         f"speedup={speedup_counter:.1f}x (Philox tensor draws)"),
+        (f"simbatch/exp/n={n}/S={S}/stream_s", t_stream,
+         f"speedup={t_rserial / t_stream:.1f}x (exact RNG parity)"),
+        ("simbatch/counter_speedup_vs_serial", speedup_counter,
+         "acceptance: >= 4x on a random model"),
     ]
     assert speedup >= 5.0, (
         f"simulate_batch jax backend only {speedup:.1f}x over the serial "
         f"per-seed loop (need >= 5x)")
+    assert speedup_counter >= 4.0, (
+        f"vectorized backend with rng_scheme='counter' only "
+        f"{speedup_counter:.1f}x over serial on the exponential model "
+        f"(need >= 4x)")
+
+    with open(BENCH_JSON, "w") as fh:
+        json.dump({
+            "meta": {"n": n, "S": S, "K": K, "m": m, "fast": fast},
+            "speedup_vs_serial": {
+                "jax": speedup,
+                "vectorized_fixed": t_serial / t_vec,
+                "vectorized_counter": speedup_counter,
+                "vectorized_stream": t_rserial / t_stream,
+            },
+            "total_time_mean": {
+                "fixed_sqrt_msync": fixed_total_mean,
+                "exponential_msync": exp_total_mean,
+            },
+        }, fh, indent=2)
     return rows
 
 

@@ -15,15 +15,27 @@ Backends (``backend=``):
   identical to scalar runs by construction.
 * ``"vectorized"`` — the seed-batched round-vectorized m-sync timing
   engine (:func:`repro.core.strategies._fast_msync_timing_batch`): one
-  ``(seeds, rounds, workers)`` array program. Timing-only m-sync family
-  under non-universal models; exact per-seed RNG parity with the scalar
-  fast path.
-* ``"jax"`` — :mod:`repro.core.batch_jax`: ``jax.vmap`` over seeds with a
-  ``lax.scan`` round recursion (optionally using the Pallas top-m
-  partial-sort kernel for the per-round m-th order statistic).
-  Distribution-equal, not RNG-stream-equal; matches NumPy within float
-  tolerance for deterministic models/oracles.
+  ``(seeds, rounds, workers)`` array program. Timing-only m-sync family,
+  including universal models (deterministic — computed once and
+  replicated across seeds). ``rng_scheme`` picks the draw contract for
+  random models: ``"counter"`` (default) draws the whole time tensor
+  from per-seed Philox counter streams in bulk (fast, distribution-equal
+  to scalar runs), ``"stream"`` consumes each seed's
+  ``default_rng(seed)`` stream in the scalar path's exact order (exact
+  per-seed parity with the scalar fast path).
+* ``"jax"`` — :mod:`repro.core.batch_jax`: jitted ``lax.scan`` programs
+  over ``(seeds, workers)`` state (optionally using the Pallas top-m
+  partial-sort kernel for the per-round m-th order statistic). Covers
+  the m-sync family, Rennala (renewal-batched rounds) and
+  Async/Ringmaster (arrival-indexed recursion). Distribution-equal, not
+  RNG-stream-equal; matches NumPy within float tolerance for
+  deterministic models/oracles.
 * ``"auto"`` (default) — ``vectorized`` when eligible, else ``serial``.
+* ``"fastest"`` — like ``auto`` but also considers the ``jax`` backend
+  when the sweep is large enough (``seeds * K * n >=``
+  :data:`JAX_MIN_WORK`) to amortize jit compilation — or whenever the
+  problem is a :class:`~repro.core.batch_jax.JaxProblem`, which only
+  jax can execute; this is what :func:`repro.exp.run_experiment` uses.
 
 Grid semantics: ``grid`` maps parameter names to value sequences and the
 cartesian product is swept. Keys in :data:`SIM_GRID_KEYS` override the
@@ -41,13 +53,17 @@ import numpy as np
 
 from .strategies import (AggregationStrategy, MSync, STRATEGIES, Trace,
                          _fast_msync_timing_batch, make_strategy, simulate)
-from .time_models import TimeModel, UniversalModel
+from .time_models import FixedTimes, TimeModel, UniversalModel, philox_rngs
 
-__all__ = ["TraceBatch", "simulate_batch", "SIM_GRID_KEYS"]
+__all__ = ["TraceBatch", "simulate_batch", "SIM_GRID_KEYS", "JAX_MIN_WORK"]
 
 # grid keys routed to simulate() itself; everything else goes to the
 # strategy factory
 SIM_GRID_KEYS = ("K", "gamma", "record_every", "tol_grad_sq")
+
+# backend="fastest" only reaches for jax above this seeds * K * n volume
+# (below it, jit compilation dominates and the NumPy engines win)
+JAX_MIN_WORK = 1_000_000
 
 StrategySpec = Union[str, AggregationStrategy,
                      "tuple[str, Dict[str, Any]]", Callable[..., Any]]
@@ -69,6 +85,12 @@ class TraceBatch:
     seeds: np.ndarray                  # (S,) seeds, in run order
     traces: List[List[Trace]]          # [G][S]
     backend: str                       # backend that actually ran
+    rng_scheme: str = "counter"        # EFFECTIVE draw contract of the
+    #                                    run: the requested scheme for
+    #                                    the vectorized engine, "stream"
+    #                                    for serial (per-seed parity by
+    #                                    construction), "jax.random" for
+    #                                    the jax backend
 
     # ------------------------------------------------------------ arrays
     def stat(self, field: str) -> np.ndarray:
@@ -111,6 +133,7 @@ class TraceBatch:
                 "params": dict(params),
                 "seeds": len(self.seeds),
                 "backend": self.backend,
+                "rng_scheme": self.rng_scheme,
                 "total_time_mean": float(tt[g].mean()),
                 "total_time_std": float(tt[g].std()),
                 "s_per_useful_grad_mean": float(per_grad[g].mean()),
@@ -175,12 +198,32 @@ def _vectorized_eligible(strategy: AggregationStrategy, model,
                          problem, K: int, tol_grad_sq) -> bool:
     """Mirror of the scalar fast-path guard in :func:`simulate`."""
     return (problem is None and tol_grad_sq is None
-            and not isinstance(model, UniversalModel)
             and not strategy.uses_alarm
             and isinstance(strategy, MSync)
             and type(strategy).on_arrival is MSync.on_arrival
             and type(strategy).on_step is AggregationStrategy.on_step
             and K > 0)
+
+
+def _is_jax_problem(problem) -> bool:
+    if problem is None:
+        return False
+    from .batch_jax import JaxProblem        # deferred import
+    return isinstance(problem, JaxProblem)
+
+
+def _jax_eligible(strategy: AggregationStrategy, model, problem,
+                  tol_grad_sq, K: int, S: int) -> bool:
+    """True when the jax backend supports the combination AND the sweep
+    is big enough (``S * K * n >= JAX_MIN_WORK``) to amortize jit. A
+    :class:`~repro.core.batch_jax.JaxProblem` bypasses the size gate:
+    jax is the only backend that can execute its oracle at all."""
+    if tol_grad_sq is not None or K <= 0:
+        return False
+    if not _is_jax_problem(problem) and S * K * model.n < JAX_MIN_WORK:
+        return False
+    from .batch_jax import jax_supported
+    return jax_supported(strategy, model, problem)
 
 
 # ---------------------------------------------------------------------------
@@ -197,25 +240,36 @@ def simulate_batch(strategy: StrategySpec,
                    record_every: int = 1,
                    tol_grad_sq: Optional[float] = None,
                    backend: str = "auto",
+                   rng_scheme: str = "counter",
                    use_pallas: bool = False) -> TraceBatch:
     """Run ``strategy`` under ``model`` across ``seeds`` × ``grid``.
 
     ``seeds`` is an int (→ ``range(seeds)``) or an explicit sequence.
-    With ``seeds=[s]`` and the default backends the result reproduces
-    scalar ``simulate(..., seed=s)`` trace-for-trace. See the module
+    With ``seeds=[s]``, the default backends and ``rng_scheme="stream"``
+    the result reproduces scalar ``simulate(..., seed=s)``
+    trace-for-trace; the default ``rng_scheme="counter"`` draws random
+    models from per-seed Philox counter streams instead — equal in
+    distribution, much faster for sweeps, and independent of which other
+    seeds are in the sweep. ``rng_scheme`` only affects the
+    ``vectorized`` backend (``serial`` always consumes the scalar
+    streams; ``jax`` always draws with ``jax.random``). See the module
     docstring for backend and grid semantics.
     """
     seed_list = list(range(seeds)) if isinstance(seeds, (int, np.integer)) \
         else [int(s) for s in seeds]
     if not seed_list:
         raise ValueError("need at least one seed")
-    if backend not in ("auto", "serial", "vectorized", "jax"):
+    if backend not in ("auto", "fastest", "serial", "vectorized", "jax"):
         raise ValueError(f"unknown backend {backend!r}")
+    if rng_scheme not in ("counter", "stream"):
+        raise ValueError(f"unknown rng_scheme {rng_scheme!r}; "
+                         "use 'counter' or 'stream'")
     name, factory, base_kw = _as_spec(strategy)
     points = _grid_points(grid)
 
     traces: List[List[Trace]] = []
     used_backends = []
+    used_schemes = []
     for pt in points:
         sim_kw = {k: pt[k] for k in pt if k in SIM_GRID_KEYS}
         strat_kw = {**base_kw, **{k: v for k, v in pt.items()
@@ -234,14 +288,44 @@ def simulate_batch(strategy: StrategySpec,
         if backend == "auto":
             chosen = "vectorized" if _vectorized_eligible(
                 strat, model, problem, K_pt, tol_pt) else "serial"
+        elif backend == "fastest":
+            # an explicit stream request is a parity contract jax cannot
+            # honor for sampled models (jax.random draws) — stay on the
+            # stream-capable engines there, unless only jax can execute
+            # the problem (a JaxProblem oracle), where executability wins
+            jax_ok = (_is_jax_problem(problem)
+                      or rng_scheme != "stream"
+                      or isinstance(model, (FixedTimes, UniversalModel)))
+            if jax_ok and _jax_eligible(strat, model, problem, tol_pt,
+                                        K_pt, len(seed_list)):
+                chosen = "jax"
+            elif _is_jax_problem(problem):
+                # only jax can execute a JaxProblem oracle; raise the
+                # precise unsupported-combination error instead of
+                # letting the serial engine crash inside it
+                from .batch_jax import _check_supported
+                _check_supported(strat, model, problem)
+                raise NotImplementedError(
+                    "JaxProblem sweeps run on the jax backend only, "
+                    "which does not support tol_grad_sq early exit or "
+                    "K <= 0; use a NumPy Problem with backend='serial'")
+            elif _vectorized_eligible(strat, model, problem, K_pt, tol_pt):
+                chosen = "vectorized"
+            else:
+                chosen = "serial"
         if chosen == "vectorized":
             if not _vectorized_eligible(strat, model, problem, K_pt,
                                         tol_pt):
                 raise ValueError(
                     "vectorized backend needs timing-only m-sync arrival "
-                    "semantics under a sampled (non-universal) time model")
-            rngs = [np.random.default_rng(s) for s in seed_list]
-            row = _fast_msync_timing_batch(strat._m, model, K_pt, rngs)
+                    "semantics")
+            if rng_scheme == "counter" \
+                    and not isinstance(model, UniversalModel):
+                rngs = philox_rngs(seed_list)
+            else:
+                rngs = [np.random.default_rng(s) for s in seed_list]
+            row = _fast_msync_timing_batch(strat._m, model, K_pt, rngs,
+                                           rng_scheme=rng_scheme)
         elif chosen == "jax":
             if tol_pt is not None:
                 raise NotImplementedError(
@@ -259,10 +343,14 @@ def simulate_batch(strategy: StrategySpec,
                    for s in seed_list]
         traces.append(row)
         used_backends.append(chosen)
+        used_schemes.append({"serial": "stream",
+                             "jax": "jax.random"}.get(chosen, rng_scheme))
 
     # auto can pick different backends per grid point; report faithfully
     backend_label = used_backends[0] if len(set(used_backends)) == 1 \
         else "+".join(sorted(set(used_backends)))
+    scheme_label = used_schemes[0] if len(set(used_schemes)) == 1 \
+        else "+".join(sorted(set(used_schemes)))
     return TraceBatch(strategy=name, grid=points,
                       seeds=np.asarray(seed_list), traces=traces,
-                      backend=backend_label)
+                      backend=backend_label, rng_scheme=scheme_label)

@@ -1,26 +1,41 @@
 """JAX backend for :func:`repro.core.batch.simulate_batch`.
 
-Runs the m-sync round recursion as ONE array program over a
-``(seeds, workers)`` state batch: a ``lax.scan`` over rounds whose body is
-pure elementwise work plus the per-round m-th order statistic from
-:mod:`repro.kernels.order_stats` (iterative tie-class extraction by
-default; optionally the Pallas top-m partial-sort kernel via
-``use_pallas=True``). The math-carrying path evaluates a
-:class:`JaxProblem` oracle under ``jax.vmap`` over seeds — n=1000 ×
-32-seed sweeps execute as a single jitted program instead of 32 serial
-event loops (~6x over the serial fast path on CPU here, far more on real
-accelerators).
+Runs device-resident simulation as ONE array program over a
+``(seeds, workers)`` state batch, one jitted recursion per strategy
+family:
+
+* **m-sync family** — a ``lax.scan`` over rounds whose body is pure
+  elementwise work plus the per-round m-th order statistic from
+  :mod:`repro.kernels.order_stats` (iterative tie-class extraction by
+  default; optionally the Pallas top-m partial-sort kernel via
+  ``use_pallas=True``).
+* **Rennala** — the same renewal structure, per round accumulating
+  ``batch`` arrivals: each worker's within-round arrivals form a renewal
+  chain (cumulative sums of fresh draws), the round ends at the
+  ``batch``-th smallest chain entry, and every worker's next pending
+  computation is its first chain entry past the round end.
+* **Async / Ringmaster** — an arrival-indexed ``lax.while_loop``: each
+  iteration pops the earliest pending finish per seed, steps (or, for
+  Ringmaster, discards over-delayed gradients), and restarts that worker;
+  per-worker start-iterate snapshots make the delayed-gradient math path
+  exact.
+
+The math-carrying paths evaluate a :class:`JaxProblem` oracle under
+``jax.vmap`` over seeds — n=1000 × 32-seed sweeps execute as a single
+jitted program instead of 32 serial event loops (~6x over the serial
+fast path on CPU here, far more on real accelerators).
 
 Exactness contract (documented in DESIGN.md): the NumPy engines break
 wall-clock ties by exact event-heap sequence numbers; this backend breaks
-them by worker index and draws with ``jax.random`` instead of NumPy
-``Generator`` streams. For deterministic models in generic position the
-round recursion is identical and results match the NumPy backends to
-float tolerance; for random models the results are equal in distribution,
-not per-seed. Supported: the m-sync family (unmodified arrival
-semantics) under :class:`FixedTimes`, or a
+them by worker index (and within-round arrival index for Rennala) and
+draws with ``jax.random`` instead of NumPy ``Generator`` streams. For
+deterministic models in generic position the recursions are identical
+and results match the NumPy backends to float tolerance; for random
+models the results are equal in distribution, not per-seed. Supported
+models: :class:`FixedTimes`, or a
 :class:`~repro.core.time_models.SubExponentialTimes` carrying a
-``jax_sampler``; timing-only or with a :class:`JaxProblem`.
+``jax_sampler`` (every in-tree factory does); timing-only or with a
+:class:`JaxProblem`.
 """
 
 from __future__ import annotations
@@ -30,10 +45,12 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
-from .strategies import AggregationStrategy, MSync, Trace
+from .strategies import (AggregationStrategy, Async, MSync, Rennala,
+                         Ringmaster, Trace)
 from .time_models import FixedTimes, SubExponentialTimes
 
-__all__ = ["JaxProblem", "quadratic_worst_case_jax", "simulate_batch_jax"]
+__all__ = ["JaxProblem", "quadratic_worst_case_jax", "simulate_batch_jax",
+           "jax_supported"]
 
 
 @dataclasses.dataclass
@@ -96,22 +113,44 @@ def quadratic_worst_case_jax(d: int = 1000, p: float = 0.1,
     return JaxProblem(x0=x0, f=f, grad=grad, stoch_grad=stoch_grad)
 
 
-def _check_supported(strategy: AggregationStrategy, model, problem) -> None:
-    ok = (isinstance(strategy, MSync)
-          and type(strategy).on_arrival is MSync.on_arrival
-          and type(strategy).on_step is AggregationStrategy.on_step
-          and not strategy.uses_alarm
-          and strategy.grads_by_worker is None)
-    if not ok:
+def _classify(strategy: AggregationStrategy) -> Optional[str]:
+    """Which jitted recursion runs ``strategy`` (None => unsupported)."""
+    if (isinstance(strategy, MSync)
+            and type(strategy).on_arrival is MSync.on_arrival
+            and type(strategy).on_step is AggregationStrategy.on_step
+            and not strategy.uses_alarm
+            and strategy.grads_by_worker is None):
+        return "msync"
+    # exact types: subclasses may override semantics the scans hard-code
+    if type(strategy) is Rennala:
+        return "rennala"
+    if type(strategy) is Async:
+        return "async"
+    if type(strategy) is Ringmaster:
+        return "ringmaster"
+    return None
+
+
+def _model_supported(model) -> bool:
+    return (isinstance(model, FixedTimes)
+            or (isinstance(model, SubExponentialTimes)
+                and getattr(model, "jax_sampler", None) is not None))
+
+
+def jax_supported(strategy: AggregationStrategy, model, problem) -> bool:
+    """Non-raising eligibility probe (``backend="fastest"`` uses this)."""
+    return (_classify(strategy) is not None and _model_supported(model)
+            and (problem is None or isinstance(problem, JaxProblem)))
+
+
+def _check_supported(strategy: AggregationStrategy, model, problem) -> str:
+    kind = _classify(strategy)
+    if kind is None:
         raise NotImplementedError(
-            f"jax backend supports the unmodified m-sync family only, "
-            f"not {strategy.name!r}; use backend='serial'")
-    if isinstance(model, FixedTimes):
-        pass
-    elif isinstance(model, SubExponentialTimes) \
-            and getattr(model, "jax_sampler", None) is not None:
-        pass
-    else:
+            f"jax backend supports the unmodified m-sync family, Rennala "
+            f"and Async/Ringmaster, not {strategy.name!r}; use "
+            f"backend='serial'")
+    if not _model_supported(model):
         raise NotImplementedError(
             f"jax backend needs FixedTimes or a SubExponentialTimes with "
             f"a jax_sampler (got {type(model).__name__}); "
@@ -120,6 +159,7 @@ def _check_supported(strategy: AggregationStrategy, model, problem) -> None:
         raise NotImplementedError(
             "jax backend takes a JaxProblem (jax.random oracle), not the "
             "NumPy Problem; use backend='serial' for NumPy oracles")
+    return kind
 
 
 def _timing_round(ft, ver, comp, k, cand, m, use_pallas):
@@ -180,6 +220,47 @@ def _fixed_timing_run(taus, S: int, m: int, K: int, use_pallas: bool):
 _fixed_timing_jit = None
 
 
+def _sweep_setup(model, problem, S, n, seeds):
+    """Shared per-run scaffolding for every jitted recursion: per-seed
+    PRNG keys, the per-round ``(S, n)`` draw closure (FixedTimes
+    broadcast vs vmapped ``jax_sampler``), and the broadcast initial
+    iterate (``(S, 1)`` zeros for timing-only runs)."""
+    import jax
+    import jax.numpy as jnp
+
+    keys0 = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    if isinstance(model, FixedTimes):
+        taus = jnp.asarray(model.taus)
+
+        def draw(round_keys):                     # no RNG consumed
+            return jnp.broadcast_to(taus, (S, n))
+    else:
+        sampler = model.jax_sampler
+
+        def draw(round_keys):
+            return jax.vmap(sampler)(round_keys)  # one (n,) draw per seed
+    if problem is not None:
+        x_init = jnp.broadcast_to(
+            jnp.asarray(problem.x0, dtype=jnp.float32),
+            (S,) + np.shape(problem.x0)).astype(jnp.float32)
+    else:
+        x_init = jnp.zeros((S, 1))
+    return keys0, draw, x_init
+
+
+def _grad_mean_fn(problem, B):
+    """vmap-over-seeds mean of ``B`` stochastic gradients at ``x``."""
+    import jax
+
+    def grad_mean(x, round_keys):
+        gkeys = jax.vmap(lambda k: jax.random.split(k, B))(round_keys)
+        per_seed = jax.vmap(jax.vmap(problem.stoch_grad, (None, 0)),
+                            (0, 0))
+        return per_seed(x, gkeys).mean(axis=1)
+
+    return grad_mean
+
+
 def _general_run(model, problem, m, n, S, K, gamma, use_pallas, seeds):
     """RNG-threading scan: random time models and/or a JaxProblem oracle.
 
@@ -191,32 +272,10 @@ def _general_run(model, problem, m, n, S, K, gamma, use_pallas, seeds):
     import jax.numpy as jnp
     from jax import lax
 
-    fixed = isinstance(model, FixedTimes)
     math = problem is not None
-    keys0 = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    if fixed:
-        taus = jnp.asarray(model.taus)
-
-        def draw(round_keys):                     # no RNG consumed
-            return jnp.broadcast_to(taus, (S, n))
-    else:
-        sampler = model.jax_sampler
-
-        def draw(round_keys):
-            return jax.vmap(sampler)(round_keys)  # one (n,) draw per seed
-
+    keys0, draw, x_init = _sweep_setup(model, problem, S, n, seeds)
     if math:
-        x_init = jnp.broadcast_to(
-            jnp.asarray(problem.x0, dtype=jnp.float32),
-            (S,) + np.shape(problem.x0)).astype(jnp.float32)
-
-        def grad_mean(x, round_keys):             # mean of m stoch grads
-            gkeys = jax.vmap(lambda k: jax.random.split(k, m))(round_keys)
-            per_seed = jax.vmap(jax.vmap(problem.stoch_grad, (None, 0)),
-                                (0, 0))
-            return per_seed(x, gkeys).mean(axis=1)
-    else:
-        x_init = jnp.zeros((S, 1))
+        grad_mean = _grad_mean_fn(problem, m)
 
     def step(carry, k):
         ft, ver, comp, x, keys = carry
@@ -249,6 +308,169 @@ def _general_run(model, problem, m, n, S, K, gamma, use_pallas, seeds):
     return jax.block_until_ready(run(keys0))
 
 
+def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
+    """Rennala as a renewal-batched ``lax.scan``: per round, each worker's
+    fresh arrivals form a renewal chain (base + cumulative draws), the
+    round ends at the ``B``-th smallest chain entry, every worker's next
+    pending computation is its first chain entry past the round end, and
+    the stepping worker alone restarts at the new iterate. Ties are
+    broken by (worker, within-round arrival index)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from ..kernels.order_stats import mth_smallest
+
+    math = problem is not None
+    keys0, draw, x_init = _sweep_setup(model, problem, S, n, seeds)
+    if isinstance(model, FixedTimes):
+        taus = jnp.asarray(model.taus)
+
+        def draw_chain(round_keys):               # (S, n, B)
+            return jnp.broadcast_to(taus[None, :, None], (S, n, B))
+    else:
+        sampler = model.jax_sampler
+
+        def draw_chain(round_keys):
+            ks = jax.vmap(lambda k: jax.random.split(k, B))(round_keys)
+            return jnp.moveaxis(jax.vmap(jax.vmap(sampler))(ks), 1, 2)
+
+    if math:
+        grad_mean = _grad_mean_fn(problem, B)
+
+    widx = jnp.arange(n)
+    flat_idx = jnp.arange(n * B)
+
+    def step(carry, k):
+        ft, ver, comp, x, keys = carry
+        sub = jax.vmap(lambda kk: jax.random.split(kk, 4))(keys)
+        keys = sub[:, 0]
+        stale = ver < k
+        # first fresh arrival: a stale pending pops at ft and restarts
+        base = jnp.where(stale, ft + draw(sub[:, 1]), ft)
+        chain = jnp.concatenate(
+            [base[..., None],
+             base[..., None] + jnp.cumsum(draw_chain(sub[:, 2]), axis=2)],
+            axis=2)                               # (S, n, B+1)
+        pool = chain[..., :B].reshape(S, n * B)
+        T = mth_smallest(pool, B, use_pallas=use_pallas)
+        lt = pool < T[:, None]
+        eq = pool == T[:, None]
+        quota = (B - lt.sum(axis=1))[:, None]
+        acc = lt | (eq & ((jnp.cumsum(eq, axis=1) - 1) < quota))
+        cnt = acc.reshape(S, n, B).sum(axis=2)    # accepted per worker
+        popped = stale & (ft < T[:, None])        # discarded stale pops
+        comp = comp + B + popped.sum(axis=1)
+        # the B-th (stepping) arrival: last accepted entry at exactly T;
+        # its worker restarts at the new iterate (version k + 1)
+        stepper = jnp.argmax(jnp.where(acc & eq, flat_idx[None, :], -1),
+                             axis=1) // B
+        live = (~stale) | popped                  # chain materialized
+        nxt = jnp.take_along_axis(chain, cnt[..., None], axis=2)[..., 0]
+        ft = jnp.where(live, nxt, ft)
+        ver = jnp.where(live, k, ver)
+        ver = jnp.where(widx[None, :] == stepper[:, None], k + 1, ver)
+        if math:
+            x = x - gamma * grad_mean(x, sub[:, 3])
+            val = jax.vmap(problem.f)(x)
+            gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
+        else:
+            val = gn = jnp.zeros(S)
+        return (ft, ver, comp, x, keys), (T, val, gn)
+
+    @jax.jit
+    def run(keys):
+        sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
+        init = (draw(sub[:, 1]), jnp.zeros((S, n), jnp.int32),
+                jnp.zeros(S, jnp.int32), x_init, sub[:, 0])
+        (_, _, comp, x, _), (T, val, gn) = lax.scan(
+            step, init, jnp.arange(K, dtype=jnp.int32))
+        return comp, x, T, val, gn
+
+    return jax.block_until_ready(run(keys0))
+
+
+def _arrival_run(model, problem, max_delay, delay_adaptive, n, S, K,
+                 gamma, seeds):
+    """Async/Ringmaster as an arrival-indexed ``lax.while_loop``: each
+    iteration pops the earliest pending finish per seed (ties by worker
+    index), steps unless the gradient's delay exceeds ``max_delay``
+    (discard => recompute at the current iterate), and restarts the
+    popped worker. Per-worker start-iterate snapshots (``xs``) evaluate
+    delayed gradients at the iterate they started from, exactly like the
+    event engine's snapshot dict. Returns per-step time/value buffers."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    math = problem is not None
+    keys0, draw, x_init = _sweep_setup(model, problem, S, n, seeds)
+    xs_init = jnp.broadcast_to(x_init[:, None, :],
+                               (S, n) + x_init.shape[1:])
+
+    rows = jnp.arange(S)
+    # Async pops exactly K arrivals. Ringmaster also pays discards, but
+    # a worker can only be re-discarded after another step lands, so
+    # each worker is discarded at most K+1 times: arrivals are bounded
+    # by K accepts + n*(K+1) discards. The cap is that bound plus slack
+    # and only guards against a broken recursion — the caller verifies
+    # every seed reached K and raises otherwise.
+    cap = (K + 1) * (n + 2) + 64
+
+    def cond(carry):
+        it, ft, ver, k = carry[0], carry[1], carry[2], carry[3]
+        return jnp.any(k < K) & (it < cap)
+
+    def body(carry):
+        it, ft, ver, k, comp, x, xs, keys, Tb, vb, gb = carry
+        sub = jax.vmap(lambda kk: jax.random.split(kk, 3))(keys)
+        keys = sub[:, 0]
+        w = jnp.argmin(ft, axis=1)                # earliest pending pop
+        t = ft[rows, w]
+        delay = k - ver[rows, w]
+        active = k < K
+        accept = active & (delay <= max_delay)
+        kc = jnp.clip(k, 0, K - 1)
+        if math:
+            g = jax.vmap(problem.stoch_grad)(xs[rows, w], sub[:, 1])
+            mult = (1.0 / (1.0 + delay.astype(jnp.float32) / n)
+                    if delay_adaptive else jnp.ones(S, jnp.float32))
+            x = jnp.where(accept[:, None],
+                          x - gamma * mult[:, None] * g, x)
+            val = jax.vmap(problem.f)(x)
+            gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
+            vb = vb.at[rows, kc].set(jnp.where(accept, val, vb[rows, kc]))
+            gb = gb.at[rows, kc].set(jnp.where(accept, gn, gb[rows, kc]))
+        Tb = Tb.at[rows, kc].set(jnp.where(accept, t, Tb[rows, kc]))
+        k = k + accept.astype(k.dtype)
+        dts = draw(sub[:, 2])                     # restart the popped worker
+        ft = ft.at[rows, w].set(jnp.where(active, t + dts[rows, w],
+                                          ft[rows, w]))
+        ver = ver.at[rows, w].set(jnp.where(active, k, ver[rows, w]))
+        xs = xs.at[rows, w].set(jnp.where(active[:, None], x, xs[rows, w]))
+        comp = comp + active.astype(comp.dtype)
+        return (it + 1, ft, ver, k, comp, x, xs, keys, Tb, vb, gb)
+
+    @jax.jit
+    def run(keys):
+        sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
+        init = (jnp.zeros((), jnp.int32), draw(sub[:, 1]),
+                jnp.zeros((S, n), jnp.int32), jnp.zeros(S, jnp.int32),
+                jnp.zeros(S, jnp.int32), x_init, xs_init, sub[:, 0],
+                jnp.zeros((S, K)), jnp.zeros((S, K)), jnp.zeros((S, K)))
+        out = lax.while_loop(cond, body, init)
+        _, _, _, k, comp, x, _, _, Tb, vb, gb = out
+        return k, comp, x, Tb.T, vb.T, gb.T      # (K, S) like the scans
+
+    kfin, comp, x, T, val, gn = jax.block_until_ready(run(keys0))
+    if int(np.min(np.asarray(kfin))) < K:
+        raise RuntimeError(
+            f"arrival-indexed jax backend hit its {cap}-arrival cap "
+            f"before finishing K={K} iterations (max_delay too tight?); "
+            f"use backend='serial'")
+    return comp, x, T, val, gn
+
+
 def simulate_batch_jax(strategy: AggregationStrategy,
                        model,
                        K: int,
@@ -257,12 +479,13 @@ def simulate_batch_jax(strategy: AggregationStrategy,
                        seeds: Sequence[int] = (0,),
                        record_every: int = 1,
                        use_pallas: bool = False) -> List[Trace]:
-    """One jitted ``(seeds, rounds, workers)`` m-sync program; returns the
-    per-seed :class:`Trace` list (timing-only traces have empty arrays,
-    like the scalar fast path).
+    """One jitted ``(seeds, ...)`` array program per strategy family
+    (m-sync round scan, Rennala renewal scan, Async/Ringmaster arrival
+    recursion); returns the per-seed :class:`Trace` list (timing-only
+    traces have empty arrays, like the scalar fast path).
 
-    The FixedTimes timing-only case hits a module-level jit cache (no
-    recompile across calls of the same shape); math/random-model programs
+    The FixedTimes timing-only m-sync case hits a module-level jit cache
+    (no recompile across calls of the same shape); the other programs
     close over the oracle and sampler, so they recompile per call — fine
     for sweep-sized S × K, not for tight loops of tiny calls.
     """
@@ -270,8 +493,7 @@ def simulate_batch_jax(strategy: AggregationStrategy,
     import jax.numpy as jnp
 
     strategy.bind(model.n)
-    _check_supported(strategy, model, problem)
-    m = strategy._m
+    kind = _check_supported(strategy, model, problem)
     n = model.n
     S = len(seeds)
     K = int(K)
@@ -281,18 +503,33 @@ def simulate_batch_jax(strategy: AggregationStrategy,
     fixed = isinstance(model, FixedTimes)
     math = problem is not None
 
-    if fixed and not math:
-        global _fixed_timing_jit
-        if _fixed_timing_jit is None:
-            _fixed_timing_jit = jax.jit(
-                _fixed_timing_run,
-                static_argnames=("S", "m", "K", "use_pallas"))
-        comp, T = jax.block_until_ready(_fixed_timing_jit(
-            jnp.asarray(model.taus), S=S, m=m, K=K, use_pallas=use_pallas))
-        x = val = gn = None
-    else:
-        comp, x, T, val, gn = _general_run(model, problem, m, n, S, K,
+    if kind == "msync":
+        m = strategy._m
+        used = m * K
+        if fixed and not math:
+            global _fixed_timing_jit
+            if _fixed_timing_jit is None:
+                _fixed_timing_jit = jax.jit(
+                    _fixed_timing_run,
+                    static_argnames=("S", "m", "K", "use_pallas"))
+            comp, T = jax.block_until_ready(_fixed_timing_jit(
+                jnp.asarray(model.taus), S=S, m=m, K=K,
+                use_pallas=use_pallas))
+            x = val = gn = None
+        else:
+            comp, x, T, val, gn = _general_run(model, problem, m, n, S, K,
+                                               gamma, use_pallas, seeds)
+    elif kind == "rennala":
+        used = int(strategy.batch) * K
+        comp, x, T, val, gn = _rennala_run(model, problem,
+                                           int(strategy.batch), n, S, K,
                                            gamma, use_pallas, seeds)
+    else:
+        used = K          # every server step consumes exactly one gradient
+        md = int(strategy.max_delay) if kind == "ringmaster" else K + 1
+        comp, x, T, val, gn = _arrival_run(
+            model, problem, md, bool(getattr(strategy, "delay_adaptive",
+                                             False)), n, S, K, gamma, seeds)
 
     comp = np.asarray(comp)
     T = np.asarray(T)                             # (K, S)
@@ -313,7 +550,7 @@ def simulate_batch_jax(strategy: AggregationStrategy,
             gns = np.concatenate([[gn0], gn[rec - 1, s]])
             traces.append(Trace(times, vals, gns, iterations=K,
                                 total_time=float(total[s]),
-                                gradients_used=m * K,
+                                gradients_used=used,
                                 gradients_computed=int(comp[s]),
                                 x_final=x_np[s]))
     else:
@@ -321,6 +558,6 @@ def simulate_batch_jax(strategy: AggregationStrategy,
         for s in range(S):
             traces.append(Trace(e, e, e, iterations=K,
                                 total_time=float(total[s]),
-                                gradients_used=m * K,
+                                gradients_used=used,
                                 gradients_computed=int(comp[s])))
     return traces

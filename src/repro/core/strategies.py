@@ -592,9 +592,21 @@ def _fast_msync_timing(m: int, model: TimeModel, K: int,
     exact ``(time, seq)`` key of the event engine, so for deterministic
     models this is bitwise-identical to the generic loop; for random
     models only the RNG draw order differs (same distribution).
+
+    Universal models (Assumption 5.1) run the same recursion with draws
+    replaced by the deterministic ``finish_times`` inversion (a restart at
+    time ``t`` finishes at the smallest ``t' >= t`` with unit power
+    integral) — the same vectorized inversion the generic engine uses, so
+    results are bitwise-identical to the event loop there too.
     """
     n = model.n
-    ft = np.asarray(model.sample_times(np.arange(n), rng), dtype=float).copy()
+    universal = isinstance(model, UniversalModel)
+    if universal:
+        ft = np.asarray(model.finish_times(np.arange(n), 0.0),
+                        dtype=float).copy()
+    else:
+        ft = np.asarray(model.sample_times(np.arange(n), rng),
+                        dtype=float).copy()
     fseq = np.arange(1, n + 1, dtype=np.int64)   # heap tie-break seqs
     ver = np.zeros(n, dtype=np.int64)
     seq_c = n
@@ -605,8 +617,12 @@ def _fast_msync_timing(m: int, model: TimeModel, K: int,
         if stale.size:
             # stale pops happen in (finish, seq) order; restarts draw then
             sp = stale[np.lexsort((fseq[stale], ft[stale]))]
-            d = np.asarray(model.sample_times(sp, rng), dtype=float)
-            e_time = ft[sp] + d
+            if universal:
+                e_time = np.asarray(model.finish_times(sp, ft[sp]),
+                                    dtype=float)
+            else:
+                d = np.asarray(model.sample_times(sp, rng), dtype=float)
+                e_time = ft[sp] + d
             rseq = seq_c + 1 + np.arange(sp.size, dtype=np.int64)
             seq_c += sp.size
             fresh = np.flatnonzero(ver == k)
@@ -631,7 +647,10 @@ def _fast_msync_timing(m: int, model: TimeModel, K: int,
         used += m
         t = T
         aw = np.sort(acc_workers)                 # bulk restart, worker order
-        ft[aw] = T + np.asarray(model.sample_times(aw, rng), dtype=float)
+        if universal:
+            ft[aw] = np.asarray(model.finish_times(aw, T), dtype=float)
+        else:
+            ft[aw] = T + np.asarray(model.sample_times(aw, rng), dtype=float)
         fseq[aw] = seq_c + 1 + np.arange(m, dtype=np.int64)
         seq_c += m
         ver[aw] = k + 1
@@ -654,24 +673,128 @@ def _row_lexsort(t_key: np.ndarray, seq_key: np.ndarray) -> np.ndarray:
     return np.take_along_axis(o1, o2, axis=1)
 
 
+def _counter_msync_timing_batch(m: int, model: TimeModel, K: int,
+                                rngs: List[np.random.Generator]
+                                ) -> List[Trace]:
+    """The ``rng_scheme="counter"`` engine for sampled (continuous-draw)
+    models: the whole ``(seeds, rounds, workers)`` time tensor comes from
+    chunked :meth:`TimeModel.sample_times_tensor` bulk draws and the round
+    body is pure O(n) array work.
+
+    Two deliberate departures from the exact-parity engine, both valid
+    because continuous draws tie with probability zero (distribution-equal
+    contract, DESIGN.md §3b):
+
+    * no event-heap sequence bookkeeping — wall-clock ties break by
+      worker index (the full per-row lexsorts were ~60% of the exact
+      engine's cost; ``np.partition`` selection replaces them);
+    * one shared draw row per round — the workers accepted in round ``k``
+      and the workers restarting from a stale pop in round ``k+1`` are
+      provably disjoint (an accepted worker's version is ``k+1``, so it
+      cannot be stale in round ``k+1``), so both consume entries of the
+      same fresh ``(S, n)`` row and the tensor needs ``K+1`` rows, not
+      ``2K+1``.
+    """
+    n = model.n
+    S = len(rngs)
+    all_w = np.arange(n)
+    # chunked pre-draw: <= ~48 MB of buffered rows at a time; generators
+    # are stateful, so successive chunks continue each seed's stream
+    chunk = min(K + 1, max(2, int(48e6 // max(S * n * 8, 1))))
+    buf = model.sample_times_tensor(all_w, chunk, rngs,
+                                    rng_scheme="counter")
+    pos = 0
+
+    def next_row() -> np.ndarray:
+        nonlocal buf, pos
+        if pos == buf.shape[1]:
+            buf = model.sample_times_tensor(all_w, chunk, rngs,
+                                            rng_scheme="counter")
+            pos = 0
+        row = buf[:, pos]
+        pos += 1
+        return row
+
+    ft = next_row().copy()
+    ver = np.zeros((S, n), dtype=np.int64)
+    computed = np.zeros(S, dtype=np.int64)
+    T = np.zeros((S, 1))
+    row = None                       # round k's stale-restart durations
+    for k in range(K):
+        stale = ver < k
+        any_stale = bool(stale.any())
+        if any_stale:
+            e_time = ft + row        # full row; only stale entries used
+            cand = np.where(stale, e_time, ft)
+        else:
+            cand = ft
+        T = np.partition(cand, m - 1, axis=1)[:, m - 1:m]     # (S, 1)
+        leq = cand <= T
+        if (leq.sum(axis=1) == m).all():
+            acc = leq
+        else:                        # boundary ties: quota by worker index
+            lt = cand < T
+            tie = cand == T
+            acc = lt | (tie & ((np.cumsum(tie, axis=1) - 1)
+                               < (m - lt.sum(axis=1))[:, None]))
+        if any_stale:
+            popped = stale & (ft < T)
+            ft = np.where(popped, e_time, ft)
+            ver = np.where(popped, k, ver)
+            computed += popped.sum(axis=1)
+        computed += m
+        row = next_row()             # accepted restarts now, stale next
+        ft = np.where(acc, T + row, ft)
+        ver = np.where(acc, k + 1, ver)
+
+    e = np.array([])
+    total = T[:, 0]
+    return [Trace(e, e, e, iterations=K, total_time=float(total[s]),
+                  gradients_used=m * K, gradients_computed=int(computed[s]))
+            for s in range(S)]
+
+
 def _fast_msync_timing_batch(m: int, model: TimeModel, K: int,
-                             rngs: List[np.random.Generator]) -> List[Trace]:
+                             rngs: List[np.random.Generator],
+                             rng_scheme: str = "stream") -> List[Trace]:
     """Seed-batched :func:`_fast_msync_timing`: ``S`` independent runs as
     one ``(seeds, workers)`` array program over ``K`` rounds.
 
     State is carried in ``(S, n)`` matrices (finish times, tie-break seqs,
     versions) and each round reduces to masked order statistics — the
-    ``(seeds, rounds, workers)`` batching of the scalar fast path. RNG
-    parity is exact per seed: deterministic models draw with no RNG at all
-    (a pure broadcast of ``tau``), and random models draw from each seed's
-    own generator in the scalar path's exact order (stale restarts in pop
-    order, then accepted restarts in worker order), so
-    ``batch[rngs=[default_rng(s)]]`` is bitwise-identical to the scalar
-    fast path at seed ``s`` for every model.
+    ``(seeds, rounds, workers)`` batching of the scalar fast path.
+
+    ``rng_scheme`` (DESIGN.md §3b) selects how random models draw:
+
+    * ``"stream"`` — exact per-seed RNG parity: each seed's generator is
+      consumed in the scalar path's exact order (stale restarts in pop
+      order, then accepted restarts in worker order), so
+      ``batch[rngs=[default_rng(s)]]`` is bitwise-identical to the scalar
+      fast path at seed ``s`` for every model. The per-round per-seed
+      draw loops are the price of that parity.
+    * ``"counter"`` — sampled models delegate to
+      :func:`_counter_msync_timing_batch`: the whole
+      ``(seeds, rounds, workers)`` time tensor comes from
+      :meth:`TimeModel.sample_times_tensor` bulk draws (callers pass
+      :func:`~repro.core.time_models.philox_rngs` generators) and the
+      round body is partition-based O(n) selection. Distribution-equal
+      to ``"stream"``, not stream-equal — and the per-round body loses
+      both the per-seed draw loops and the full lexsorts, which is where
+      the sweep-scale speedup lives.
+
+    Deterministic models draw with no RNG at all (a pure broadcast of
+    ``tau``; both schemes identical). Universal models (Assumption 5.1)
+    are deterministic too: one scalar fast-path run is computed and
+    replicated across seeds.
     """
     n = model.n
     S = len(rngs)
+    if isinstance(model, UniversalModel):
+        tr = _fast_msync_timing(m, model, K, np.random.default_rng(0))
+        return [dataclasses.replace(tr) for _ in range(S)]
     taus = model.taus if type(model) is FixedTimes else None
+    if rng_scheme == "counter" and taus is None:
+        return _counter_msync_timing_batch(m, model, K, rngs)
     all_w = np.arange(n)
     ft = model.sample_times_seeds(all_w, rngs).astype(float)
     fseq = np.broadcast_to(np.arange(1, n + 1, dtype=np.int64),
@@ -774,9 +897,10 @@ def simulate(strategy: Union[str, AggregationStrategy],
     # Timing-only m-sync admits an exact round-vectorized evaluation —
     # worth ~10-100x at paper scale (n = 1000). Only for strategies with
     # unmodified m-sync arrival semantics (subclasses that override
-    # on_arrival/on_step, wrappers, alarms, or universal models fall
-    # through to the generic event loop).
-    if (problem is None and not isinstance(model, UniversalModel)
+    # on_arrival/on_step, wrappers, or alarms fall through to the generic
+    # event loop). Universal models run the same recursion with the
+    # deterministic finish-time inversion in place of draws.
+    if (problem is None
             and not strategy.uses_alarm
             and isinstance(strategy, MSync)
             and type(strategy).on_arrival is MSync.on_arrival
@@ -884,7 +1008,7 @@ def simulate(strategy: Union[str, AggregationStrategy],
         if decision is Decision.DISCARD:
             if arrival:                             # restart at the iterate
                 if universal:
-                    tf = model.time_for_integral(w, t, 1.0)
+                    tf = float(model.finish_times([w], t)[0])
                 else:
                     tf = t + model.sample_time(w, rng)
                 seq += 1
@@ -930,7 +1054,7 @@ def simulate(strategy: Union[str, AggregationStrategy],
                     idle.append(w)
                 else:
                     if universal:
-                        tf = model.time_for_integral(w, t, 1.0)
+                        tf = float(model.finish_times([w], t)[0])
                     else:
                         tf = t + model.sample_time(w, rng)
                     seq += 1
@@ -946,7 +1070,7 @@ def simulate(strategy: Union[str, AggregationStrategy],
             idle.append(w)
         elif arrival:
             if universal:
-                tf = model.time_for_integral(w, t, 1.0)
+                tf = float(model.finish_times([w], t)[0])
             else:
                 tf = t + model.sample_time(w, rng)
             seq += 1

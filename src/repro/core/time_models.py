@@ -27,6 +27,14 @@ the distribution factories below install NumPy-vectorized samplers), so a
 round that restarts many workers costs one vector op instead of ``n``
 Python calls. The default falls back to per-worker ``sample_time`` calls
 in worker order, which keeps the RNG stream identical to the scalar path.
+``sample_times_tensor`` is the multi-seed sweep engine's bulk draw: the
+entire ``(seeds, rounds, workers)`` time tensor in one call per model,
+either from per-seed Philox counter streams (``rng_scheme="counter"``,
+the fast sweep default) or replaying the scalar per-round stream order
+(``"stream"``). Every ``SubExponentialTimes`` factory also carries a
+``jax_sampler`` for the device-resident ``simulate_batch`` backend, and
+``UniversalModel.finish_times`` is a batched closed-form inversion of
+the cumulative-power grid (the event engine's universal hot path).
 
 Every random model also reports its ``(tau_i, R)`` sub-exponential
 certificate where known, so the theory in :mod:`repro.core.complexity` can be
@@ -45,6 +53,7 @@ __all__ = [
     "TimeModel",
     "FixedTimes",
     "SubExponentialTimes",
+    "philox_rngs",
     "truncated_normal_times",
     "exponential_times",
     "shifted_exponential_times",
@@ -57,6 +66,29 @@ __all__ = [
     "powers_figure3",
     "powers_figure4",
 ]
+
+
+def philox_rngs(seeds: Sequence[int]) -> list:
+    """One counter-based generator per seed (Philox, 128-bit spawn key).
+
+    ``philox_rngs([s])[0]`` depends only on the seed *value* ``s`` — not
+    on the position of ``s`` in the sweep or on the other seeds — so any
+    sweep that includes seed ``s`` draws the same row for it. These are
+    the ``rng_scheme="counter"`` streams: independent of (and therefore
+    NOT stream-equal to) the ``np.random.default_rng(s)`` streams the
+    scalar ``simulate()`` path consumes.
+    """
+    return [np.random.Generator(np.random.Philox(
+        key=np.random.SeedSequence(int(s)).generate_state(2, np.uint64)))
+        for s in seeds]
+
+
+def _as_rng(key, rng_scheme: str):
+    if isinstance(key, np.random.Generator):
+        return key
+    if rng_scheme == "counter":
+        return philox_rngs([key])[0]
+    return np.random.default_rng(int(key))
 
 
 class TimeModel:
@@ -91,6 +123,47 @@ class TimeModel:
         return np.stack([np.asarray(self.sample_times(workers, rng),
                                     dtype=float) for rng in rngs])
 
+    def sample_times_tensor(self, workers: Sequence[int], rounds: int,
+                            seed_keys: Sequence,
+                            rng_scheme: str = "counter") -> np.ndarray:
+        """One ``(seeds, rounds, workers)`` tensor of per-gradient times.
+
+        This is the sweep engine's bulk draw: the *entire* time tensor
+        for a multi-seed run comes out of one call per model instead of
+        ``seeds x rounds`` small draws. ``seed_keys`` are seed ints or
+        already-constructed ``np.random.Generator`` instances (stateful —
+        successive calls continue each seed's stream, which is how the
+        batched engine chunks very long horizons).
+
+        ``rng_scheme`` picks the documented reproducibility contract:
+
+        * ``"counter"`` (default) — one tiled vectorized draw per seed
+          from its Philox counter stream (:func:`philox_rngs`). Row ``s``
+          is a pure function of the seed value; entry ``[s, r, j]`` is an
+          independent draw from worker ``workers[j]``'s marginal.
+          Distribution-equal to — but NOT stream-equal with — the scalar
+          ``simulate()`` path.
+        * ``"stream"`` — row ``[s, r]`` is the ``r``-th successive
+          :meth:`sample_times` call on ``np.random.default_rng(s)``, i.e.
+          exactly the values a per-round loop would consume.
+        """
+        if rng_scheme not in ("counter", "stream"):
+            raise ValueError(f"unknown rng_scheme {rng_scheme!r}; "
+                             "use 'counter' or 'stream'")
+        workers = np.asarray(workers, dtype=int)
+        W = len(workers)
+        out = np.empty((len(seed_keys), int(rounds), W), dtype=float)
+        tiled = np.tile(workers, int(rounds))
+        for si, key in enumerate(seed_keys):
+            rng = _as_rng(key, rng_scheme)
+            if rng_scheme == "counter":
+                out[si] = np.asarray(self.sample_times(tiled, rng),
+                                     dtype=float).reshape(int(rounds), W)
+            else:
+                for r in range(int(rounds)):
+                    out[si, r] = self.sample_times(workers, rng)
+        return out
+
     def mean_times(self) -> np.ndarray:
         """``tau_i = E[time for worker i]``, sorted or not — as configured."""
         raise NotImplementedError
@@ -124,6 +197,16 @@ class FixedTimes(TimeModel):
         # deterministic: no RNG consumed, one broadcast for all seeds
         return np.broadcast_to(self.taus[np.asarray(workers, dtype=int)],
                                (len(rngs), len(workers))).copy()
+
+    def sample_times_tensor(self, workers: Sequence[int], rounds: int,
+                            seed_keys: Sequence,
+                            rng_scheme: str = "counter") -> np.ndarray:
+        if rng_scheme not in ("counter", "stream"):
+            raise ValueError(f"unknown rng_scheme {rng_scheme!r}; "
+                             "use 'counter' or 'stream'")
+        return np.broadcast_to(
+            self.taus[np.asarray(workers, dtype=int)],
+            (len(seed_keys), int(rounds), len(workers))).copy()
 
     def mean_times(self) -> np.ndarray:
         return self.taus
@@ -232,9 +315,22 @@ def truncated_normal_times(mus: Sequence[float], sigma: float
                 return out
             out[bad] = rng.normal(mus[workers][bad], sigma)
 
+    def jax_sampler(key):
+        # exact bounded sampling (no rejection loop): truncate the
+        # standard normal to [(0 - mu)/sigma, inf) and rescale —
+        # distribution-equal to the NumPy rejection sampler
+        import jax
+        import jax.numpy as jnp
+        if sigma == 0:
+            return jnp.maximum(jnp.asarray(mus), 0.0)
+        z = jax.random.truncated_normal(key, (0.0 - mus) / sigma, jnp.inf,
+                                        mus.shape)
+        return mus + sigma * z
+
     return SubExponentialTimes(taus, sampler, R=float(sigma),
                                name=f"truncnorm(sigma={sigma})",
-                               batch_sampler=batch_sampler)
+                               batch_sampler=batch_sampler,
+                               jax_sampler=jax_sampler)
 
 
 def exponential_times(lam: float, n: int) -> SubExponentialTimes:
@@ -328,11 +424,17 @@ def chi2_times(dofs: Sequence[int]) -> SubExponentialTimes:
     def sampler(i: int, rng: np.random.Generator) -> float:
         return rng.chisquare(dofs[i])
 
+    def jax_sampler(key):
+        # chi^2_k == Gamma(shape k/2, scale 2)
+        import jax
+        return 2.0 * jax.random.gamma(key, dofs / 2.0)
+
     return SubExponentialTimes(dofs.copy(), sampler,
                                R=float(2.0 * np.sqrt(np.max(dofs))),
                                name="chi2",
                                batch_sampler=lambda w, rng:
-                                   rng.chisquare(dofs[w]))
+                                   rng.chisquare(dofs[w]),
+                               jax_sampler=jax_sampler)
 
 
 # ---------------------------------------------------------------------------
@@ -400,11 +502,78 @@ class UniversalModel:
                 lo = mid
         return hi
 
-    def finish_times(self, workers: Sequence[int], t0: float,
+    def _cum_at_vec(self, idx: np.ndarray, t: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`_cum_at`: cumulative integral of ``v_i`` at
+        per-worker times ``t`` (same segment convention as the scalar)."""
+        g = self.grid
+        t = np.asarray(t, dtype=float)
+        tf = np.where(np.isfinite(t), t, g[-1])     # placeholder; masked below
+        j = np.clip(np.searchsorted(g, tf, side="left") - 1, 0, len(g) - 2)
+        dt = tf - g[j]
+        h = g[j + 1] - g[j]
+        v0 = self.powers[idx, j]
+        v1 = self.powers[idx, j + 1]
+        vt = v0 + (v1 - v0) * dt / h
+        mid = self.cum[idx, j] + 0.5 * (v0 + vt) * dt
+        tail = self.cum[idx, -1] + self.powers[idx, -1] * (tf - g[-1])
+        out = np.where(tf <= g[0], 0.0, np.where(tf >= g[-1], tail, mid))
+        # t = inf: infinite tail power integral (inf if tail v > 0 else
+        # the finite grid total — the 0 * inf nan is never the answer)
+        return np.where(np.isfinite(t), out,
+                        np.where(self.powers[idx, -1] > 0, np.inf,
+                                 self.cum[idx, -1]))
+
+    def finish_times(self, workers: Sequence[int], t0,
                      target: float = 1.0) -> np.ndarray:
-        """Batched :meth:`time_for_integral` for the event engine."""
-        return np.array([self.time_for_integral(int(i), t0, target)
-                         for i in workers])
+        """Batched :meth:`time_for_integral` (the event engine's hot path).
+
+        ``t0`` is a scalar or a per-worker array. Replaces the per-worker
+        80-iteration Python bisection with one vectorized inversion:
+        a batched binary search over the per-worker cumulative-power grid
+        rows finds the crossing segment, then the quadratic
+        ``cum(t) = cum_j + v0*dt + 0.5*(v1-v0)/h*dt^2`` (exact for the
+        piecewise-linear powers) is solved in closed form. Agrees with
+        the scalar bisection to ~1e-12 relative (tested at 1e-9).
+        """
+        idx = np.asarray(workers, dtype=int)
+        t0 = np.broadcast_to(np.asarray(t0, dtype=float), idx.shape).copy()
+        g = self.grid
+        T = len(g)
+        base = self._cum_at_vec(idx, t0)
+        want = base + target
+        tail_v = self.powers[idx, -1]
+        cum_end = self.cum[idx, -1]
+        overflow = cum_end < want                    # crossing past the grid
+        with np.errstate(divide="ignore", invalid="ignore"):
+            t_tail = g[-1] + (want - cum_end) / tail_v
+        t_tail = np.where(tail_v > 0, t_tail, np.inf)
+        # first grid index with cum >= want (per-row binary search; rows
+        # differ so np.searchsorted cannot batch this directly)
+        want_in = np.where(overflow, cum_end, want)  # keep the search bounded
+        lo = np.zeros(idx.shape, dtype=np.int64)
+        hi = np.full(idx.shape, T - 1, dtype=np.int64)
+        for _ in range(int(np.ceil(np.log2(max(T, 2)))) + 1):
+            mid = (lo + hi) // 2
+            ge = self.cum[idx, mid] >= want_in
+            hi = np.where(ge, mid, hi)
+            lo = np.where(ge, lo, np.minimum(mid + 1, T - 1))
+        jj = np.maximum(hi, 1)                       # crossing in [jj-1, jj]
+        rem = np.where(overflow, 0.0, want - self.cum[idx, jj - 1])
+        v0 = self.powers[idx, jj - 1]
+        v1 = self.powers[idx, jj]
+        h = g[jj] - g[jj - 1]
+        slope = (v1 - v0) / h
+        # 0.5*slope*dt^2 + v0*dt = rem, stable root (exact in the linear
+        # slope -> 0 limit): dt = 2*rem / (v0 + sqrt(v0^2 + 2*slope*rem))
+        with np.errstate(divide="ignore", invalid="ignore"):
+            disc = np.maximum(v0 * v0 + 2.0 * slope * rem, 0.0)
+            den = v0 + np.sqrt(disc)
+            dt = np.where(den > 0, 2.0 * rem / np.where(den > 0, den, 1.0),
+                          0.0)
+        t_in = g[jj - 1] + np.where(rem > 0, dt, 0.0)
+        out = np.where(overflow, t_tail, np.maximum(t_in, t0))
+        # never-started computations (t0 = inf) never finish
+        return np.where(np.isfinite(t0), out, np.inf)
 
 
 @dataclasses.dataclass

@@ -77,7 +77,8 @@ def run_experiment(strategy,
                    gamma: float = 0.0,
                    record_every: int = 1,
                    tol_grad_sq: Optional[float] = None,
-                   backend: str = "auto",
+                   backend: str = "fastest",
+                   rng_scheme: str = "counter",
                    use_pallas: bool = False,
                    scenario_kwargs: Optional[Dict[str, Any]] = None,
                    target_frac: Optional[float] = None,
@@ -91,6 +92,13 @@ def run_experiment(strategy,
     enables time-to-target reporting: wall-clock until ``||∇f||²`` falls
     to that fraction of its initial value, quantiled across seeds.
     ``json_path`` writes the summary as a JSON artifact.
+
+    The default ``backend="fastest"`` picks the fastest *eligible*
+    engine per grid point — ``jax`` for device-scale sweeps
+    (``seeds * K * n >= repro.core.batch.JAX_MIN_WORK``), else the
+    seed-batched NumPy ``vectorized`` engine, else ``serial`` — and the
+    backend that actually ran is recorded in the JSON artifact's
+    ``meta.backend`` (plus per-row ``backend``/``rng_scheme``).
     """
     if isinstance(scenario, str):
         model = make_scenario(scenario, n, **(scenario_kwargs or {}))
@@ -104,7 +112,7 @@ def run_experiment(strategy,
     batch = simulate_batch(strategy, model, K, problem=problem, gamma=gamma,
                            seeds=seeds, grid=grid, record_every=record_every,
                            tol_grad_sq=tol_grad_sq, backend=backend,
-                           use_pallas=use_pallas)
+                           rng_scheme=rng_scheme, use_pallas=use_pallas)
     rows = batch.summary(target_frac=target_frac)
     for row in rows:
         row["scenario"] = scen_name
@@ -113,6 +121,7 @@ def run_experiment(strategy,
     meta = {"strategy": batch.strategy, "scenario": scen_name, "n": n,
             "K": K, "seeds": list(map(int, batch.seeds)),
             "backend": batch.backend,
+            "rng_scheme": batch.rng_scheme,
             "grid": batch.grid if grid else None}
     result = ExperimentResult(name=name or f"{batch.strategy}@{scen_name}",
                               meta=meta, batch=batch, rows=rows)

@@ -1,13 +1,17 @@
 """Jit'd public wrappers for the Pallas kernels.
 
 ``interpret`` defaults to True because this container is CPU-only; the
-launcher flips it to False on real TPU. The model code reaches these via
+``REPRO_PALLAS_INTERPRET`` environment variable overrides it
+(``REPRO_PALLAS_INTERPRET=0`` compiles the kernels — the real-TPU CI
+lane and the launcher set this; anything else, or unset, keeps the
+CPU-safe interpreter). The model code reaches these via
 ``cfg/impl == "pallas"`` (models/attention.py, models/ssm.py).
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -19,7 +23,9 @@ from .rwkv_scan import rwkv_scan_pallas
 
 __all__ = ["flash_attention", "rwkv_scan", "moe_gmm", "mth_smallest"]
 
-INTERPRET = True  # CPU container; set False on TPU
+# CPU container default: interpret. REPRO_PALLAS_INTERPRET=0 => compiled
+# Pallas lowering (real TPU runs / the opt-in CI lane).
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
 @functools.partial(jax.jit, static_argnames=("m",))

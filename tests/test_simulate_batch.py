@@ -46,19 +46,101 @@ def test_single_seed_reproduces_scalar_simulate(name):
     lambda: uniform_times(np.sqrt(np.arange(1, 13)), 0.4),
 ])
 def test_vectorized_backend_exact_parity(model_fn):
-    """The seed-batched fast path must match the scalar fast path exactly
-    per seed — including RNG-stream parity for random models."""
+    """ISSUE 3 acceptance: rng_scheme="stream" must match the scalar fast
+    path exactly per seed — including RNG-stream parity for random
+    models. (The default "counter" scheme is distribution-equal only.)"""
     model = model_fn()
     for m in (1, 3, model.n):
         tb = simulate_batch(("msync", {"m": m}), model, K=31,
-                            seeds=[0, 3, 11], backend="vectorized")
+                            seeds=[0, 3, 11], backend="vectorized",
+                            rng_scheme="stream")
         assert tb.backend == "vectorized"
+        assert tb.rng_scheme == "stream"
         for s, tr in zip([0, 3, 11], tb.traces[0]):
             sc = simulate(MSync(m=m), model, K=31, seed=s)
             assert tr.total_time == sc.total_time
             assert tr.gradients_used == sc.gradients_used
             assert tr.gradients_computed == sc.gradients_computed
             assert tr.iterations == sc.iterations
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_stream_scheme_timing_parity_every_strategy(name):
+    """ISSUE 3 acceptance: rng_scheme="stream" keeps exact
+    simulate_batch(seeds=[s]) == simulate(seed=s) parity for every
+    registered strategy on the timing-only path (auto backend: the
+    m-sync family rides the seed-batched engine, the rest serial)."""
+    model = uniform_times(np.ones(5), 0.3)
+    for s in (0, 5):
+        tb = simulate_batch(name, model, K=12, seeds=[s],
+                            rng_scheme="stream")
+        sc = simulate(STRATEGIES[name](), model, K=12, seed=s)
+        tr = tb.traces[0][0]
+        assert tr.total_time == sc.total_time
+        assert tr.gradients_used == sc.gradients_used
+        assert tr.gradients_computed == sc.gradients_computed
+
+
+def test_counter_scheme_deterministic_and_sweep_independent():
+    """ISSUE 3 tentpole: the counter scheme's row for seed s is a pure
+    function of the seed value — identical across repeated calls and
+    independent of which other seeds are in the sweep."""
+    model = exponential_times(1.0, 12)
+    spec = ("msync", {"m": 3})
+    solo = simulate_batch(spec, model, K=25, seeds=[3],
+                          backend="vectorized", rng_scheme="counter")
+    both = simulate_batch(spec, model, K=25, seeds=[0, 3],
+                          backend="vectorized", rng_scheme="counter")
+    again = simulate_batch(spec, model, K=25, seeds=[3],
+                           backend="vectorized", rng_scheme="counter")
+    assert solo.traces[0][0].total_time == both.traces[0][1].total_time
+    assert solo.traces[0][0].total_time == again.traces[0][0].total_time
+    assert solo.traces[0][0].gradients_computed \
+        == both.traces[0][1].gradients_computed
+
+
+def test_counter_scheme_distribution_matches_stream():
+    """Counter draws are distribution-equal to stream draws: cross-seed
+    means of total time and computed-gradient counts agree."""
+    model = exponential_times(1.0, 24)
+    spec = ("msync", {"m": 6})
+    a = simulate_batch(spec, model, K=30, seeds=64, backend="vectorized",
+                       rng_scheme="counter")
+    b = simulate_batch(spec, model, K=30, seeds=64, backend="vectorized",
+                       rng_scheme="stream")
+    assert a.total_time.mean() == pytest.approx(b.total_time.mean(),
+                                                rel=0.1)
+    assert a.stat("gradients_computed").mean() == pytest.approx(
+        b.stat("gradients_computed").mean(), rel=0.1)
+    # counter for deterministic models is the exact (draw-free) engine
+    fixed = FixedTimes(np.arange(1.0, 9.0))
+    ca = simulate_batch("msync", fixed, K=9, seeds=2,
+                        backend="vectorized", rng_scheme="counter")
+    cb = simulate_batch("msync", fixed, K=9, seeds=2,
+                        backend="vectorized", rng_scheme="stream")
+    np.testing.assert_array_equal(ca.total_time, cb.total_time)
+    with pytest.raises(ValueError):
+        simulate_batch("msync", fixed, K=3, seeds=2, rng_scheme="philox")
+
+
+def test_vectorized_backend_universal_model():
+    """ISSUE 3 tentpole: universal models (deterministic) run on the
+    vectorized backend — one fast-path run replicated across seeds,
+    matching the generic event loop."""
+    from repro.core import powers_figure3
+    from repro.core.strategies import Dropout
+    model = powers_figure3(n=10, seed=0, t_max=200.0)
+    tb = simulate_batch(("msync", {"m": 4}), model, K=15, seeds=3,
+                        backend="vectorized")
+    assert tb.backend == "vectorized"
+    generic = simulate(Dropout(MSync(m=4), p=0.0), model, K=15, seed=0)
+    for tr in tb.traces[0]:
+        assert tr.total_time == pytest.approx(generic.total_time,
+                                              rel=1e-9)
+        assert tr.gradients_computed == generic.gradients_computed
+    # auto picks it too (it used to be serial-only)
+    assert simulate_batch("msync", model, K=5, seeds=2).backend \
+        == "vectorized"
 
 
 def test_auto_backend_selection():
@@ -199,11 +281,110 @@ def test_jax_backend_random_model_distribution_equal():
 def test_jax_backend_rejects_unsupported():
     model = FixedTimes(np.ones(4))
     with pytest.raises(NotImplementedError):
-        simulate_batch("async", model, K=3, seeds=2, backend="jax")
+        simulate_batch("malenia", model, K=3, seeds=2, backend="jax")
+    with pytest.raises(NotImplementedError):
+        simulate_batch("deadline", model, K=3, seeds=2, backend="jax")
     prob = quadratic_worst_case(d=10, p=0.5)
     with pytest.raises(NotImplementedError):
         simulate_batch("msync", model, K=3, seeds=2, problem=prob,
                        gamma=0.1, backend="jax")
+
+
+# ----------------------------------------- jax backend beyond the m-sync
+def _generic_fixed(n, lo=0.5, hi=3.0, seed=42):
+    rng = np.random.default_rng(seed)
+    return FixedTimes(rng.uniform(lo, hi, n))
+
+
+def test_jax_backend_rennala_matches_serial():
+    """ISSUE 3 acceptance: backend="jax" accepts Rennala specs; on a
+    generic-position deterministic model the renewal-batched scan matches
+    the serial event engine to NumPy tolerance."""
+    model = _generic_fixed(14)
+    for B in (1, 5, 20):
+        tb_j = simulate_batch(("rennala", {"batch": B}), model, K=18,
+                              seeds=3, backend="jax")
+        tb_s = simulate_batch(("rennala", {"batch": B}), model, K=18,
+                              seeds=3, backend="serial")
+        np.testing.assert_allclose(tb_j.total_time, tb_s.total_time,
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(tb_j.stat("gradients_used"),
+                                      tb_s.stat("gradients_used"))
+        np.testing.assert_array_equal(tb_j.stat("gradients_computed"),
+                                      tb_s.stat("gradients_computed"))
+
+
+def test_jax_backend_async_and_ringmaster_match_serial():
+    """ISSUE 3 acceptance: the arrival-indexed jax recursion matches the
+    serial event engine for Async and Ringmaster (timing-only)."""
+    model = _generic_fixed(12, seed=7)
+    for spec in ("async", ("ringmaster", {"max_delay": 3})):
+        tb_j = simulate_batch(spec, model, K=25, seeds=2, backend="jax")
+        tb_s = simulate_batch(spec, model, K=25, seeds=2,
+                              backend="serial")
+        np.testing.assert_allclose(tb_j.total_time, tb_s.total_time,
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(tb_j.stat("gradients_used"),
+                                      tb_s.stat("gradients_used"))
+        np.testing.assert_array_equal(tb_j.stat("gradients_computed"),
+                                      tb_s.stat("gradients_computed"))
+
+
+def test_jax_backend_async_math_path_with_delayed_gradients():
+    """Async evaluates each gradient at the iterate its worker STARTED
+    from; the jax per-worker snapshot buffer must reproduce the engine's
+    snapshot dict (deterministic oracle: p=1)."""
+    from repro.core.batch_jax import quadratic_worst_case_jax
+    model = _generic_fixed(10, seed=1)
+    prob_np = quadratic_worst_case(d=30, p=1.0)
+    prob_jx = quadratic_worst_case_jax(d=30, p=1.0)
+    tb_np = simulate_batch("async", model, K=20, problem=prob_np,
+                           gamma=0.4, seeds=2, record_every=5,
+                           backend="serial")
+    tb_jx = simulate_batch("async", model, K=20, problem=prob_jx,
+                           gamma=0.4, seeds=2, record_every=5,
+                           backend="jax")
+    a, b = tb_np.traces[0][0], tb_jx.traces[0][0]
+    np.testing.assert_allclose(a.times, b.times, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(a.values, b.values, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(a.grad_norms, b.grad_norms, rtol=1e-3,
+                               atol=1e-5)
+
+
+def test_jax_backend_rennala_random_model_distribution_equal():
+    model = exponential_times(1.0, 16)
+    a = simulate_batch(("rennala", {"batch": 4}), model, K=15, seeds=48,
+                       backend="jax").total_time
+    b = simulate_batch(("rennala", {"batch": 4}), model, K=15, seeds=48,
+                       backend="serial").total_time
+    assert a.mean() == pytest.approx(b.mean(), rel=0.15)
+    assert len(np.unique(a)) > 1
+
+
+def test_fastest_backend_resolution():
+    """backend="fastest" stays on the NumPy engines below JAX_MIN_WORK
+    and reports whichever backend actually ran; the TraceBatch records
+    the EFFECTIVE rng contract of that backend."""
+    model = FixedTimes(np.arange(1.0, 9.0))
+    tb = simulate_batch("msync", model, K=3, seeds=2, backend="fastest")
+    assert tb.backend == "vectorized"
+    tb = simulate_batch("malenia", model, K=3, seeds=2, backend="fastest")
+    assert tb.backend == "serial"
+    assert tb.rng_scheme == "stream"      # serial = scalar streams
+    # a JaxProblem bypasses the size gate: only jax can execute it
+    from repro.core.batch_jax import quadratic_worst_case_jax
+    tb = simulate_batch("msync", model, K=3,
+                        problem=quadratic_worst_case_jax(d=10, p=1.0),
+                        gamma=0.1, seeds=2, backend="fastest")
+    assert tb.backend == "jax"
+    assert tb.rng_scheme == "jax.random"
+    # an explicit stream request on a sampled model stays off jax even
+    # at jax-worthy sizes (jax cannot honor stream parity)
+    em = exponential_times(1.0, 1000)
+    tb = simulate_batch(("msync", {"m": 10}), em, K=40, seeds=32,
+                        backend="fastest", rng_scheme="stream")
+    assert tb.backend == "vectorized"
+    assert tb.rng_scheme == "stream"
 
 
 # ------------------------------------------------------------ order stats

@@ -10,6 +10,22 @@ from repro.core import (FixedTimes, PartialParticipationModel,
                         gamma_times, powers_figure3, powers_figure4,
                         shifted_exponential_times, truncated_normal_times,
                         uniform_times)
+from repro.core.time_models import philox_rngs
+
+
+def _all_subexp_factories(n=8):
+    """Every SubExponentialTimes factory, with whether its batch_sampler
+    is documented stream-equal to sequential scalar draws (truncnorm's
+    vectorized rejection resamples in a different order)."""
+    taus = np.linspace(1.0, 4.0, n)
+    return [
+        (exponential_times(0.8, n), True),
+        (shifted_exponential_times(taus, np.full(n, 2.0)), True),
+        (gamma_times(taus, var=0.25), True),
+        (uniform_times(taus, 0.5), True),
+        (chi2_times(1 + np.arange(n) % 5), True),
+        (truncated_normal_times(taus, 0.5), False),
+    ]
 
 
 def test_fixed_times_sorted_factories():
@@ -32,6 +48,75 @@ def test_subexp_samplers_match_reported_means():
         for i in range(model.n):
             s = np.mean([model.sample_time(i, rng) for _ in range(4000)])
             assert s == pytest.approx(model.mean_times()[i], rel=0.1), model.name
+
+
+def test_batch_and_jax_sampler_parity_sweep():
+    """ISSUE 3 satellite: for EVERY SubExponentialTimes factory, the
+    batch_sampler and jax_sampler agree with the scalar sampler —
+    distribution-equal via moment checks everywhere, stream-equal where
+    documented (all but truncnorm's rejection resampling)."""
+    import jax
+
+    for model, stream_equal in _all_subexp_factories():
+        n = model.n
+        assert model.batch_sampler is not None, model.name
+        assert model.jax_sampler is not None, model.name
+        # batch_sampler moments
+        rng = np.random.default_rng(0)
+        draws = np.stack([model.sample_times(np.arange(n), rng)
+                          for _ in range(3000)])
+        np.testing.assert_allclose(draws.mean(axis=0), model.mean_times(),
+                                   rtol=0.1, err_msg=model.name)
+        # jax_sampler moments (mean AND variance against NumPy draws)
+        keys = jax.random.split(jax.random.PRNGKey(0), 3000)
+        jdraws = np.asarray(jax.vmap(model.jax_sampler)(keys))
+        np.testing.assert_allclose(jdraws.mean(axis=0),
+                                   model.mean_times(), rtol=0.1,
+                                   err_msg=model.name)
+        np.testing.assert_allclose(jdraws.var(axis=0), draws.var(axis=0),
+                                   rtol=0.25, atol=1e-3,
+                                   err_msg=model.name)
+        assert np.all(jdraws >= 0.0), model.name
+        # stream equality: one batched call == sequential scalar draws
+        if stream_equal:
+            a = model.sample_times(np.arange(n), np.random.default_rng(5))
+            r = np.random.default_rng(5)
+            b = np.array([model.sample_time(i, r) for i in range(n)])
+            np.testing.assert_array_equal(a, b, err_msg=model.name)
+
+
+def test_sample_times_tensor_contract():
+    """Stream rows replay successive sample_times calls; counter rows are
+    per-seed reproducible pure functions of the seed value."""
+    model = gamma_times(np.linspace(1.0, 3.0, 6), var=0.25)
+    w = np.arange(6)
+    # stream: row r == r-th successive sample_times call on default_rng(s)
+    got = model.sample_times_tensor(w, 3, [0, 9], rng_scheme="stream")
+    for row, s in zip(got, (0, 9)):
+        rng = np.random.default_rng(s)
+        for r in range(3):
+            np.testing.assert_array_equal(row[r],
+                                          model.sample_times(w, rng))
+    # counter: deterministic per seed value, regardless of sweep
+    a = model.sample_times_tensor(w, 4, [3], rng_scheme="counter")
+    b = model.sample_times_tensor(w, 4, [0, 3], rng_scheme="counter")
+    np.testing.assert_array_equal(a[0], b[1])
+    # stateful generators continue the stream across chunked calls
+    rngs = philox_rngs([3])
+    c1 = model.sample_times_tensor(w, 2, rngs, rng_scheme="counter")
+    c2 = model.sample_times_tensor(w, 2, rngs, rng_scheme="counter")
+    np.testing.assert_array_equal(np.concatenate([c1, c2], axis=1), b[1:])
+    # moments survive the tiled bulk draw
+    big = model.sample_times_tensor(w, 2000, [0], rng_scheme="counter")
+    np.testing.assert_allclose(big[0].mean(axis=0), model.mean_times(),
+                               rtol=0.1)
+    with pytest.raises(ValueError):
+        model.sample_times_tensor(w, 2, [0], rng_scheme="philox")
+    # FixedTimes: pure broadcast, no RNG
+    fixed = FixedTimes(np.array([2.0, 1.0]))
+    np.testing.assert_array_equal(
+        fixed.sample_times_tensor([1, 0], 2, [0, 1]),
+        np.full((2, 2, 2), [1.0, 2.0]))
 
 
 def test_all_samples_nonnegative():
@@ -75,6 +160,56 @@ def test_universal_integral_additivity(v, t0, dt):
         m.integral(0, t0, mid) + m.integral(0, mid, t0 + dt), rel=1e-6,
         abs=1e-9)
     assert total == pytest.approx(v * dt, rel=1e-6, abs=1e-9)
+
+
+def test_finish_times_vectorized_matches_scalar_inversion():
+    """ISSUE 3 satellite: the batched searchsorted/quadratic inversion
+    must match the scalar 80-iteration bisection to 1e-9 on the
+    Figure 3/4 grids, including the constant-tail extrapolation."""
+    for model in (powers_figure3(n=12, seed=0, t_max=80.0),
+                  powers_figure4(n=12, seed=1, t_max=80.0)):
+        w = np.arange(model.n)
+        for t0 in (0.0, 2.31, 17.9, 79.0):
+            got = model.finish_times(w, t0, 1.0)
+            want = np.array([model.time_for_integral(i, t0, 1.0)
+                             for i in range(model.n)])
+            np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+        # per-worker t0 arrays (the fast-path restart shape)
+        t0s = np.linspace(0.0, 60.0, model.n)
+        got = model.finish_times(w, t0s, 1.0)
+        want = np.array([model.time_for_integral(i, float(t0s[i]), 1.0)
+                         for i in range(model.n)])
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+        # constant-tail extrapolation: targets far past the grid end
+        got = model.finish_times(w, 79.9, 50.0)
+        want = np.array([model.time_for_integral(i, 79.9, 50.0)
+                         for i in range(model.n)])
+        assert np.all(got > 80.0)
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def test_finish_times_zero_power_and_inf_branches():
+    grid = np.arange(0.0, 10.0, 0.5)
+    powers = np.zeros((3, len(grid)))
+    powers[1] = 1.0
+    powers[2, :10] = 2.0          # power dies mid-grid: zero tail
+    m = UniversalModel(grid, powers)
+    got = m.finish_times([0, 1, 2], 0.0, 1.0)
+    assert np.isinf(got[0])                       # v = 0 forever
+    assert got[1] == pytest.approx(1.0, abs=1e-9)
+    assert got[2] == pytest.approx(0.5, abs=1e-9)
+    # target unreachable before the zero tail => inf
+    assert np.isinf(m.finish_times([2], 0.0, 100.0)[0])
+    # inf start times stay inf (never-finishing restarts propagate)
+    np.testing.assert_array_equal(m.finish_times([1, 1], [np.inf, 0.0]),
+                                  [np.inf, 1.0])
+    # partial participation grids go through the same vectorized path
+    pp = PartialParticipationModel(n=10, v=1.0, p=0.2, period=2.0,
+                                   t_max=40.0)
+    w = np.arange(10)
+    got = pp.finish_times(w, 3.3, 1.0)
+    want = np.array([pp.time_for_integral(i, 3.3, 1.0) for i in range(10)])
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
 
 
 def test_figure3_powers_shape_and_bounds():
