@@ -7,10 +7,22 @@ seeds, for each method × tau law × n. Fixed-time scenarios are routed
 through the seed-batched vectorized engine. The paper's qualitative
 claims are checked downstream (tests): m-sync tracks the asynchronous
 methods; full sync degrades as the tau law steepens; m-sync is robust
-to n."""
+to n.
+
+``run()`` also writes ``BENCH_fig8.json`` (per-case
+``s_per_useful_grad_mean``; the fixed-time laws are deterministic end
+to end, so these are exact machine-independent simulator outputs):
+``benchmarks/perf_gate.py`` compares it against the committed baseline
+in ``benchmarks/baselines/`` in CI, gating behavior drift in the
+per-figure run_experiment path beyond the simbatch shapes (ISSUE 4)."""
+
+import json
+import os
 
 from repro.core import optimal_m
 from repro.exp import make_scenario, run_experiment
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_FIG8_JSON", "BENCH_fig8.json")
 
 LAWS = {"sqrt": ("fixed_sqrt", {}),
         "linear": ("fixed_linear", {}),
@@ -19,6 +31,7 @@ LAWS = {"sqrt": ("fixed_sqrt", {}),
 
 def run(fast: bool = True, seeds: int = 8):
     rows = []
+    metrics = {}
     K = 60 if fast else 300
     for law, (scen, scen_kw) in LAWS.items():
         for n in ((100,) if fast else (100, 1000)):
@@ -34,6 +47,7 @@ def run(fast: bool = True, seeds: int = 8):
             for name, (spec, K_run) in cases.items():
                 res = run_experiment(spec, model, n=n, K=K_run, seeds=seeds)
                 r = res.rows[0]
+                metrics[f"{law}/n={n}/{name}"] = r["s_per_useful_grad_mean"]
                 rows.append(
                     (f"fig8/{law}/n={n}/{name}/s_per_useful_grad",
                      r["s_per_useful_grad_mean"],
@@ -41,6 +55,9 @@ def run(fast: bool = True, seeds: int = 8):
                      f"{r['seeds']} seeds "
                      f"discard={r['discard_fraction_mean']:.2f} "
                      f"backend={r['backend']}"))
+    with open(BENCH_JSON, "w") as fh:
+        json.dump({"meta": {"fast": fast, "seeds": seeds},
+                   "s_per_useful_grad_mean": metrics}, fh, indent=2)
     return rows
 
 

@@ -10,6 +10,14 @@ or ``=1``) — interpret timings measure the Python kernel body, NOT TPU
 performance; the number that matters on CPU is iterative vs top_k. On a
 real TPU set ``REPRO_PALLAS_INTERPRET=0`` to compile the kernel and get
 a meaningful Pallas column.
+
+A second sweep covers the big-``m`` regime (``m > 64`` — the
+``batch >> 64`` Rennala/Malenia pools, ISSUE 4): the counting-bisection
+selection (``mth_smallest_counting``) vs ``lax.top_k``. Its raw-call
+timing on CPU is shape-dependent; the point of the counting path is
+that it is *elementwise only*, so inside a jitted ``lax.scan`` body it
+fuses instead of forcing the slow sort lowering (the simbatch Rennala
+parity tests exercise exactly that).
 """
 
 import time
@@ -17,7 +25,8 @@ import time
 import numpy as np
 
 from repro.kernels import ops
-from repro.kernels.order_stats import (mth_smallest_iterative,
+from repro.kernels.order_stats import (mth_smallest_counting,
+                                       mth_smallest_iterative,
                                        mth_smallest_pallas)
 
 
@@ -70,6 +79,21 @@ def run(fast: bool = True):
             rows.append((f"{tag}/pallas_s", t_pal,
                          "interpret (CPU)" if interpret
                          else "compiled (TPU lane)"))
+    # big-m regime: counting bisection vs top_k (fused-path selection)
+    counting = jax.jit(mth_smallest_counting, static_argnames="m")
+    for n, m in (((10_000, 256),) if fast
+                 else ((10_000, 256), (100_000, 1024))):
+        x = jnp.asarray(np.random.default_rng(1).uniform(0.0, 1.0, (S, n)))
+        ref = np.sort(np.asarray(x), axis=1)[:, m - 1]
+        t_cnt = _timed(lambda: jax.block_until_ready(counting(x, m=m)))
+        t_topk = _timed(lambda: jax.block_until_ready(topk(x, m=m)))
+        np.testing.assert_allclose(np.asarray(counting(x, m=m)), ref,
+                                   rtol=1e-6)
+        tag = f"order_stats/bigm/n={n}/m={m}"
+        rows.append((f"{tag}/counting_s", t_cnt,
+                     f"S={S} elementwise bisection (fuses in scans)"))
+        rows.append((f"{tag}/topk_s", t_topk,
+                     f"counting/topk={t_cnt / t_topk:.2f}"))
     rows.append(("order_stats/interpret", float(interpret),
                  "REPRO_PALLAS_INTERPRET=0 for compiled TPU runs"))
     return rows

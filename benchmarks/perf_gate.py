@@ -1,35 +1,46 @@
-"""Perf regression gate: compare a fresh ``BENCH_simbatch.json`` against
-the committed baseline (ISSUE 3 satellite).
+"""Perf regression gate: compare fresh benchmark JSON artifacts against
+the committed baselines (ISSUE 3 satellite; generalized to multiple
+artifacts for ISSUE 4).
 
-Rules (tolerance ±30% by default, ``REPRO_PERF_TOL`` overrides):
+The gate takes ``measured baseline`` path PAIRS — CI runs it over both
+``BENCH_simbatch.json`` (engine speedups + simulated outputs) and
+``BENCH_fig8.json`` (the fig8_grid per-figure ``run_experiment``
+artifact, so behavior drift beyond the simbatch shapes is caught too).
+
+Rules per artifact (tolerance ±30% by default, ``REPRO_PERF_TOL``
+overrides):
 
 * ``speedup_vs_serial.*`` — one-sided floors: a measured speedup may
   exceed the baseline freely but must not drop below
   ``baseline * (1 - tol)`` (perf regression).
-* ``total_time_mean.*`` — two-sided: these are *simulated* wall-clock
+* every other numeric section (``total_time_mean.*``,
+  ``s_per_useful_grad_mean.*``, ...) — two-sided: these are *simulated*
   outputs, so drift in either direction is a behavior change, not noise.
 
 Keys present in the baseline but missing from the measurement (or vice
-versa) fail loudly — silently dropping a tracked metric is how perf
-gates rot, and mismatched ``meta`` shapes (n/S/K/fast) fail as a config
-mismatch rather than masquerading as drift.
+versa — including whole sections) fail loudly — silently dropping a
+tracked metric is how perf gates rot, and mismatched ``meta`` entries
+(n/S/K/seeds/...) fail as a config mismatch rather than masquerading as
+drift.
 
 Speedup ratios are hardware-sensitive: a baseline recorded on a fast
 dev box would set floors a slower CI runner cannot meet even without a
-regression. The committed baseline in ``benchmarks/baselines/`` is
-therefore seeded *conservatively* — its speedup entries are chosen so
-the -30% floors land at the acceptance criteria asserted inside
+regression. The committed baselines in ``benchmarks/baselines/`` are
+therefore seeded *conservatively* — speedup entries are chosen so the
+-30% floors land at the acceptance criteria asserted inside
 ``simbatch_speed.py`` itself (jax 7.15 → floor 5x, counter 5.72 →
-floor 4x), while ``total_time_mean`` entries are exact simulated
-outputs (machine-independent, tight drift detectors). To tighten the
+floor 4x, async keyed 1.86 → floor 1.3x), while simulated-output
+entries are exact simulator results (machine-independent, tight drift
+detectors — the fig8 grid is deterministic end to end). To tighten the
 speedup floors, regenerate the baseline ON THE RUNNER CLASS IT GATES
 (``python -m benchmarks.run --only simbatch`` there, then copy
 ``BENCH_simbatch.json`` over the baseline) — never from a dev box.
 Loosen a noisy lane with ``REPRO_PERF_TOL`` rather than deleting
 metrics.
 
-    python -m benchmarks.perf_gate BENCH_simbatch.json \
-        benchmarks/baselines/BENCH_simbatch.json
+    python -m benchmarks.perf_gate \
+        BENCH_simbatch.json benchmarks/baselines/BENCH_simbatch.json \
+        BENCH_fig8.json benchmarks/baselines/BENCH_fig8.json
 """
 
 from __future__ import annotations
@@ -39,13 +50,18 @@ import json
 import os
 import sys
 
+# sections gated as one-sided floors (higher is better); everything else
+# numeric is a simulated output, gated two-sided
+ONE_SIDED_SECTIONS = ("speedup_vs_serial",)
+
 
 def compare(measured: dict, baseline: dict, tol: float) -> list:
     """Return a list of failure strings (empty => gate passes)."""
     failures = []
-    for key in ("n", "S", "K", "m", "fast"):
-        got = measured.get("meta", {}).get(key)
-        want = baseline.get("meta", {}).get(key)
+    meta_m = measured.get("meta", {})
+    meta_b = baseline.get("meta", {})
+    for key in sorted(set(meta_m) | set(meta_b)):
+        got, want = meta_m.get(key), meta_b.get(key)
         if got != want:
             failures.append(
                 f"meta.{key}: measured {got!r} vs baseline {want!r} — "
@@ -53,6 +69,14 @@ def compare(measured: dict, baseline: dict, tol: float) -> list:
                 f"regenerate the baseline")
     if failures:
         return failures
+
+    sections = sorted(k for k in baseline
+                      if k != "meta" and isinstance(baseline[k], dict))
+    for extra in sorted(k for k in measured
+                        if k != "meta" and isinstance(measured[k], dict)
+                        and k not in baseline):
+        failures.append(f"{extra}: section not in baseline — "
+                        f"re-commit benchmarks/baselines/")
 
     def keys_match(section):
         a = set(measured.get(section, {}))
@@ -64,42 +88,48 @@ def compare(measured: dict, baseline: dict, tol: float) -> list:
                             f"re-commit benchmarks/baselines/")
         return sorted(a & b)
 
-    for key in keys_match("speedup_vs_serial"):
-        got = measured["speedup_vs_serial"][key]
-        want = baseline["speedup_vs_serial"][key]
-        if got < want * (1.0 - tol):
-            failures.append(
-                f"speedup_vs_serial.{key}: {got:.2f}x < "
-                f"{want:.2f}x * (1 - {tol:.0%}) — perf regression")
-    for key in keys_match("total_time_mean"):
-        got = measured["total_time_mean"][key]
-        want = baseline["total_time_mean"][key]
-        if abs(got - want) > tol * abs(want):
-            failures.append(
-                f"total_time_mean.{key}: {got:.6g} vs baseline "
-                f"{want:.6g} (> ±{tol:.0%}) — simulated-output drift")
+    for section in sections:
+        one_sided = section in ONE_SIDED_SECTIONS
+        for key in keys_match(section):
+            got = measured[section][key]
+            want = baseline[section][key]
+            if one_sided:
+                if got < want * (1.0 - tol):
+                    failures.append(
+                        f"{section}.{key}: {got:.2f}x < "
+                        f"{want:.2f}x * (1 - {tol:.0%}) — perf regression")
+            elif abs(got - want) > tol * abs(want):
+                failures.append(
+                    f"{section}.{key}: {got:.6g} vs baseline "
+                    f"{want:.6g} (> ±{tol:.0%}) — simulated-output drift")
     return failures
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("measured", help="fresh BENCH_simbatch.json")
-    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("files", nargs="+",
+                    help="measured baseline [measured baseline ...] pairs")
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("REPRO_PERF_TOL", "0.30")))
     args = ap.parse_args()
-    with open(args.measured) as fh:
-        measured = json.load(fh)
-    with open(args.baseline) as fh:
-        baseline = json.load(fh)
-    failures = compare(measured, baseline, args.tol)
-    for f in failures:
-        print(f"PERF GATE FAIL: {f}")
-    if not failures:
-        print(f"perf gate OK (tol ±{args.tol:.0%}, "
-              f"{len(measured.get('speedup_vs_serial', {}))} speedups, "
-              f"{len(measured.get('total_time_mean', {}))} totals)")
-    return 1 if failures else 0
+    if len(args.files) % 2:
+        ap.error("need (measured, baseline) path PAIRS")
+    rc = 0
+    for mpath, bpath in zip(args.files[::2], args.files[1::2]):
+        with open(mpath) as fh:
+            measured = json.load(fh)
+        with open(bpath) as fh:
+            baseline = json.load(fh)
+        failures = compare(measured, baseline, args.tol)
+        for f in failures:
+            print(f"PERF GATE FAIL [{mpath}]: {f}")
+        if not failures:
+            n_metrics = sum(len(v) for k, v in baseline.items()
+                            if k != "meta" and isinstance(v, dict))
+            print(f"perf gate OK [{mpath} vs {bpath}] "
+                  f"(tol ±{args.tol:.0%}, {n_metrics} metrics)")
+        rc |= bool(failures)
+    return rc
 
 
 if __name__ == "__main__":

@@ -1,20 +1,29 @@
 """Acceptance smoke + perf baseline for the batched engine.
 
-Two asserted floors at the n=1000 × 32-seed acceptance shape:
+Three asserted floors at the n=1000 × 32-seed acceptance shape:
 
 * ``backend="jax"`` must be ≥ 5x over a serial per-seed ``simulate()``
   loop for timing-only m-sync under the deterministic ``fixed_sqrt``
-  model (ISSUE 2), agreeing with the serial results; and
+  model (ISSUE 2), agreeing with the serial results;
 * ``backend="vectorized"`` with ``rng_scheme="counter"`` must be ≥ 4x
   over serial under a *random* model (``exponential`` — ISSUE 3: the
-  per-seed stream draws capped the old vectorized backend at ~1.2x).
+  per-seed stream draws capped the old vectorized backend at ~1.2x); and
+* the keyed Async draw path (ISSUE 4: one per-worker keyed draw per
+  arrival from the pre-split key grid) must be ≥ 1.3x over the PR 3
+  full-row draw pattern at the same shape (reproduced exactly by
+  dropping ``jax_sampler_item``, which falls back to row draws) —
+  measured ~2.2x here, the ~n× draw-volume cut minus the loop's fixed
+  argmin/scatter cost. The serial event loop stays the right engine for
+  *small* async sweeps (its per-arrival cost is O(log n), the device
+  loop's is O(S·n)); the lane reports that ratio as context rather than
+  gating it.
 
 The serial baseline already runs the round-vectorized scalar fast path
-(~54x over the event loop), so both floors measure batching gain on top
-of it. The JAX backend is timed after one warmup call — JIT compilation
-is a one-time cost, amortized across every sweep of the same shape. The
-stream-scheme ratio is reported as context (exact RNG parity, smaller
-speedup).
+(~54x over the event loop), so the m-sync floors measure batching gain
+on top of it. The JAX backend is timed after one warmup call — JIT
+compilation is a one-time cost, amortized across every sweep of the
+same shape. The stream-scheme ratio is reported as context (exact RNG
+parity, smaller speedup).
 
 ``run()`` also writes ``BENCH_simbatch.json`` (per-backend
 ``speedup_vs_serial`` plus simulated ``total_time_mean`` per benchmark
@@ -23,6 +32,7 @@ CI) compares it against the committed baseline in
 ``benchmarks/baselines/``.
 """
 
+import dataclasses
 import json
 import os
 import time
@@ -86,6 +96,33 @@ def run(fast: bool = True):
     assert np.isclose(exp_total_mean, rserial_mean, rtol=0.15), \
         (exp_total_mean, rserial_mean)
 
+    # ---------------- keyed async draws: >= 1.3x vs PR 3 row draws (ISSUE 4)
+    K_async = 2000
+    # dropping jax_sampler_item reproduces the PR 3 draw pattern exactly:
+    # the engine falls back to one full (S, n) row draw per arrival
+    rowdraw_model = dataclasses.replace(rmodel, jax_sampler_item=None)
+    simulate_batch("async", rmodel, K=K_async, seeds=S, backend="jax")
+    t_akeyed = min(_timed(lambda: simulate_batch(
+        "async", rmodel, K=K_async, seeds=S, backend="jax"))
+        for _ in range(3))
+    simulate_batch("async", rowdraw_model, K=K_async, seeds=S,
+                   backend="jax")
+    t_arow = min(_timed(lambda: simulate_batch(
+        "async", rowdraw_model, K=K_async, seeds=S, backend="jax"))
+        for _ in range(3))
+    t0 = time.perf_counter()
+    aserial = [simulate(STRATEGIES["async"](), rmodel, K=K_async, seed=s)
+               for s in range(S)]
+    t_aserial = time.perf_counter() - t0
+    abatch = simulate_batch("async", rmodel, K=K_async, seeds=S,
+                            backend="jax")
+    async_total_mean = float(abatch.total_time.mean())
+    # distribution sanity vs the serial event engine
+    aserial_mean = float(np.mean([tr.total_time for tr in aserial]))
+    assert np.isclose(async_total_mean, aserial_mean, rtol=0.15), \
+        (async_total_mean, aserial_mean)
+    speedup_keyed = t_arow / t_akeyed
+
     speedup = t_serial / t_jax
     speedup_counter = t_rserial / t_counter
     rows = [
@@ -103,6 +140,14 @@ def run(fast: bool = True):
          f"speedup={t_rserial / t_stream:.1f}x (exact RNG parity)"),
         ("simbatch/counter_speedup_vs_serial", speedup_counter,
          "acceptance: >= 4x on a random model"),
+        (f"simbatch/async/n={n}/S={S}/keyed_s", t_akeyed,
+         f"K={K_async} one keyed draw per arrival"),
+        (f"simbatch/async/n={n}/S={S}/rowdraw_s", t_arow,
+         "PR 3 draw pattern: full (S, n) row per arrival"),
+        (f"simbatch/async/n={n}/S={S}/serial_s", t_aserial,
+         "context: serial event loop (O(log n) per arrival)"),
+        ("simbatch/async_keyed_speedup_vs_rowdraw", speedup_keyed,
+         "acceptance: >= 1.3x (draw volume cut ~n x)"),
     ]
     assert speedup >= 5.0, (
         f"simulate_batch jax backend only {speedup:.1f}x over the serial "
@@ -111,19 +156,25 @@ def run(fast: bool = True):
         f"vectorized backend with rng_scheme='counter' only "
         f"{speedup_counter:.1f}x over serial on the exponential model "
         f"(need >= 4x)")
+    assert speedup_keyed >= 1.3, (
+        f"keyed async draws only {speedup_keyed:.2f}x over the PR 3 "
+        f"row-draw pattern (need >= 1.3x)")
 
     with open(BENCH_JSON, "w") as fh:
         json.dump({
-            "meta": {"n": n, "S": S, "K": K, "m": m, "fast": fast},
+            "meta": {"n": n, "S": S, "K": K, "m": m, "fast": fast,
+                     "K_async": K_async},
             "speedup_vs_serial": {
                 "jax": speedup,
                 "vectorized_fixed": t_serial / t_vec,
                 "vectorized_counter": speedup_counter,
                 "vectorized_stream": t_rserial / t_stream,
+                "async_keyed_vs_rowdraw": speedup_keyed,
             },
             "total_time_mean": {
                 "fixed_sqrt_msync": fixed_total_mean,
                 "exponential_msync": exp_total_mean,
+                "exponential_async": async_total_mean,
             },
         }, fh, indent=2)
     return rows

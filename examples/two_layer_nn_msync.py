@@ -6,13 +6,20 @@ claim under test (method ordering under Unif(1-s,1+s) equal-mean times) is
 dataset-agnostic. Runs through ``run_experiment`` (the "uniform"
 scenario) so each method reports mean ± std across seeds.
 
-The sweep is device-resident end to end: the model is a
-:class:`~repro.core.batch_jax.JaxProblem` (flat parameter vector via
-``ravel_pytree``, ``jax.random`` mini-batch sampling) driven by
-``backend="jax"``, so every (strategy, seed) runs inside ONE jitted
-``lax.scan`` program — no per-gradient ``from_jax`` host/device
-round-trip, and Sync/m-Sync/Rennala all stay on the same path (Rennala
-rides the renewal-batched scan).
+The sweep is device-resident end to end — the flow is: (1) the network
+is flattened once into a single parameter vector with ``ravel_pytree``
+and wrapped as a :class:`~repro.core.batch_jax.JaxProblem`, whose
+``stoch_grad(x, key)`` samples its mini-batch with ``jax.random`` (so
+the oracle is jit-traceable and per-seed reproducible, never touching a
+NumPy RNG stream); (2) ``run_experiment(..., backend="jax")`` hands the
+problem to :mod:`repro.core.batch_jax`, which compiles ONE ``lax.scan``
+round recursion per strategy family and ``jax.vmap``-s the oracle over
+the seed axis; (3) every (strategy, seed, round) — timing order
+statistics, gradient evaluation, iterate update, loss recording —
+executes inside that single jitted program, with no per-gradient
+``from_jax`` host/device round-trip. Sync/m-Sync ride the m-sync round
+scan and Rennala the renewal-batched scan; only the final per-seed
+``Trace`` assembly returns to the host.
 
     PYTHONPATH=src python examples/two_layer_nn_msync.py [--seeds 3]
 """

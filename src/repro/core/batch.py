@@ -26,16 +26,27 @@ Backends (``backend=``):
 * ``"jax"`` — :mod:`repro.core.batch_jax`: jitted ``lax.scan`` programs
   over ``(seeds, workers)`` state (optionally using the Pallas top-m
   partial-sort kernel for the per-round m-th order statistic). Covers
-  the m-sync family, Rennala (renewal-batched rounds) and
-  Async/Ringmaster (arrival-indexed recursion). Distribution-equal, not
-  RNG-stream-equal; matches NumPy within float tolerance for
-  deterministic models/oracles.
+  the m-sync family, Rennala and Malenia (renewal-batched rounds) and
+  Async/Ringmaster (keyed arrival-indexed recursion) under every model
+  class — FixedTimes, sampled (``jax_sampler``) and universal
+  (``finish_times_jax``) — the full DESIGN.md §3b coverage matrix.
+  Distribution-equal, not RNG-stream-equal; matches NumPy within float
+  tolerance for deterministic models/oracles in generic position
+  (adversarially tie-heavy instances, e.g. partial participation, can
+  diverge by whole events under the worker-index tie-break).
 * ``"auto"`` (default) — ``vectorized`` when eligible, else ``serial``.
 * ``"fastest"`` — like ``auto`` but also considers the ``jax`` backend
   when the sweep is large enough (``seeds * K * n >=``
   :data:`JAX_MIN_WORK`) to amortize jit compilation — or whenever the
   problem is a :class:`~repro.core.batch_jax.JaxProblem`, which only
   jax can execute; this is what :func:`repro.exp.run_experiment` uses.
+  One deterministic exception: timing-only m-sync under a universal
+  model replicates ONE scalar run across seeds on the ``vectorized``
+  backend, so there is nothing for a device sweep to amortize and
+  ``fastest`` keeps it there; universal Rennala/Malenia/Async sweeps
+  (per-seed identical but with no replication shortcut ONLY in serial)
+  do route to jax above the work threshold. The backend that actually
+  ran is recorded per grid point in the :class:`TraceBatch`.
 
 Grid semantics: ``grid`` maps parameter names to value sequences and the
 cartesian product is swept. Keys in :data:`SIM_GRID_KEYS` override the
@@ -217,7 +228,11 @@ def _jax_eligible(strategy: AggregationStrategy, model, problem,
     """True when the jax backend supports the combination AND the sweep
     is big enough (``S * K * n >= JAX_MIN_WORK``) to amortize jit. A
     :class:`~repro.core.batch_jax.JaxProblem` bypasses the size gate:
-    jax is the only backend that can execute its oracle at all."""
+    jax is the only backend that can execute its oracle at all.
+    Support now spans the full strategy × model matrix (m-sync family,
+    Rennala, Malenia, Async/Ringmaster × fixed/sampled/universal), so
+    ``fastest`` no longer forces Malenia or universal scenarios onto
+    the serial path."""
     if tol_grad_sq is not None or K <= 0:
         return False
     if not _is_jax_problem(problem) and S * K * model.n < JAX_MIN_WORK:
@@ -252,7 +267,13 @@ def simulate_batch(strategy: StrategySpec,
     distribution, much faster for sweeps, and independent of which other
     seeds are in the sweep. ``rng_scheme`` only affects the
     ``vectorized`` backend (``serial`` always consumes the scalar
-    streams; ``jax`` always draws with ``jax.random``). See the module
+    streams; ``jax`` always draws with ``jax.random`` — per-seed
+    reproducible and sweep-independent like ``counter``, stream-equal
+    to nothing). ``backend="jax"`` covers every registered paper
+    strategy (m-sync family, rennala, malenia, async, ringmaster) under
+    every time-model class, timing-only or with a
+    :class:`~repro.core.batch_jax.JaxProblem`; ``deadline``/``dropout``
+    and NumPy oracles stay on the host engines. See the module
     docstring for backend and grid semantics.
     """
     seed_list = list(range(seeds)) if isinstance(seeds, (int, np.integer)) \
@@ -296,8 +317,14 @@ def simulate_batch(strategy: StrategySpec,
             jax_ok = (_is_jax_problem(problem)
                       or rng_scheme != "stream"
                       or isinstance(model, (FixedTimes, UniversalModel)))
-            if jax_ok and _jax_eligible(strat, model, problem, tol_pt,
-                                        K_pt, len(seed_list)):
+            if (isinstance(model, UniversalModel)
+                    and _vectorized_eligible(strat, model, problem, K_pt,
+                                             tol_pt)):
+                # deterministic universal m-sync timing replicates ONE
+                # scalar run across seeds — no sweep for jax to win
+                chosen = "vectorized"
+            elif jax_ok and _jax_eligible(strat, model, problem, tol_pt,
+                                          K_pt, len(seed_list)):
                 chosen = "jax"
             elif _is_jax_problem(problem):
                 # only jax can execute a JaxProblem oracle; raise the

@@ -6,19 +6,41 @@ family:
 
 * **m-sync family** — a ``lax.scan`` over rounds whose body is pure
   elementwise work plus the per-round m-th order statistic from
-  :mod:`repro.kernels.order_stats` (iterative tie-class extraction by
-  default; optionally the Pallas top-m partial-sort kernel via
-  ``use_pallas=True``).
+  :mod:`repro.kernels.order_stats` (iterative tie-class extraction for
+  small ``m``, counting-bisection selection for large ``m``, optionally
+  the Pallas top-m partial-sort kernel via ``use_pallas=True``).
 * **Rennala** — the same renewal structure, per round accumulating
   ``batch`` arrivals: each worker's within-round arrivals form a renewal
-  chain (cumulative sums of fresh draws), the round ends at the
-  ``batch``-th smallest chain entry, and every worker's next pending
-  computation is its first chain entry past the round end.
+  chain (successive finish times), the round ends at the ``batch``-th
+  smallest chain entry, and every worker's next pending computation is
+  its first chain entry past the round end.
+* **Malenia** — the renewal-chain scan generalized to a *per-worker
+  count predicate*: the round ends at the first arrival time ``T`` at
+  which every worker has delivered at least one fresh gradient AND the
+  harmonic mean ``n / sum_i 1/B_i(T)`` of the per-worker counts reaches
+  the strategy's ``S`` (the paper's §6 heterogeneous batching rule,
+  preserved exactly). ``T`` is found by a monotone counting bisection
+  over the chain pool plus an exact snap-to-arrival step; boundary ties
+  are consumed one arrival at a time (worker-major) so the predicate
+  first becomes true exactly as in the event engine.
 * **Async / Ringmaster** — an arrival-indexed ``lax.while_loop``: each
   iteration pops the earliest pending finish per seed, steps (or, for
-  Ringmaster, discards over-delayed gradients), and restarts that worker;
-  per-worker start-iterate snapshots make the delayed-gradient math path
+  Ringmaster, discards over-delayed gradients), and restarts that worker
+  with ONE keyed draw from a pre-split ``(seeds, workers)`` key grid
+  (:func:`~repro.core.time_models.jax_worker_key_grid`) — one draw per
+  arrival instead of a full ``(seeds, n)`` row, ~n× less draw volume.
+  Per-worker start-iterate snapshots make the delayed-gradient math path
   exact.
+
+Time models: :class:`FixedTimes` (no RNG), any
+:class:`~repro.core.time_models.SubExponentialTimes` carrying a
+``jax_sampler`` (every in-tree factory does; the keyed Async path also
+prefers ``jax_sampler_item``), and :class:`UniversalModel` /
+:class:`PartialParticipationModel` via the deterministic
+``finish_times_jax`` inversion (batched ``searchsorted`` on the
+cumulative-power grid + closed-form quadratic segment solve) — every
+strategy family above accepts all three classes, so the full paper
+coverage matrix (DESIGN.md §3b) runs device-resident.
 
 The math-carrying paths evaluate a :class:`JaxProblem` oracle under
 ``jax.vmap`` over seeds — n=1000 × 32-seed sweeps execute as a single
@@ -27,30 +49,33 @@ fast path on CPU here, far more on real accelerators).
 
 Exactness contract (documented in DESIGN.md): the NumPy engines break
 wall-clock ties by exact event-heap sequence numbers; this backend breaks
-them by worker index (and within-round arrival index for Rennala) and
-draws with ``jax.random`` instead of NumPy ``Generator`` streams. For
-deterministic models in generic position the recursions are identical
-and results match the NumPy backends to float tolerance; for random
-models the results are equal in distribution, not per-seed. Supported
-models: :class:`FixedTimes`, or a
-:class:`~repro.core.time_models.SubExponentialTimes` carrying a
-``jax_sampler`` (every in-tree factory does); timing-only or with a
-:class:`JaxProblem`.
+them by worker index (and within-worker arrival index for the renewal
+chains) and draws with ``jax.random`` instead of NumPy ``Generator``
+streams. For deterministic models in generic position the recursions are
+identical and results match the NumPy backends to float tolerance; for
+random models the results are equal in distribution, not per-seed.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math as _math
 from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
-from .strategies import (AggregationStrategy, Async, MSync, Rennala,
-                         Ringmaster, Trace)
-from .time_models import FixedTimes, SubExponentialTimes
+from .strategies import (AggregationStrategy, Async, Malenia, MSync,
+                         Rennala, Ringmaster, Trace)
+from .time_models import FixedTimes, SubExponentialTimes, UniversalModel
 
 __all__ = ["JaxProblem", "quadratic_worst_case_jax", "simulate_batch_jax",
            "jax_supported"]
+
+# Malenia round-end search: value-bisection passes over the chain pool,
+# then snap-to-arrival passes (each consumes >= 1 tie class; more than a
+# couple after the bisection is pathological and flags the run)
+_MAL_BISECT_ITERS = 48
+_MAL_SNAP_ITERS = 32
 
 
 @dataclasses.dataclass
@@ -59,7 +84,14 @@ class JaxProblem:
 
     ``stoch_grad(x, key)`` replaces the NumPy oracle's
     ``stoch_grad(x, rng)`` so gradient noise comes from ``jax.random``
-    and the whole seed sweep stays inside one jitted program.
+    and the whole seed sweep stays inside one jitted program. Backend
+    contract: a ``JaxProblem`` runs on ``backend="jax"`` ONLY (the NumPy
+    engines cannot execute it, and ``backend="fastest"`` therefore
+    always routes it to jax). RNG contract: oracle noise keys derive
+    from ``jax.random.PRNGKey(seed)`` splits — reproducible per seed
+    value, never stream-equal to any NumPy ``Generator`` path. All three
+    callables must be jit-traceable; ``f``/``grad`` are the recording
+    oracle only (never differentiated through by the engine).
     """
 
     x0: "np.ndarray"
@@ -124,6 +156,8 @@ def _classify(strategy: AggregationStrategy) -> Optional[str]:
     # exact types: subclasses may override semantics the scans hard-code
     if type(strategy) is Rennala:
         return "rennala"
+    if type(strategy) is Malenia and strategy.grads_by_worker is None:
+        return "malenia"
     if type(strategy) is Async:
         return "async"
     if type(strategy) is Ringmaster:
@@ -132,7 +166,7 @@ def _classify(strategy: AggregationStrategy) -> Optional[str]:
 
 
 def _model_supported(model) -> bool:
-    return (isinstance(model, FixedTimes)
+    return (isinstance(model, (FixedTimes, UniversalModel))
             or (isinstance(model, SubExponentialTimes)
                 and getattr(model, "jax_sampler", None) is not None))
 
@@ -147,14 +181,15 @@ def _check_supported(strategy: AggregationStrategy, model, problem) -> str:
     kind = _classify(strategy)
     if kind is None:
         raise NotImplementedError(
-            f"jax backend supports the unmodified m-sync family, Rennala "
-            f"and Async/Ringmaster, not {strategy.name!r}; use "
-            f"backend='serial'")
+            f"jax backend supports the unmodified m-sync family, Rennala, "
+            f"Malenia (homogeneous oracle) and Async/Ringmaster, not "
+            f"{strategy.name!r}; use backend='serial'")
     if not _model_supported(model):
         raise NotImplementedError(
-            f"jax backend needs FixedTimes or a SubExponentialTimes with "
-            f"a jax_sampler (got {type(model).__name__}); "
-            f"use backend='serial' or 'vectorized'")
+            f"jax backend needs FixedTimes, a UniversalModel, or a "
+            f"SubExponentialTimes with a jax_sampler (got "
+            f"{type(model).__name__}); use backend='serial' or "
+            f"'vectorized'")
     if problem is not None and not isinstance(problem, JaxProblem):
         raise NotImplementedError(
             "jax backend takes a JaxProblem (jax.random oracle), not the "
@@ -220,32 +255,84 @@ def _fixed_timing_run(taus, S: int, m: int, K: int, use_pallas: bool):
 _fixed_timing_jit = None
 
 
-def _sweep_setup(model, problem, S, n, seeds):
-    """Shared per-run scaffolding for every jitted recursion: per-seed
-    PRNG keys, the per-round ``(S, n)`` draw closure (FixedTimes
-    broadcast vs vmapped ``jax_sampler``), and the broadcast initial
-    iterate (``(S, 1)`` zeros for timing-only runs)."""
+def _keys_and_x(problem, S, n, seeds):
+    """Per-seed PRNG keys and the broadcast initial iterate (``(S, 1)``
+    zeros for timing-only runs)."""
     import jax
     import jax.numpy as jnp
 
     keys0 = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    if isinstance(model, FixedTimes):
-        taus = jnp.asarray(model.taus)
-
-        def draw(round_keys):                     # no RNG consumed
-            return jnp.broadcast_to(taus, (S, n))
-    else:
-        sampler = model.jax_sampler
-
-        def draw(round_keys):
-            return jax.vmap(sampler)(round_keys)  # one (n,) draw per seed
     if problem is not None:
         x_init = jnp.broadcast_to(
             jnp.asarray(problem.x0, dtype=jnp.float32),
             (S,) + np.shape(problem.x0)).astype(jnp.float32)
     else:
         x_init = jnp.zeros((S, 1))
-    return keys0, draw, x_init
+    return keys0, x_init
+
+
+def _finish_factory(model, S, n):
+    """``finish_all(round_keys, t0) -> (S, n)`` ABSOLUTE finish times of
+    computations started at ``t0`` (scalar/broadcastable): duration draw
+    plus start for sampled models, ``t0 + tau`` for FixedTimes, the
+    deterministic ``finish_times_jax`` inversion for universal models
+    (``round_keys`` unused by the draw-free cases)."""
+    import jax
+    import jax.numpy as jnp
+
+    if isinstance(model, FixedTimes):
+        taus = jnp.asarray(model.taus)
+
+        def finish_all(round_keys, t0):           # no RNG consumed
+            return jnp.broadcast_to(t0 + taus, (S, n))
+    elif isinstance(model, UniversalModel):
+        def finish_all(round_keys, t0):           # deterministic inversion
+            return model.finish_times_jax(jnp.broadcast_to(t0, (S, n)))
+    else:
+        sampler = model.jax_sampler
+
+        def finish_all(round_keys, t0):           # one (n,) draw per seed
+            return t0 + jax.vmap(sampler)(round_keys)
+    return finish_all
+
+
+def _chain_factory(model, S, n):
+    """``chain(round_keys, base, L) -> (S, n, L + 1)`` renewal chains:
+    entry 0 is ``base`` (each worker's first fresh arrival), entry ``j``
+    its ``j``-th subsequent arrival — cumulative duration draws for
+    sampled models, ``base + j * tau`` for FixedTimes, iterated
+    ``finish_times_jax`` for universal models."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    if isinstance(model, FixedTimes):
+        taus = jnp.asarray(model.taus)
+
+        def chain(round_keys, base, L):
+            steps = taus[None, :, None] * jnp.arange(1, L + 1)
+            return jnp.concatenate(
+                [base[..., None], base[..., None] + steps], axis=-1)
+    elif isinstance(model, UniversalModel):
+        def chain(round_keys, base, L):
+            def body(c, _):
+                nxt = model.finish_times_jax(c)
+                return nxt, nxt
+
+            _, out = lax.scan(body, base, None, length=L)  # (L, S, n)
+            return jnp.concatenate(
+                [base[..., None], jnp.moveaxis(out, 0, -1)], axis=-1)
+    else:
+        sampler = model.jax_sampler
+
+        def chain(round_keys, base, L):
+            ks = jax.vmap(lambda k: jax.random.split(k, L))(round_keys)
+            d = jax.vmap(jax.vmap(sampler))(ks)            # (S, L, n)
+            return jnp.concatenate(
+                [base[..., None],
+                 base[..., None] + jnp.cumsum(jnp.moveaxis(d, 1, 2),
+                                              axis=-1)], axis=-1)
+    return chain
 
 
 def _grad_mean_fn(problem, B):
@@ -262,7 +349,8 @@ def _grad_mean_fn(problem, B):
 
 
 def _general_run(model, problem, m, n, S, K, gamma, use_pallas, seeds):
-    """RNG-threading scan: random time models and/or a JaxProblem oracle.
+    """RNG-threading m-sync scan: random/universal time models and/or a
+    JaxProblem oracle.
 
     Every seed's draw stream is a pure function of its ``PRNGKey(seed)``
     (a 4-way split of its own carried key per round). Closes over the
@@ -273,7 +361,8 @@ def _general_run(model, problem, m, n, S, K, gamma, use_pallas, seeds):
     from jax import lax
 
     math = problem is not None
-    keys0, draw, x_init = _sweep_setup(model, problem, S, n, seeds)
+    keys0, x_init = _keys_and_x(problem, S, n, seeds)
+    finish_all = _finish_factory(model, S, n)
     if math:
         grad_mean = _grad_mean_fn(problem, m)
 
@@ -282,10 +371,12 @@ def _general_run(model, problem, m, n, S, K, gamma, use_pallas, seeds):
         sub = jax.vmap(lambda kk: jax.random.split(kk, 4))(keys)
         keys = sub[:, 0]
         stale = ver < k
-        cand = jnp.where(stale, ft + draw(sub[:, 1]), ft)
+        cand = jnp.where(stale, finish_all(sub[:, 1], ft), ft)
         ft, ver, comp, T, acc = _timing_round(ft, ver, comp, k, cand, m,
                                               use_pallas)
-        ft = jnp.where(acc, T[:, None] + draw(sub[:, 2]), ft)
+        ft = jnp.where(acc, finish_all(sub[:, 2],
+                                       jnp.broadcast_to(T[:, None],
+                                                        (S, n))), ft)
         ver = jnp.where(acc, k + 1, ver)
         if math:
             x = x - gamma * grad_mean(x, sub[:, 3])
@@ -298,7 +389,7 @@ def _general_run(model, problem, m, n, S, K, gamma, use_pallas, seeds):
     @jax.jit
     def run(keys):
         sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
-        ft0 = draw(sub[:, 1])
+        ft0 = finish_all(sub[:, 1], jnp.zeros((S, n)))
         init = (ft0, jnp.zeros((S, n), jnp.int32), jnp.zeros(S, jnp.int32),
                 x_init, sub[:, 0])
         (_, _, comp, x, _), (T, val, gn) = lax.scan(
@@ -310,11 +401,14 @@ def _general_run(model, problem, m, n, S, K, gamma, use_pallas, seeds):
 
 def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
     """Rennala as a renewal-batched ``lax.scan``: per round, each worker's
-    fresh arrivals form a renewal chain (base + cumulative draws), the
-    round ends at the ``B``-th smallest chain entry, every worker's next
-    pending computation is its first chain entry past the round end, and
-    the stepping worker alone restarts at the new iterate. Ties are
-    broken by (worker, within-round arrival index)."""
+    fresh arrivals form a renewal chain, the round ends at the ``B``-th
+    smallest chain entry, every worker's next pending computation is its
+    first chain entry past the round end, and the stepping worker alone
+    restarts at the new iterate. Ties are broken by (worker,
+    within-round arrival index). For ``B`` beyond the iterative-kernel
+    range the pool selection runs the counting-bisection path of
+    :func:`~repro.kernels.order_stats.mth_smallest` — no ``top_k``
+    lowering inside the scan."""
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -322,19 +416,9 @@ def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
     from ..kernels.order_stats import mth_smallest
 
     math = problem is not None
-    keys0, draw, x_init = _sweep_setup(model, problem, S, n, seeds)
-    if isinstance(model, FixedTimes):
-        taus = jnp.asarray(model.taus)
-
-        def draw_chain(round_keys):               # (S, n, B)
-            return jnp.broadcast_to(taus[None, :, None], (S, n, B))
-    else:
-        sampler = model.jax_sampler
-
-        def draw_chain(round_keys):
-            ks = jax.vmap(lambda k: jax.random.split(k, B))(round_keys)
-            return jnp.moveaxis(jax.vmap(jax.vmap(sampler))(ks), 1, 2)
-
+    keys0, x_init = _keys_and_x(problem, S, n, seeds)
+    finish_all = _finish_factory(model, S, n)
+    chain_fn = _chain_factory(model, S, n)
     if math:
         grad_mean = _grad_mean_fn(problem, B)
 
@@ -347,11 +431,8 @@ def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
         keys = sub[:, 0]
         stale = ver < k
         # first fresh arrival: a stale pending pops at ft and restarts
-        base = jnp.where(stale, ft + draw(sub[:, 1]), ft)
-        chain = jnp.concatenate(
-            [base[..., None],
-             base[..., None] + jnp.cumsum(draw_chain(sub[:, 2]), axis=2)],
-            axis=2)                               # (S, n, B+1)
+        base = jnp.where(stale, finish_all(sub[:, 1], ft), ft)
+        chain = chain_fn(sub[:, 2], base, B)      # (S, n, B+1)
         pool = chain[..., :B].reshape(S, n * B)
         T = mth_smallest(pool, B, use_pallas=use_pallas)
         lt = pool < T[:, None]
@@ -381,7 +462,8 @@ def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
     @jax.jit
     def run(keys):
         sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
-        init = (draw(sub[:, 1]), jnp.zeros((S, n), jnp.int32),
+        init = (finish_all(sub[:, 1], jnp.zeros((S, n))),
+                jnp.zeros((S, n), jnp.int32),
                 jnp.zeros(S, jnp.int32), x_init, sub[:, 0])
         (_, _, comp, x, _), (T, val, gn) = lax.scan(
             step, init, jnp.arange(K, dtype=jnp.int32))
@@ -390,25 +472,249 @@ def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
     return jax.block_until_ready(run(keys0))
 
 
+def _malenia_grad_fn(problem, n, L):
+    """Malenia math update: ``(1/n) sum_i (1/B_i) sum_{j<B_i} g_ij`` at
+    ``x^k`` — one ``lax.scan`` over the ``L`` chain slots so memory stays
+    ``(S, n, d)`` per slot instead of ``(S, n, L, d)``."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def upd(x, B, round_keys):
+        slot_keys = jax.vmap(lambda k: jax.random.split(k, L))(round_keys)
+        w = 1.0 / (jnp.maximum(B, 1).astype(x.dtype) * n)  # (S, n)
+
+        def body(carry, jk):
+            j, kcol = jk                                   # kcol: (S, 2)
+            gk = jax.vmap(lambda k: jax.random.split(k, n))(kcol)
+            g = jax.vmap(jax.vmap(problem.stoch_grad, (None, 0)),
+                         (0, 0))(x, gk)                    # (S, n, d)
+            wj = jnp.where(j < B, w, 0.0)
+            return carry + (g * wj[..., None]).sum(axis=1), None
+
+        out, _ = lax.scan(body, jnp.zeros_like(x),
+                          (jnp.arange(L), jnp.moveaxis(slot_keys, 1, 0)))
+        return out
+
+    return upd
+
+
+def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
+                 chain_len=None):
+    """Malenia as the Rennala renewal scan generalized to the per-worker
+    count predicate (see module doc): per round, each worker's fresh
+    arrivals form an ``L``-slot renewal chain, and the round ends at the
+    first arrival time ``T`` with ``min_i B_i(T) >= 1`` and harmonic
+    mean ``n / sum_i 1/B_i(T) >= S_target``. The predicate is monotone
+    in ``T``, so ``T`` comes from a value bisection over the pool, an
+    exact snap onto the triggering arrival, and a worker-major
+    tie-consumption search that reproduces the event engine's
+    one-arrival-at-a-time predicate check (ties broken by worker index —
+    the backend's documented contract).
+
+    ``L`` must cover every worker's in-round arrival count: a fast
+    worker keeps accumulating arrivals while the slowest delivers its
+    first, so the default scales with both ``ceil(S)`` and the
+    mean-speed spread. Rounds where a chain is exhausted anyway (a
+    worker's ``L+1``-th arrival lands before the round end — e.g. a
+    heavy-tailed slow draw) are flagged, and the engine retries with
+    doubled chains a few times before raising — never silently
+    mis-batched.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    math = problem is not None
+    ceilS = int(_math.ceil(S_target))
+    if chain_len:
+        L = int(chain_len)
+    else:
+        taus = np.asarray(model.mean_times(), dtype=float) \
+            if not isinstance(model, UniversalModel) else None
+        spread = (float(np.max(taus) / max(np.min(taus), 1e-12))
+                  if taus is not None and len(taus) else 1.0)
+        L = max(2 * ceilS, int(np.ceil(3.0 * spread)) + ceilS, 8)
+    if L < ceilS:
+        raise ValueError(f"chain_len={L} cannot certify harmonic mean "
+                         f"S={S_target} (need >= {ceilS})")
+    keys0, x_init = _keys_and_x(problem, S, n, seeds)
+    finish_all = _finish_factory(model, S, n)
+    chain_fn = _chain_factory(model, S, n)
+
+    widx = jnp.arange(n)
+
+    def P_of_counts(B):
+        ok1 = jnp.all(B >= 1, axis=-1)
+        hm = n / jnp.sum(1.0 / jnp.maximum(B, 1).astype(jnp.float32),
+                         axis=-1)
+        return ok1 & (hm >= S_target)
+
+    def attempt(L):
+        upd_fn = _malenia_grad_fn(problem, n, L) if math else None
+        tie_iters = int(np.ceil(np.log2(n * L + 2))) + 2
+
+        def step(carry, k):
+            ft, ver, comp, used, x, keys, bad = carry
+            sub = jax.vmap(lambda kk: jax.random.split(kk, 4))(keys)
+            keys = sub[:, 0]
+            stale = ver < k
+            base = jnp.where(stale, finish_all(sub[:, 1], ft), ft)
+            ch = chain_fn(sub[:, 2], base, L)     # (S, n, L+1)
+            cand = ch[..., :L]
+
+            def Pt(T):
+                return P_of_counts(
+                    (cand <= T[:, None, None]).sum(axis=-1))
+
+            # bisection invariants: no arrival at or before t_lo (B = 0,
+            # false); every worker has >= ceil(S) arrivals by t_hi (true)
+            t_lo = base.min(axis=1) - 1.0
+            t_hi = cand[..., ceilS - 1].max(axis=1)
+
+            def bisect(_, lh):
+                lo, hi = lh
+                mid = 0.5 * (lo + hi)
+                ok = Pt(mid)
+                return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+
+            lo, _ = lax.fori_loop(0, _MAL_BISECT_ITERS, bisect,
+                                  (t_lo, t_hi))
+
+            # snap onto the exact triggering arrival: smallest pool
+            # entry above lo; sub-threshold entries can survive a wide
+            # interval, so advance past them (bounded; non-convergence
+            # flags the run)
+            def cond(c):
+                _, _, done, it = c
+                return jnp.any(~done) & (it < _MAL_SNAP_ITERS)
+
+            def snap(c):
+                lo, T, done, it = c
+                cnd = jnp.where(cand > lo[:, None, None], cand,
+                                jnp.inf).min(axis=(1, 2))
+                ok = Pt(cnd)
+                T = jnp.where(done, T, cnd)
+                lo = jnp.where(done | ok, lo, cnd)
+                return lo, T, done | ok, it + 1
+
+            _, T, done, _ = lax.while_loop(
+                cond, snap, (lo, jnp.zeros(S), jnp.zeros(S, bool),
+                             jnp.zeros((), jnp.int32)))
+            bad_k = ~done
+
+            # per-worker counts at T, consuming boundary ties one
+            # arrival at a time in worker-major order until the
+            # predicate first holds
+            Tb = T[:, None, None]
+            lt = (cand < Tb).sum(axis=-1)         # (S, n)
+            tie = (cand == Tb).sum(axis=-1)
+            prev = jnp.cumsum(tie, axis=1) - tie
+
+            def consumed(tc):
+                return jnp.clip(tc[:, None] - prev, 0, tie)
+
+            def cbisect(_, lh):                   # minimal tc, P true
+                lo_c, hi_c = lh
+                mid = (lo_c + hi_c) // 2
+                ok = P_of_counts(lt + consumed(mid))
+                return (jnp.where(ok, lo_c, mid),
+                        jnp.where(ok, mid, hi_c))
+
+            _, tc = lax.fori_loop(0, tie_iters, cbisect,
+                                  (jnp.zeros(S, jnp.int32),
+                                   tie.sum(axis=1).astype(jnp.int32)))
+            cons = consumed(tc)
+            B = lt + cons                         # accepted per worker
+            stepper = jnp.max(jnp.where(cons > 0, widx[None, :], -1),
+                              axis=1)
+
+            popped = stale & (ft < T[:, None])    # discarded stale pops
+            comp = comp + B.sum(axis=1) + popped.sum(axis=1)
+            used = used + B.sum(axis=1)
+            # chain exhausted: an (L+1)-th arrival before the round end
+            bad = bad | bad_k | (ch[..., L] <= T[:, None]).any(axis=1)
+
+            live = (~stale) | popped              # chain materialized
+            nxt = jnp.take_along_axis(ch, B[..., None], axis=2)[..., 0]
+            ft = jnp.where(live, nxt, ft)
+            ver = jnp.where(live, k, ver)
+            ver = jnp.where(widx[None, :] == stepper[:, None], k + 1, ver)
+            if math:
+                x = x - gamma * upd_fn(x, B, sub[:, 3])
+                val = jax.vmap(problem.f)(x)
+                gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
+            else:
+                val = gn = jnp.zeros(S)
+            return (ft, ver, comp, used, x, keys, bad), (T, val, gn)
+
+        @jax.jit
+        def run(keys):
+            sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
+            init = (finish_all(sub[:, 1], jnp.zeros((S, n))),
+                    jnp.zeros((S, n), jnp.int32), jnp.zeros(S, jnp.int32),
+                    jnp.zeros(S, jnp.int32), x_init, sub[:, 0],
+                    jnp.zeros(S, bool))
+            (_, _, comp, used, x, _, bad), (T, val, gn) = lax.scan(
+                step, init, jnp.arange(K, dtype=jnp.int32))
+            return comp, used, x, T, val, gn, bad
+
+        return jax.block_until_ready(run(keys0))
+
+    for _ in range(4):
+        comp, used, x, T, val, gn, bad = attempt(L)
+        if not bool(np.any(np.asarray(bad))):
+            return comp, x, T, val, gn, used
+        L *= 2                                    # outran the chains: retry
+    raise RuntimeError(
+        f"malenia jax engine could not certify a round within its "
+        f"{L // 2}-slot renewal chains even after doubling retries "
+        f"(extreme speed heterogeneity?); pass a larger chain_len to "
+        f"simulate_batch_jax or use backend='serial'")
+
+
 def _arrival_run(model, problem, max_delay, delay_adaptive, n, S, K,
                  gamma, seeds):
     """Async/Ringmaster as an arrival-indexed ``lax.while_loop``: each
     iteration pops the earliest pending finish per seed (ties by worker
     index), steps unless the gradient's delay exceeds ``max_delay``
     (discard => recompute at the current iterate), and restarts the
-    popped worker. Per-worker start-iterate snapshots (``xs``) evaluate
-    delayed gradients at the iterate they started from, exactly like the
-    event engine's snapshot dict. Returns per-step time/value buffers."""
+    popped worker. The restart costs ONE keyed draw from the pre-split
+    per-(seed, worker) key grid — worker streams are pure functions of
+    ``(seed value, worker index)``, independent of arrival order (the
+    keyed-draw contract, DESIGN.md §3b) — instead of a full ``(S, n)``
+    row per arrival. Per-worker start-iterate snapshots (``xs``)
+    evaluate delayed gradients at the iterate they started from, exactly
+    like the event engine's snapshot dict. Returns per-step time/value
+    buffers."""
     import jax
     import jax.numpy as jnp
     from jax import lax
 
+    from .time_models import jax_worker_key_grid
+
     math = problem is not None
-    keys0, draw, x_init = _sweep_setup(model, problem, S, n, seeds)
+    keys0, x_init = _keys_and_x(problem, S, n, seeds)
     xs_init = jnp.broadcast_to(x_init[:, None, :],
                                (S, n) + x_init.shape[1:])
 
+    fixed = isinstance(model, FixedTimes)
+    universal = isinstance(model, UniversalModel)
+    sampled = not fixed and not universal
+    if fixed:
+        taus = jnp.asarray(model.taus)
+    elif sampled:
+        item = model.jax_sampler_item
+        if item is None:
+            # correct fallback for user models without a single-draw
+            # sampler: draw the row, keep one column (~n× draw volume)
+            row_sampler = model.jax_sampler
+
+            def item(key, i):
+                return row_sampler(key)[i]
+
     rows = jnp.arange(S)
+    widx = jnp.arange(n)
     # Async pops exactly K arrivals. Ringmaster also pays discards, but
     # a worker can only be re-discarded after another step lands, so
     # each worker is discarded at most K+1 times: arrivals are bounded
@@ -422,8 +728,8 @@ def _arrival_run(model, problem, max_delay, delay_adaptive, n, S, K,
         return jnp.any(k < K) & (it < cap)
 
     def body(carry):
-        it, ft, ver, k, comp, x, xs, keys, Tb, vb, gb = carry
-        sub = jax.vmap(lambda kk: jax.random.split(kk, 3))(keys)
+        it, ft, ver, k, comp, x, xs, keys, grid, Tb, vb, gb = carry
+        sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
         keys = sub[:, 0]
         w = jnp.argmin(ft, axis=1)                # earliest pending pop
         t = ft[rows, w]
@@ -443,23 +749,42 @@ def _arrival_run(model, problem, max_delay, delay_adaptive, n, S, K,
             gb = gb.at[rows, kc].set(jnp.where(accept, gn, gb[rows, kc]))
         Tb = Tb.at[rows, kc].set(jnp.where(accept, t, Tb[rows, kc]))
         k = k + accept.astype(k.dtype)
-        dts = draw(sub[:, 2])                     # restart the popped worker
-        ft = ft.at[rows, w].set(jnp.where(active, t + dts[rows, w],
-                                          ft[rows, w]))
+        # restart the popped worker: one keyed draw (or inversion)
+        if fixed:
+            ftw = t + taus[w]
+        elif universal:
+            ftw = model.finish_times_jax(t, workers=w)
+        else:
+            kw = jax.vmap(jax.random.split)(grid[rows, w])  # (S, 2, 2)
+            grid = grid.at[rows, w].set(kw[:, 0])
+            ftw = t + jax.vmap(item)(kw[:, 1], w)
+        ft = ft.at[rows, w].set(jnp.where(active, ftw, ft[rows, w]))
         ver = ver.at[rows, w].set(jnp.where(active, k, ver[rows, w]))
         xs = xs.at[rows, w].set(jnp.where(active[:, None], x, xs[rows, w]))
         comp = comp + active.astype(comp.dtype)
-        return (it + 1, ft, ver, k, comp, x, xs, keys, Tb, vb, gb)
+        return (it + 1, ft, ver, k, comp, x, xs, keys, grid, Tb, vb, gb)
 
     @jax.jit
     def run(keys):
         sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
-        init = (jnp.zeros((), jnp.int32), draw(sub[:, 1]),
+        if fixed:
+            grid = jnp.zeros((1, 1, 2), jnp.uint32)        # unused
+            ft0 = jnp.broadcast_to(taus, (S, n))
+        elif universal:
+            grid = jnp.zeros((1, 1, 2), jnp.uint32)        # unused
+            ft0 = model.finish_times_jax(jnp.zeros((S, n)))
+        else:
+            grid = jax_worker_key_grid(sub[:, 1], n)       # (S, n, 2)
+            kk = jax.vmap(jax.vmap(jax.random.split))(grid)
+            grid = kk[:, :, 0]
+            ft0 = jax.vmap(jax.vmap(item))(
+                kk[:, :, 1], jnp.broadcast_to(widx, (S, n)))
+        init = (jnp.zeros((), jnp.int32), ft0,
                 jnp.zeros((S, n), jnp.int32), jnp.zeros(S, jnp.int32),
-                jnp.zeros(S, jnp.int32), x_init, xs_init, sub[:, 0],
+                jnp.zeros(S, jnp.int32), x_init, xs_init, sub[:, 0], grid,
                 jnp.zeros((S, K)), jnp.zeros((S, K)), jnp.zeros((S, K)))
         out = lax.while_loop(cond, body, init)
-        _, _, _, k, comp, x, _, _, Tb, vb, gb = out
+        _, _, _, k, comp, x, _, _, _, Tb, vb, gb = out
         return k, comp, x, Tb.T, vb.T, gb.T      # (K, S) like the scans
 
     kfin, comp, x, T, val, gn = jax.block_until_ready(run(keys0))
@@ -478,11 +803,26 @@ def simulate_batch_jax(strategy: AggregationStrategy,
                        gamma: float = 0.0,
                        seeds: Sequence[int] = (0,),
                        record_every: int = 1,
-                       use_pallas: bool = False) -> List[Trace]:
+                       use_pallas: bool = False,
+                       malenia_chain: Optional[int] = None) -> List[Trace]:
     """One jitted ``(seeds, ...)`` array program per strategy family
-    (m-sync round scan, Rennala renewal scan, Async/Ringmaster arrival
-    recursion); returns the per-seed :class:`Trace` list (timing-only
-    traces have empty arrays, like the scalar fast path).
+    (m-sync round scan, Rennala/Malenia renewal scans, Async/Ringmaster
+    keyed arrival recursion); returns the per-seed :class:`Trace` list
+    (timing-only traces have empty arrays, like the scalar fast path).
+
+    RNG/backend guarantees: every draw comes from ``jax.random`` keys
+    derived from ``PRNGKey(seed)`` — per-seed reproducible, sweep-
+    independent, equal in distribution to (never stream-equal with) the
+    NumPy engines; deterministic models (FixedTimes, universal) match
+    the NumPy engines to float tolerance in generic position, with ties
+    broken by worker index. ``malenia_chain`` overrides the Malenia
+    engine's per-round renewal-chain length — the default
+    ``max(2*ceil(S), ceil(3*spread) + ceil(S), 8)`` scales with the
+    model's mean-speed spread ``max(tau)/min(tau)`` (fast workers keep
+    arriving while the slowest delivers its first), so strongly
+    heterogeneous models allocate ``(seeds, n, L+1)`` chains with large
+    ``L``; the engine retries with doubled chains, then raises, if a
+    round outruns them.
 
     The FixedTimes timing-only m-sync case hits a module-level jit cache
     (no recompile across calls of the same shape); the other programs
@@ -499,6 +839,16 @@ def simulate_batch_jax(strategy: AggregationStrategy,
     K = int(K)
     if K <= 0:
         raise ValueError(f"K={K} must be positive for the jax backend")
+
+    if isinstance(model, UniversalModel) and problem is None and S > 1:
+        # universal timing-only runs are deterministic (finish-time
+        # inversions, no draws): compute one seed, replicate the Trace
+        row = simulate_batch_jax(strategy, model, K, problem=None,
+                                 gamma=gamma, seeds=[seeds[0]],
+                                 record_every=record_every,
+                                 use_pallas=use_pallas,
+                                 malenia_chain=malenia_chain)
+        return [dataclasses.replace(row[0]) for _ in range(S)]
 
     fixed = isinstance(model, FixedTimes)
     math = problem is not None
@@ -524,6 +874,10 @@ def simulate_batch_jax(strategy: AggregationStrategy,
         comp, x, T, val, gn = _rennala_run(model, problem,
                                            int(strategy.batch), n, S, K,
                                            gamma, use_pallas, seeds)
+    elif kind == "malenia":
+        comp, x, T, val, gn, used = _malenia_run(
+            model, problem, float(strategy.S), n, S, K, gamma, seeds,
+            chain_len=malenia_chain)
     else:
         used = K          # every server step consumes exactly one gradient
         md = int(strategy.max_delay) if kind == "ringmaster" else K + 1
@@ -533,6 +887,7 @@ def simulate_batch_jax(strategy: AggregationStrategy,
 
     comp = np.asarray(comp)
     T = np.asarray(T)                             # (K, S)
+    used = np.broadcast_to(np.asarray(used), (S,))  # malenia: per seed
     total = T[-1]
     traces: List[Trace] = []
     if math:
@@ -550,7 +905,7 @@ def simulate_batch_jax(strategy: AggregationStrategy,
             gns = np.concatenate([[gn0], gn[rec - 1, s]])
             traces.append(Trace(times, vals, gns, iterations=K,
                                 total_time=float(total[s]),
-                                gradients_used=used,
+                                gradients_used=int(used[s]),
                                 gradients_computed=int(comp[s]),
                                 x_final=x_np[s]))
     else:
@@ -558,6 +913,6 @@ def simulate_batch_jax(strategy: AggregationStrategy,
         for s in range(S):
             traces.append(Trace(e, e, e, iterations=K,
                                 total_time=float(total[s]),
-                                gradients_used=used,
+                                gradients_used=int(used[s]),
                                 gradients_computed=int(comp[s])))
     return traces

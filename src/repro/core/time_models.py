@@ -39,6 +39,25 @@ the cumulative-power grid (the event engine's universal hot path).
 Every random model also reports its ``(tau_i, R)`` sub-exponential
 certificate where known, so the theory in :mod:`repro.core.complexity` can be
 evaluated against the exact constants used by the simulator.
+
+Device-resident hooks (the ``backend="jax"`` engines in
+:mod:`repro.core.batch_jax` consume these):
+
+* ``SubExponentialTimes.jax_sampler(key) -> (n,)`` — one full round of
+  per-worker times (every in-tree factory installs it);
+* ``SubExponentialTimes.jax_sampler_item(key, i) -> scalar`` — ONE draw
+  from worker ``i``'s marginal, for arrival-indexed recursions that
+  restart a single worker per event (the keyed Async/Ringmaster path —
+  one draw per arrival instead of a full ``(seeds, n)`` row);
+* :func:`jax_worker_key_grid` — the pre-split ``(seeds, workers)``
+  counter-key grid those keyed draws consume: worker ``i``'s stream
+  under seed ``s`` is a pure function of ``(s, i)``, independent of
+  arrival order and of which other seeds are in the sweep (the
+  ``jax.random`` twin of the ``rng_scheme="counter"`` contract);
+* ``UniversalModel.finish_times_jax`` — the jit-compatible twin of
+  ``finish_times`` (batched ``searchsorted`` on the cumulative-power
+  grid + the same closed-form quadratic segment inversion), which lets
+  universal/partial-participation scenarios run inside jitted sweeps.
 """
 
 from __future__ import annotations
@@ -54,6 +73,7 @@ __all__ = [
     "FixedTimes",
     "SubExponentialTimes",
     "philox_rngs",
+    "jax_worker_key_grid",
     "truncated_normal_times",
     "exponential_times",
     "shifted_exponential_times",
@@ -81,6 +101,32 @@ def philox_rngs(seeds: Sequence[int]) -> list:
     return [np.random.Generator(np.random.Philox(
         key=np.random.SeedSequence(int(s)).generate_state(2, np.uint64)))
         for s in seeds]
+
+
+def jax_worker_key_grid(seed_keys, n: int):
+    """Pre-split ``(seeds, workers)`` ``jax.random`` key grid.
+
+    ``grid[s, i]`` roots worker ``i``'s independent draw stream under
+    seed ``s``: arrival-indexed engines split one fresh subkey off
+    ``grid[s, i]`` per arrival of worker ``i``, so a worker's stream is
+    a pure function of ``(seed value, worker index)`` — independent of
+    the arrival order, of the other workers, and of which other seeds
+    are in the sweep. This is the ``jax.random`` counter-key twin of the
+    NumPy :func:`philox_rngs` contract (``rng_scheme="counter"``): NOT
+    stream-equal to any NumPy path, reproducible per seed value.
+
+    ``seed_keys`` is a sequence of seed ints or an already-built
+    ``(seeds, 2)`` raw ``uint32`` key array (e.g. one branch of a
+    ``jax.random.split``, to keep the grid disjoint from other streams
+    derived from the same seed).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if getattr(seed_keys, "ndim", None) != 2:
+        seed_keys = jnp.stack(
+            [jax.random.PRNGKey(int(s)) for s in seed_keys])
+    return jax.vmap(lambda k: jax.random.split(k, n))(seed_keys)
 
 
 def _as_rng(key, rng_scheme: str):
@@ -245,7 +291,12 @@ class SubExponentialTimes(TimeModel):
     prefers it for bulk restarts. ``jax_sampler(key) -> (n,)``, when
     provided, draws one full round of per-worker times with ``jax.random``
     — the ``simulate_batch`` JAX backend needs it (distribution-equal to
-    the NumPy samplers, not stream-equal).
+    the NumPy samplers, not stream-equal). ``jax_sampler_item(key, i)``
+    draws ONE sample from worker ``i``'s marginal (``i`` may be traced):
+    the keyed Async/Ringmaster arrival loop uses it with a
+    :func:`jax_worker_key_grid` so each arrival costs one draw instead
+    of a full ``(seeds, n)`` row; when absent, the engine falls back to
+    row draws through ``jax_sampler`` (correct, ~n× more draw volume).
     """
 
     taus: np.ndarray
@@ -255,6 +306,7 @@ class SubExponentialTimes(TimeModel):
     batch_sampler: Optional[Callable[[np.ndarray, np.random.Generator],
                                      np.ndarray]] = None
     jax_sampler: Optional[Callable] = None
+    jax_sampler_item: Optional[Callable] = None
 
     def __post_init__(self) -> None:
         self.taus = np.asarray(self.taus, dtype=float)
@@ -327,10 +379,20 @@ def truncated_normal_times(mus: Sequence[float], sigma: float
                                         mus.shape)
         return mus + sigma * z
 
+    def jax_sampler_item(key, i):
+        import jax
+        import jax.numpy as jnp
+        mu = jnp.asarray(mus)[i]
+        if sigma == 0:
+            return jnp.maximum(mu, 0.0)
+        z = jax.random.truncated_normal(key, (0.0 - mu) / sigma, jnp.inf)
+        return mu + sigma * z
+
     return SubExponentialTimes(taus, sampler, R=float(sigma),
                                name=f"truncnorm(sigma={sigma})",
                                batch_sampler=batch_sampler,
-                               jax_sampler=jax_sampler)
+                               jax_sampler=jax_sampler,
+                               jax_sampler_item=jax_sampler_item)
 
 
 def exponential_times(lam: float, n: int) -> SubExponentialTimes:
@@ -344,10 +406,14 @@ def exponential_times(lam: float, n: int) -> SubExponentialTimes:
         import jax
         return jax.random.exponential(key, (n,)) / lam
 
+    def jax_sampler_item(key, i):
+        import jax
+        return jax.random.exponential(key) / lam
+
     return SubExponentialTimes(
         taus, sampler, R=1.0 / lam, name=f"exp(lam={lam})",
         batch_sampler=lambda w, rng: rng.exponential(1.0 / lam, size=len(w)),
-        jax_sampler=jax_sampler)
+        jax_sampler=jax_sampler, jax_sampler_item=jax_sampler_item)
 
 
 def shifted_exponential_times(mus: Sequence[float], lams: Sequence[float]
@@ -364,10 +430,16 @@ def shifted_exponential_times(mus: Sequence[float], lams: Sequence[float]
         import jax
         return mus + jax.random.exponential(key, mus.shape) / lams
 
+    def jax_sampler_item(key, i):
+        import jax
+        import jax.numpy as jnp
+        return (jnp.asarray(mus)[i]
+                + jax.random.exponential(key) / jnp.asarray(lams)[i])
+
     return SubExponentialTimes(
         taus, sampler, R=float(np.max(1.0 / lams)), name="shifted-exp",
         batch_sampler=lambda w, rng: mus[w] + rng.exponential(1.0 / lams[w]),
-        jax_sampler=jax_sampler)
+        jax_sampler=jax_sampler, jax_sampler_item=jax_sampler_item)
 
 
 def gamma_times(means: Sequence[float], var: float) -> SubExponentialTimes:
@@ -387,10 +459,16 @@ def gamma_times(means: Sequence[float], var: float) -> SubExponentialTimes:
         import jax
         return jax.random.gamma(key, ks) * thetas
 
+    def jax_sampler_item(key, i):
+        import jax
+        import jax.numpy as jnp
+        return (jax.random.gamma(key, jnp.asarray(ks)[i])
+                * jnp.asarray(thetas)[i])
+
     return SubExponentialTimes(
         means, sampler, R=R, name="gamma",
         batch_sampler=lambda w, rng: rng.gamma(ks[w], thetas[w]),
-        jax_sampler=jax_sampler)
+        jax_sampler=jax_sampler, jax_sampler_item=jax_sampler_item)
 
 
 def uniform_times(means: Sequence[float], half_width: float
@@ -410,11 +488,17 @@ def uniform_times(means: Sequence[float], half_width: float
         # sample_time / sample_times (times are nonnegative a.s.)
         return jnp.maximum(means + u, 0.0)
 
+    def jax_sampler_item(key, i):
+        import jax
+        import jax.numpy as jnp
+        u = jax.random.uniform(key, minval=-half_width, maxval=half_width)
+        return jnp.maximum(jnp.asarray(means)[i] + u, 0.0)
+
     return SubExponentialTimes(
         means, sampler, R=float(half_width), name=f"uniform(w={half_width})",
         batch_sampler=lambda w, rng: rng.uniform(means[w] - half_width,
                                                  means[w] + half_width),
-        jax_sampler=jax_sampler)
+        jax_sampler=jax_sampler, jax_sampler_item=jax_sampler_item)
 
 
 def chi2_times(dofs: Sequence[int]) -> SubExponentialTimes:
@@ -429,12 +513,18 @@ def chi2_times(dofs: Sequence[int]) -> SubExponentialTimes:
         import jax
         return 2.0 * jax.random.gamma(key, dofs / 2.0)
 
+    def jax_sampler_item(key, i):
+        import jax
+        import jax.numpy as jnp
+        return 2.0 * jax.random.gamma(key, jnp.asarray(dofs)[i] / 2.0)
+
     return SubExponentialTimes(dofs.copy(), sampler,
                                R=float(2.0 * np.sqrt(np.max(dofs))),
                                name="chi2",
                                batch_sampler=lambda w, rng:
                                    rng.chisquare(dofs[w]),
-                               jax_sampler=jax_sampler)
+                               jax_sampler=jax_sampler,
+                               jax_sampler_item=jax_sampler_item)
 
 
 # ---------------------------------------------------------------------------
@@ -574,6 +664,107 @@ class UniversalModel:
         out = np.where(overflow, t_tail, np.maximum(t_in, t0))
         # never-started computations (t0 = inf) never finish
         return np.where(np.isfinite(t0), out, np.inf)
+
+    # ------------------------------------------------ device-resident twin
+    def _jax_arrays(self):
+        """(grid, cum, powers) as jnp arrays, cached per x64 mode (the
+        cache key matters: tests run the 1e-9 parity check under
+        ``jax.experimental.enable_x64`` while the engines default to
+        float32)."""
+        import jax
+        import jax.numpy as jnp
+
+        key = bool(jax.config.jax_enable_x64)
+        cache = getattr(self, "_jax_cache", None)
+        if cache is None:
+            cache = self._jax_cache = {}
+        if key not in cache:
+            # eager even when first touched inside a jit trace: cached
+            # constants must not be tracers of the enclosing program
+            with jax.ensure_compile_time_eval():
+                cache[key] = (jnp.asarray(self.grid),
+                              jnp.asarray(self.cum),
+                              jnp.asarray(self.powers))
+        return cache[key]
+
+    def _cum_at_jax(self, t, idx):
+        """jit-compatible :meth:`_cum_at_vec`: cumulative integral of
+        ``v_{idx}`` at times ``t`` (``t`` and ``idx`` broadcast)."""
+        import jax.numpy as jnp
+
+        g, cum, powers = self._jax_arrays()
+        t = jnp.asarray(t)
+        tf = jnp.where(jnp.isfinite(t), t, g[-1])
+        j = jnp.clip(jnp.searchsorted(g, tf, side="left") - 1, 0,
+                     len(self.grid) - 2)
+        dt = tf - g[j]
+        h = g[j + 1] - g[j]
+        v0 = powers[idx, j]
+        v1 = powers[idx, j + 1]
+        vt = v0 + (v1 - v0) * dt / h
+        mid = cum[idx, j] + 0.5 * (v0 + vt) * dt
+        tail = cum[idx, -1] + powers[idx, -1] * (tf - g[-1])
+        out = jnp.where(tf <= g[0], 0.0,
+                        jnp.where(tf >= g[-1], tail, mid))
+        return jnp.where(jnp.isfinite(t), out,
+                         jnp.where(powers[idx, -1] > 0, jnp.inf,
+                                   cum[idx, -1]))
+
+    def finish_times_jax(self, t0, workers=None, target: float = 1.0):
+        """jit-compatible :meth:`finish_times` (the ``backend="jax"``
+        hot path): smallest ``t >= t0`` with unit power integral.
+
+        ``t0``'s last axis indexes workers ``0..n-1`` unless ``workers``
+        (an integer array broadcastable against ``t0``) says otherwise —
+        arrival-indexed engines pass the single popped worker per seed.
+        A batched ``jnp.searchsorted`` (vmapped over the per-worker
+        cumulative-power rows) finds the crossing segment and the same
+        closed-form quadratic inversion as the NumPy path solves it —
+        deterministic, no RNG. Matches the NumPy ``finish_times`` to
+        ~1e-12 relative under x64 (tested at 1e-9 on the Fig 3/4 grids,
+        including the constant-tail extrapolation and the ``v = 0``
+        never-finishes inf branch); float32 precision under the engine
+        default. Like every jax engine draw, NOT part of any NumPy RNG
+        stream contract (the inversion is draw-free anyway).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        g, cum, powers = self._jax_arrays()
+        t0 = jnp.asarray(t0)
+        if workers is None:
+            workers = jnp.arange(self.n)
+        idx = jnp.broadcast_to(workers, t0.shape)
+        base = self._cum_at_jax(t0, idx)
+        want = base + target
+        tail_v = powers[idx, -1]
+        cum_end = cum[idx, -1]
+        overflow = cum_end < want                # crossing past the grid
+        t_tail = jnp.where(tail_v > 0,
+                           g[-1] + (want - cum_end) / jnp.where(
+                               tail_v > 0, tail_v, 1.0), jnp.inf)
+        want_in = jnp.where(overflow, cum_end, want)
+        # first grid index with cum >= want, per (row = worker) pair
+        flat_idx = idx.reshape(-1)
+        flat_want = want_in.reshape(-1)
+        jj = jax.vmap(lambda i, w: jnp.searchsorted(cum[i], w,
+                                                    side="left"))(
+            flat_idx, flat_want).reshape(idx.shape)
+        jj = jnp.clip(jj, 1, len(self.grid) - 1)  # crossing in [jj-1, jj]
+        rem = jnp.where(overflow, 0.0, want - cum[idx, jj - 1])
+        v0 = powers[idx, jj - 1]
+        v1 = powers[idx, jj]
+        h = g[jj] - g[jj - 1]
+        slope = (v1 - v0) / h
+        # 0.5*slope*dt^2 + v0*dt = rem, stable root (exact in the linear
+        # slope -> 0 limit): dt = 2*rem / (v0 + sqrt(v0^2 + 2*slope*rem))
+        disc = jnp.maximum(v0 * v0 + 2.0 * slope * rem, 0.0)
+        den = v0 + jnp.sqrt(disc)
+        dt = jnp.where(den > 0, 2.0 * rem / jnp.where(den > 0, den, 1.0),
+                       0.0)
+        t_in = g[jj - 1] + jnp.where(rem > 0, dt, 0.0)
+        out = jnp.where(overflow, t_tail, jnp.maximum(t_in, t0))
+        return jnp.where(jnp.isfinite(t0), out, jnp.inf)
 
 
 @dataclasses.dataclass

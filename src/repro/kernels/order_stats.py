@@ -16,6 +16,17 @@ we fall back to ``lax.top_k`` (fine on TPU, the intended accelerator).
 mode on CPU, worth using compiled on TPU where VMEM-resident iteration
 beats a full sort for small ``m``.
 
+For large ``m`` (``m > _MAX_ITERATIVE_M``, the Rennala/Malenia
+``batch >> 64`` pools) the extraction loop's ``O(m · n)`` cost loses, but
+``lax.top_k`` still forces the slow XLA sort lowering out of the fused
+scan body. ``mth_smallest_counting`` keeps big-batch selection on the
+fused path: a value-domain counting bisection (elementwise
+``count(x <= mid)`` passes only) narrows an interval around the
+statistic, a short snap loop lands on the exact element, and the result
+is *verified* by rank counts — the rare unverified row (pathological tie
+mass at the row minimum) falls back to ``lax.top_k`` behind a
+``lax.cond``, so correctness never depends on the bisection converging.
+
 Tie semantics everywhere: the m-th order statistic counts multiplicity
 (``mth_smallest(x, m) == jnp.sort(x)[..., m-1]``).
 """
@@ -29,10 +40,15 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-__all__ = ["mth_smallest", "mth_smallest_iterative", "mth_smallest_pallas"]
+__all__ = ["mth_smallest", "mth_smallest_iterative", "mth_smallest_counting",
+           "mth_smallest_pallas"]
 
 # above this m the O(m*n) extraction loop loses to top_k even on CPU
 _MAX_ITERATIVE_M = 64
+
+# counting selection: value-bisection passes, then snap-to-element passes
+_COUNT_BISECT_ITERS = 26
+_COUNT_SNAP_ITERS = 8
 
 
 def _extract_mth(x: jnp.ndarray, m: int) -> jnp.ndarray:
@@ -65,6 +81,67 @@ def _extract_mth(x: jnp.ndarray, m: int) -> jnp.ndarray:
 def mth_smallest_iterative(x: jnp.ndarray, m: int) -> jnp.ndarray:
     """m-th smallest along the last axis via tie-class extraction."""
     return _extract_mth(x, m)
+
+
+def _counting_select(x: jnp.ndarray, m: int):
+    """Value-domain counting bisection for the m-th smallest.
+
+    Returns ``(value, verified)``: per-row candidates plus one scalar
+    flag that every row's candidate passed the exact rank check
+    (``count(x < v) < m <= count(x <= v)``). Elementwise ops only, so
+    XLA fuses the whole selection into an enclosing scan body — no
+    ``sort``/``top_k`` lowering on the hot path.
+    """
+    batch = x.shape[:-1]
+    # invariants: count(x <= lo) < m (lo below the whole row at start),
+    # count(x <= hi) >= m (hi is the row max, count = n >= m)
+    lo = x.min(axis=-1) - 1.0
+    hi = x.max(axis=-1)
+
+    def bisect(_, lh):
+        lo, hi = lh
+        mid = 0.5 * (lo + hi)
+        ge = (x <= mid[..., None]).sum(axis=-1) >= m
+        return jnp.where(ge, lo, mid), jnp.where(ge, mid, hi)
+
+    lo, hi = lax.fori_loop(0, _COUNT_BISECT_ITERS, bisect, (lo, hi))
+
+    # snap to the smallest element above lo; while the interval is still
+    # wider than the gap between distinct row values, sub-threshold
+    # elements can sit in (lo, answer) — advance lo past them (each
+    # iteration consumes at least one tie class, and after the bisection
+    # above more than one leftover is pathological)
+    def cond(c):
+        _, _, done, it = c
+        return jnp.any(~done) & (it < _COUNT_SNAP_ITERS)
+
+    def body(c):
+        lo, val, done, it = c
+        cand = jnp.where(x > lo[..., None], x, jnp.inf).min(axis=-1)
+        ok = (x <= cand[..., None]).sum(axis=-1) >= m
+        val = jnp.where(done, val, cand)
+        lo = jnp.where(done | ok, lo, cand)
+        return lo, val, done | ok, it + 1
+
+    _, val, done, _ = lax.while_loop(
+        cond, body,
+        (lo, jnp.zeros(batch, x.dtype), jnp.zeros(batch, bool),
+         jnp.zeros((), jnp.int32)))
+    exact = ((x < val[..., None]).sum(axis=-1) < m) & done
+    return val, jnp.all(exact)
+
+
+def mth_smallest_counting(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """m-th smallest along the last axis via counting bisection.
+
+    The big-``m`` fused-path selection (``batch >> 64`` Rennala/Malenia
+    pools): elementwise counting passes instead of a ``top_k`` sort
+    lowering. Self-verifying — rows the bisection cannot certify fall
+    back to ``lax.top_k`` behind a ``lax.cond`` (paid only when taken).
+    """
+    val, ok = _counting_select(x, m)
+    return lax.cond(ok, lambda: val,
+                    lambda: -lax.top_k(-x, m)[0][..., m - 1])
 
 
 def _mth_smallest_kernel(m: int, x_ref, o_ref):
@@ -103,4 +180,4 @@ def mth_smallest(x: jnp.ndarray, m: int, *, use_pallas: bool = False,
         return x.max(axis=-1)
     if m <= _MAX_ITERATIVE_M:
         return mth_smallest_iterative(x, m)
-    return -lax.top_k(-x, m)[0][..., m - 1]
+    return mth_smallest_counting(x, m)

@@ -281,9 +281,15 @@ def test_jax_backend_random_model_distribution_equal():
 def test_jax_backend_rejects_unsupported():
     model = FixedTimes(np.ones(4))
     with pytest.raises(NotImplementedError):
-        simulate_batch("malenia", model, K=3, seeds=2, backend="jax")
-    with pytest.raises(NotImplementedError):
         simulate_batch("deadline", model, K=3, seeds=2, backend="jax")
+    with pytest.raises(NotImplementedError):
+        simulate_batch("dropout", model, K=3, seeds=2, backend="jax")
+    # malenia itself is jax-supported now, but a NumPy grads_by_worker
+    # callable cannot be jitted — still serial-only
+    from repro.core.strategies import Malenia
+    with pytest.raises(NotImplementedError):
+        simulate_batch(Malenia(S=1.0, grads_by_worker=lambda i, x, r: x),
+                       model, K=3, seeds=2, backend="jax")
     prob = quadratic_worst_case(d=10, p=0.5)
     with pytest.raises(NotImplementedError):
         simulate_batch("msync", model, K=3, seeds=2, problem=prob,
@@ -361,6 +367,172 @@ def test_jax_backend_rennala_random_model_distribution_equal():
     assert len(np.unique(a)) > 1
 
 
+def test_jax_backend_rennala_big_batch_counting_selection():
+    """ISSUE 4 tentpole: batch >> 64 routes the pool selection through
+    the counting-bisection path (no lax.top_k in the scan) and must stay
+    exact against the serial engine."""
+    model = _generic_fixed(9, seed=3)
+    tb_j = simulate_batch(("rennala", {"batch": 100}), model, K=6,
+                          seeds=2, backend="jax")
+    tb_s = simulate_batch(("rennala", {"batch": 100}), model, K=6,
+                          seeds=2, backend="serial")
+    np.testing.assert_allclose(tb_j.total_time, tb_s.total_time,
+                               rtol=1e-5)
+    np.testing.assert_array_equal(tb_j.stat("gradients_used"),
+                                  tb_s.stat("gradients_used"))
+    np.testing.assert_array_equal(tb_j.stat("gradients_computed"),
+                                  tb_s.stat("gradients_computed"))
+
+
+# ------------------------------------------------------------ malenia (jax)
+def test_jax_backend_malenia_matches_serial():
+    """ISSUE 4 acceptance: the Malenia renewal scan (per-worker count
+    predicate, harmonic-mean batching) matches the serial event engine
+    exactly on generic-position fixed times — wall clock, per-round
+    used-gradient counts (dynamic, unlike Rennala) and discards."""
+    model = _generic_fixed(14)
+    for Sv in (1.0, 2.5, 4.0):
+        tb_j = simulate_batch(("malenia", {"S": Sv}), model, K=18,
+                              seeds=3, backend="jax")
+        tb_s = simulate_batch(("malenia", {"S": Sv}), model, K=18,
+                              seeds=3, backend="serial")
+        np.testing.assert_allclose(tb_j.total_time, tb_s.total_time,
+                                   rtol=1e-5, err_msg=f"S={Sv}")
+        np.testing.assert_array_equal(tb_j.stat("gradients_used"),
+                                      tb_s.stat("gradients_used"))
+        np.testing.assert_array_equal(tb_j.stat("gradients_computed"),
+                                      tb_s.stat("gradients_computed"))
+
+
+def test_jax_backend_malenia_tie_heavy_model():
+    # all-equal times: every round is one big boundary tie class; the
+    # worker-major consumption must still batch exactly like the event
+    # engine's one-arrival-at-a-time predicate check
+    model = FixedTimes(np.ones(6))
+    for Sv in (1.0, 3.0):
+        tb_j = simulate_batch(("malenia", {"S": Sv}), model, K=10,
+                              seeds=2, backend="jax")
+        tb_s = simulate_batch(("malenia", {"S": Sv}), model, K=10,
+                              seeds=2, backend="serial")
+        np.testing.assert_allclose(tb_j.total_time, tb_s.total_time)
+        np.testing.assert_array_equal(tb_j.stat("gradients_used"),
+                                      tb_s.stat("gradients_used"))
+        np.testing.assert_array_equal(tb_j.stat("gradients_computed"),
+                                      tb_s.stat("gradients_computed"))
+
+
+def test_jax_backend_malenia_math_path():
+    """Malenia's per-worker-mean combine on jax (deterministic oracle:
+    p=1) must reproduce the serial engine's iterates."""
+    from repro.core.batch_jax import quadratic_worst_case_jax
+    rng = np.random.default_rng(1)
+    model = FixedTimes(np.sort(rng.uniform(0.5, 2.0, 12)))
+    tb_np = simulate_batch(("malenia", {"S": 2.5}), model, K=20,
+                           problem=quadratic_worst_case(d=30, p=1.0),
+                           gamma=0.4, seeds=2, record_every=5,
+                           backend="serial")
+    tb_jx = simulate_batch(("malenia", {"S": 2.5}), model, K=20,
+                           problem=quadratic_worst_case_jax(d=30, p=1.0),
+                           gamma=0.4, seeds=2, record_every=5,
+                           backend="jax")
+    a, b = tb_np.traces[0][0], tb_jx.traces[0][0]
+    np.testing.assert_allclose(a.times, b.times, rtol=1e-5)
+    np.testing.assert_allclose(a.values, b.values, rtol=1e-3, atol=1e-6)
+    np.testing.assert_allclose(a.grad_norms, b.grad_norms, rtol=1e-3,
+                               atol=1e-6)
+
+
+def test_jax_backend_malenia_random_model_distribution_equal():
+    model = exponential_times(1.0, 16)
+    a = simulate_batch(("malenia", {"S": 3.0}), model, K=12, seeds=32,
+                       backend="jax").total_time
+    b = simulate_batch(("malenia", {"S": 3.0}), model, K=12, seeds=32,
+                       backend="serial").total_time
+    assert a.mean() == pytest.approx(b.mean(), rel=0.15)
+    assert len(np.unique(a)) > 1
+
+
+# ------------------------------------------------- keyed async draw contract
+def test_jax_backend_async_keyed_draws_seed_pure():
+    """ISSUE 4 tentpole: the keyed Async path's per-worker streams are
+    pure functions of the seed value — the same seed produces the same
+    trace in any sweep and across calls (jax.random key-grid contract),
+    and results stay distribution-equal to the serial event engine."""
+    model = exponential_times(1.0, 12)
+    solo = simulate_batch("async", model, K=30, seeds=[3], backend="jax")
+    both = simulate_batch("async", model, K=30, seeds=[0, 3],
+                          backend="jax")
+    again = simulate_batch("async", model, K=30, seeds=[3], backend="jax")
+    assert solo.traces[0][0].total_time == both.traces[0][1].total_time
+    assert solo.traces[0][0].total_time == again.traces[0][0].total_time
+    a = simulate_batch("async", model, K=60, seeds=48,
+                       backend="jax").total_time
+    b = simulate_batch("async", model, K=60, seeds=48,
+                       backend="serial").total_time
+    assert a.mean() == pytest.approx(b.mean(), rel=0.15)
+    assert len(np.unique(a)) > 1
+
+
+# --------------------------------------------------- universal models (jax)
+def test_jax_backend_universal_all_strategy_families():
+    """ISSUE 4 acceptance: every strategy family runs universal models
+    under backend="jax" via the finish_times_jax inversion and matches
+    the serial event engine (float32 tolerance; generic-position Fig 3
+    powers)."""
+    from repro.core import powers_figure3
+    model = powers_figure3(n=10, seed=0, t_max=300.0)
+    specs = [("msync", {"m": 4}), ("rennala", {"batch": 6}),
+             ("malenia", {"S": 2.0}), ("async", {}),
+             ("ringmaster", {"max_delay": 2})]
+    for name, kw in specs:
+        tb_j = simulate_batch((name, kw), model, K=10, seeds=2,
+                              backend="jax")
+        tb_s = simulate_batch((name, kw), model, K=10, seeds=2,
+                              backend="serial")
+        np.testing.assert_allclose(tb_j.total_time, tb_s.total_time,
+                                   rtol=2e-4, err_msg=name)
+        np.testing.assert_array_equal(tb_j.stat("gradients_used"),
+                                      tb_s.stat("gradients_used"))
+        np.testing.assert_array_equal(tb_j.stat("gradients_computed"),
+                                      tb_s.stat("gradients_computed"))
+
+
+def test_jax_backend_universal_with_jax_problem_oracle():
+    """Universal model + JaxProblem oracle (the last serial-only oracle
+    cell): timing from the inversion, math from jax.random — against the
+    serial engine with the matching deterministic NumPy oracle."""
+    from repro.core import powers_figure3
+    from repro.core.batch_jax import quadratic_worst_case_jax
+    model = powers_figure3(n=8, seed=1, t_max=300.0)
+    tb_jx = simulate_batch(("msync", {"m": 4}), model, K=15,
+                           problem=quadratic_worst_case_jax(d=30, p=1.0),
+                           gamma=0.4, seeds=2, record_every=5,
+                           backend="jax")
+    tb_np = simulate_batch(("msync", {"m": 4}), model, K=15,
+                           problem=quadratic_worst_case(d=30, p=1.0),
+                           gamma=0.4, seeds=2, record_every=5,
+                           backend="serial")
+    a, b = tb_np.traces[0][0], tb_jx.traces[0][0]
+    np.testing.assert_allclose(a.times, b.times, rtol=2e-4)
+    np.testing.assert_allclose(a.values, b.values, rtol=1e-3, atol=1e-6)
+
+
+def test_jax_backend_partial_participation_distribution_level():
+    """Partial participation is adversarially tie-heavy (flat powers,
+    grid-aligned dead windows): float32 worker-index tie-breaking can
+    diverge from the float64 event heap by whole events, so the contract
+    here is distribution-level agreement, not per-run parity."""
+    from repro.core import PartialParticipationModel
+    model = PartialParticipationModel(n=10, v=1.0, p=0.2, period=5.0,
+                                      t_max=500.0)
+    tb_j = simulate_batch(("msync", {"m": 8}), model, K=10, seeds=2,
+                          backend="jax")
+    tb_s = simulate_batch(("msync", {"m": 8}), model, K=10, seeds=2,
+                          backend="serial")
+    np.testing.assert_allclose(tb_j.total_time, tb_s.total_time,
+                               rtol=0.15)
+
+
 def test_fastest_backend_resolution():
     """backend="fastest" stays on the NumPy engines below JAX_MIN_WORK
     and reports whichever backend actually ran; the TraceBatch records
@@ -387,6 +559,43 @@ def test_fastest_backend_resolution():
     assert tb.rng_scheme == "stream"
 
 
+def test_fastest_routing_admits_malenia_and_universal():
+    """ISSUE 4 satellite: backend="fastest" no longer forces Malenia and
+    universal models onto the serial path — the jax engines are eligible
+    (above the work threshold), while deterministic universal m-sync
+    timing stays on the replicating vectorized engine."""
+    from repro.core import powers_figure3
+    from repro.core.batch import JAX_MIN_WORK, _jax_eligible
+    from repro.core.batch_jax import jax_supported
+    from repro.core.strategies import Malenia, make_strategy
+
+    fixed = FixedTimes(np.arange(1.0, 17.0))
+    um = powers_figure3(n=16, seed=0, t_max=200.0)
+    for model in (fixed, um):
+        for name in ("malenia", "rennala", "async", "ringmaster"):
+            strat = make_strategy(name)
+            strat.bind(model.n)
+            assert jax_supported(strat, model, None), (name, type(model))
+            # the size gate is the only thing between them and jax
+            S_big = JAX_MIN_WORK // (10 * model.n) + 1
+            assert _jax_eligible(strat, model, None, None, 10, S_big), \
+                (name, type(model))
+    # grads_by_worker is a NumPy callable — still serial
+    mal = Malenia(S=1.0, grads_by_worker=lambda i, x, r: x)
+    mal.bind(16)
+    assert not jax_supported(mal, fixed, None)
+    # fastest keeps deterministic universal m-sync timing on vectorized
+    # (one scalar run replicated beats any device sweep)
+    tb = simulate_batch(("msync", {"m": 8}), um, K=10, seeds=4,
+                        backend="fastest")
+    assert tb.backend == "vectorized"
+    # explicit jax on universal still honored (and replicates per seed)
+    tb = simulate_batch(("msync", {"m": 8}), um, K=10, seeds=3,
+                        backend="jax")
+    assert tb.backend == "jax"
+    assert len({tr.total_time for tr in tb.traces[0]}) == 1
+
+
 # ------------------------------------------------------------ order stats
 def test_mth_smallest_kernels_match_sort():
     import jax.numpy as jnp
@@ -409,6 +618,37 @@ def test_mth_smallest_kernels_match_sort():
             np.asarray(mth_smallest_pallas(xj, m)), want, rtol=1e-6)
     with pytest.raises(ValueError):
         mth_smallest(xj, 0)
+
+
+def test_mth_smallest_counting_big_m():
+    """ISSUE 4 tentpole: for m > 64 (big-batch Rennala/Malenia pools)
+    mth_smallest routes through the counting bisection; exact against a
+    full sort, including tie classes and the verified top_k fallback
+    (tie mass at the row minimum exceeding the snap budget)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.order_stats import (mth_smallest,
+                                           mth_smallest_counting)
+    rng = np.random.default_rng(7)
+    x = rng.uniform(0.0, 1000.0, (6, 500))
+    x[1, :120] = 3.25                # tie class straddling boundaries
+    x[2, :] = 7.0                    # fully degenerate row
+    ref = np.sort(x, axis=1)
+    xj = jnp.asarray(x)
+    for m in (65, 100, 256, 499, 500):
+        np.testing.assert_allclose(np.asarray(mth_smallest(xj, m)),
+                                   ref[:, m - 1], rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(mth_smallest_counting(xj, m)), ref[:, m - 1],
+            rtol=1e-6)
+    # min-value tie mass > snap budget: must fall back to top_k and
+    # still be exact
+    y = np.full((2, 300), 5.0)
+    y[0, 150:] = 9.0
+    for m in (100, 200, 299):
+        np.testing.assert_allclose(
+            np.asarray(mth_smallest_counting(jnp.asarray(y), m)),
+            np.sort(y, axis=1)[:, m - 1])
 
 
 # -------------------------------------------------------- time model hooks

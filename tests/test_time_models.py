@@ -212,6 +212,89 @@ def test_finish_times_zero_power_and_inf_branches():
     np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
 
 
+def test_finish_times_jax_matches_scalar_to_1e9():
+    """ISSUE 4 acceptance: the jit-compatible finish_times_jax must
+    match the scalar/NumPy inversion to 1e-9 on the Fig 3/4 grids,
+    including the constant-tail extrapolation branch (t past the grid)
+    — under x64, since the engines' float32 default cannot express that
+    tolerance."""
+    import jax
+    from jax.experimental import enable_x64
+
+    for mk in (powers_figure3, powers_figure4):
+        model = mk(n=16, seed=0, t_max=60.0)
+        w = np.arange(16)
+        for t0 in (0.0, 7.3, np.linspace(0.0, 80.0, 16)):  # 80 > grid end
+            ref = model.finish_times(w, t0)
+            with enable_x64():
+                got = np.asarray(model.finish_times_jax(
+                    np.broadcast_to(np.asarray(t0, dtype=np.float64),
+                                    (16,))))
+            np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-9)
+
+
+def test_finish_times_jax_tail_inf_and_worker_branches():
+    """v = 0 tail => inf, t0 = inf => inf, and the explicit ``workers``
+    indexing the arrival-indexed engine uses — all against the NumPy
+    path."""
+    from jax.experimental import enable_x64
+
+    grid = np.arange(0.0, 10.0, 0.1)
+    powers = np.ones((2, len(grid)))
+    powers[1, 50:] = 0.0                 # power dies at t = 5
+    m = UniversalModel(grid, powers)
+    with enable_x64():
+        got = np.asarray(m.finish_times_jax(np.array([9.9, 9.0]),
+                                            target=5.0))
+        ref = m.finish_times([0, 1], np.array([9.9, 9.0]), target=5.0)
+        assert np.isinf(got[1]) and np.isinf(ref[1])
+        np.testing.assert_allclose(got[0], ref[0], rtol=1e-9)
+        gi = np.asarray(m.finish_times_jax(np.array([np.inf, 1.0]),
+                                           workers=np.array([0, 1])))
+        assert np.isinf(gi[0])
+        np.testing.assert_allclose(gi[1], m.finish_times([1], 1.0)[0],
+                                   rtol=1e-9)
+    # batched (seeds, workers) shape — the engine's actual call form
+    m3 = powers_figure3(n=6, seed=1, t_max=40.0)
+    t0 = np.random.default_rng(0).uniform(0.0, 30.0, (3, 6))
+    got = np.asarray(m3.finish_times_jax(t0.astype(np.float32)))
+    ref = np.stack([m3.finish_times(np.arange(6), row) for row in t0])
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-3)
+
+
+def test_jax_sampler_item_matches_marginals():
+    """ISSUE 4 tentpole: every factory's single-draw jax_sampler_item
+    (the keyed Async path) draws from the same per-worker marginal as
+    the scalar sampler — mean check per worker, nonnegative always."""
+    import jax
+
+    for model, _ in _all_subexp_factories():
+        assert model.jax_sampler_item is not None, model.name
+        keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+        for i in (0, model.n - 1):
+            d = np.asarray(jax.vmap(
+                lambda k: model.jax_sampler_item(k, i))(keys))
+            assert (d >= 0).all(), model.name
+            assert np.mean(d) == pytest.approx(model.mean_times()[i],
+                                               rel=0.1), model.name
+
+
+def test_jax_worker_key_grid_contract():
+    """Grid rows are pure functions of the seed VALUE: independent of
+    the sweep composition and of call order (the per-worker keyed-draw
+    contract in DESIGN.md §3b)."""
+    from repro.core.time_models import jax_worker_key_grid
+
+    a = np.asarray(jax_worker_key_grid([0, 3], 5))
+    b = np.asarray(jax_worker_key_grid([5, 3, 9], 5))
+    assert a.shape == (2, 5, 2)
+    np.testing.assert_array_equal(a[1], b[1])     # seed 3 row identical
+    np.testing.assert_array_equal(
+        a, np.asarray(jax_worker_key_grid([0, 3], 5)))
+    # distinct workers get distinct stream roots
+    assert len({tuple(k) for k in a[0]}) == 5
+
+
 def test_figure3_powers_shape_and_bounds():
     m = powers_figure3(n=50, seed=0, t_max=50.0)
     assert m.n == 50
