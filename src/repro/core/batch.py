@@ -27,7 +27,7 @@ Backends (``backend=``):
   over ``(seeds, workers)`` state (optionally using the Pallas top-m
   partial-sort kernel for the per-round m-th order statistic). Covers
   the m-sync family, Rennala and Malenia (renewal-batched rounds) and
-  Async/Ringmaster (keyed arrival-indexed recursion) under every model
+  Async/Ringmaster (renewal-chain arrival scan) under every model
   class — FixedTimes, sampled (``jax_sampler``) and universal
   (``finish_times_jax``) — the full DESIGN.md §3b coverage matrix.
   Distribution-equal, not RNG-stream-equal; matches NumPy within float
@@ -35,18 +35,21 @@ Backends (``backend=``):
   (adversarially tie-heavy instances, e.g. partial participation, can
   diverge by whole events under the worker-index tie-break).
 * ``"auto"`` (default) — ``vectorized`` when eligible, else ``serial``.
-* ``"fastest"`` — like ``auto`` but also considers the ``jax`` backend
-  when the sweep is large enough (``seeds * K * n >=``
-  :data:`JAX_MIN_WORK`) to amortize jit compilation — or whenever the
-  problem is a :class:`~repro.core.batch_jax.JaxProblem`, which only
-  jax can execute; this is what :func:`repro.exp.run_experiment` uses.
-  One deterministic exception: timing-only m-sync under a universal
-  model replicates ONE scalar run across seeds on the ``vectorized``
-  backend, so there is nothing for a device sweep to amortize and
-  ``fastest`` keeps it there; universal Rennala/Malenia/Async sweeps
-  (per-seed identical but with no replication shortcut ONLY in serial)
-  do route to jax above the work threshold. The backend that actually
-  ran is recorded per grid point in the :class:`TraceBatch`.
+* ``"fastest"`` — like ``auto`` but routes each grid point through a
+  **per-engine cost model** (:func:`estimate_backend_seconds`): the
+  estimated wall-clock of the host engine and of the jax engine that
+  would run this (round scan, arrival scan, or serial event loop — as a
+  function of S, K, n, the strategy's batching parameters, math vs
+  timing-only, and whether an accelerator is attached) are compared and
+  the cheaper one runs. A :class:`~repro.core.batch_jax.JaxProblem`
+  bypasses the comparison — only jax can execute it. One deterministic
+  exception: timing-only m-sync under a universal model replicates ONE
+  scalar run across seeds on the ``vectorized`` backend, so there is
+  nothing for a device sweep to win and ``fastest`` keeps it there.
+  The backend that actually ran AND the routing decision (estimates,
+  accelerator flag, reason) are recorded per grid point in the
+  :class:`TraceBatch`. This is what :func:`repro.exp.run_experiment`
+  uses.
 
 Grid semantics: ``grid`` maps parameter names to value sequences and the
 cartesian product is swept. Keys in :data:`SIM_GRID_KEYS` override the
@@ -66,15 +69,142 @@ from .strategies import (AggregationStrategy, MSync, STRATEGIES, Trace,
                          _fast_msync_timing_batch, make_strategy, simulate)
 from .time_models import FixedTimes, TimeModel, UniversalModel, philox_rngs
 
-__all__ = ["TraceBatch", "simulate_batch", "SIM_GRID_KEYS", "JAX_MIN_WORK"]
+__all__ = ["TraceBatch", "simulate_batch", "SIM_GRID_KEYS", "JAX_MIN_WORK",
+           "estimate_backend_seconds"]
 
 # grid keys routed to simulate() itself; everything else goes to the
 # strategy factory
 SIM_GRID_KEYS = ("K", "gamma", "record_every", "tol_grad_sq")
 
-# backend="fastest" only reaches for jax above this seeds * K * n volume
-# (below it, jit compilation dominates and the NumPy engines win)
+#: DEPRECATED — the PR 3/4 flat ``seeds * K * n`` jax gate. Routing now
+#: goes through the per-engine cost model (:func:`estimate_backend_seconds`);
+#: this name stays importable for downstream callers and survives inside
+#: the router as the *probe floor*: sweeps whose element work is below it
+#: go straight to the host engines with no support probe or cost
+#: estimate — at that scale jit compilation dominates any jax engine,
+#: so there is nothing to price.
 JAX_MIN_WORK = 1_000_000
+
+# ---------------------------------------------------------------------------
+# the per-engine cost model behind backend="fastest"
+# ---------------------------------------------------------------------------
+
+#: Cost-model constants, calibrated on this container's CPU via
+#: ``benchmarks/simbatch_speed.py`` shapes (n=1000, S=32). They only need
+#: to get the ORDERING right near the routing boundaries, not absolute
+#: wall-clock; regenerate by timing the engines if they drift.
+COST_CONSTANTS = {
+    "heap_event": 2.6e-6,    # serial event-loop seconds per heap pop
+    "np_elem": 1.1e-7,       # serial m-sync fast path, per S*K*n element
+    "vec_elem": 2.0e-8,      # vectorized counter engine, per element
+    "jax_elem": 1.6e-8,      # jitted round-scan, per element (warm)
+    "pool_elem": 4.0e-8,     # arrival-scan chain draw + merge, per pool elem
+    "scan_step": 3.2e-6,     # arrival-scan step at S=32 (scales ~S/32)
+    "jit_compile": 0.6,      # closure-compiled program, per call
+    "accel_speedup": 20.0,   # discount on jax COMPUTE (not compile) terms
+}
+
+
+def _accelerator_present() -> bool:
+    """True when jax reports a non-CPU default backend. Cached; only
+    called once the probe floor passed, so the jax import it forces is
+    already amortized by the sweep."""
+    global _ACCEL_PRESENT
+    if _ACCEL_PRESENT is None:
+        try:
+            import jax
+            _ACCEL_PRESENT = jax.default_backend() != "cpu"
+        except Exception:          # pragma: no cover - jax always present
+            _ACCEL_PRESENT = False
+    return _ACCEL_PRESENT
+
+
+_ACCEL_PRESENT = None
+
+
+def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
+                             model, S: int, K: int, n: int,
+                             accelerator: bool = False) -> float:
+    """Estimated wall-clock seconds for one timing-only grid point.
+
+    ``backend`` is ``"serial"``, ``"vectorized"`` or ``"jax"``;
+    ``strategy`` must be bound. The estimate is engine-aware:
+
+    * serial — the event loop pays :data:`COST_CONSTANTS` ``heap_event``
+      per pop (K pops for Async, ``~K * (1 + sqrt(n/(max_delay+1)))``
+      for Ringmaster's discard storms, ``K * batch`` for Rennala,
+      ``>= K * n`` for Malenia), except timing-only m-sync, which runs
+      the round-vectorized fast path at ``np_elem`` per S*K*n element.
+    * vectorized — ``vec_elem`` per element (m-sync timing only).
+    * jax round scans (m-sync / Rennala / Malenia) — ``jax_elem`` per
+      scanned element plus one ``jit_compile`` for the closure-compiled
+      programs (the FixedTimes timing m-sync program is module-cached:
+      no compile term).
+    * jax arrival scan (Async / Ringmaster) — ``pool_elem`` per
+      renewal-chain pool element (the same pool the engine would draw,
+      via :func:`repro.core.batch_jax.arrival_scan_work`) plus
+      ``scan_step`` per window arrival when a scan is needed
+      (Ringmaster; timing-only Async is sort-and-slice). These programs
+      are jit-cached by shape, so no per-call compile term.
+
+    ``accelerator=True`` divides the jax COMPUTE terms by
+    ``accel_speedup`` (compile is host-bound and stays). Host engines
+    never get the discount — they run on the CPU regardless.
+    """
+    C = COST_CONSTANTS
+    kind = _engine_kind(strategy)
+    if kind is None:
+        raise ValueError(
+            f"no cost model for {getattr(strategy, 'name', strategy)!r}: "
+            f"only strategies with a jax engine classification are "
+            f"priced (event-loop-only strategies never route)")
+    work = float(S) * float(K) * float(n)
+    if backend == "vectorized":
+        return work * C["vec_elem"]
+    if backend == "serial":
+        if kind == "msync":
+            return work * C["np_elem"]
+        if kind == "async":
+            events = float(K)
+        elif kind == "ringmaster":
+            md = int(getattr(strategy, "max_delay", 1))
+            events = K * (1.0 + float(np.sqrt(n / (md + 1.0))))
+        elif kind == "rennala":
+            events = float(K) * max(int(getattr(strategy, "batch", 1)), 1)
+        else:                       # malenia: every worker >= 1 per round
+            events = float(K) * n
+        return S * events * C["heap_event"]
+    if backend != "jax":
+        raise ValueError(f"no cost model for backend {backend!r}")
+    accel = C["accel_speedup"] if accelerator else 1.0
+    if kind in ("async", "ringmaster"):
+        from .batch_jax import arrival_scan_work
+        ring = kind == "ringmaster"
+        md = int(getattr(strategy, "max_delay", 0)) if ring else 0
+        pool, window = arrival_scan_work(model, n, K, ringmaster=ring,
+                                         max_delay=md)
+        cost = S * pool * C["pool_elem"]
+        if ring:
+            cost += window * C["scan_step"] * (S / 32.0)
+        return cost / accel         # jit-cached: no compile term
+    if kind == "rennala":
+        elems = work * max(int(getattr(strategy, "batch", 1)), 1)
+    elif kind == "malenia":
+        elems = work * 2.0 * max(float(getattr(strategy, "S", 1.0)), 1.0)
+    else:
+        elems = work
+    cost = elems * C["jax_elem"] / accel
+    fixed_timing_cached = kind == "msync" and isinstance(model, FixedTimes)
+    if not fixed_timing_cached:
+        cost += C["jit_compile"]    # closure-compiled per call
+    return cost
+
+
+def _engine_kind(strategy) -> Optional[str]:
+    """Which jax engine family would run ``strategy`` (None: event-loop
+    only). Pure classification — no jax import."""
+    from .batch_jax import _classify
+    return _classify(strategy)
 
 StrategySpec = Union[str, AggregationStrategy,
                      "tuple[str, Dict[str, Any]]", Callable[..., Any]]
@@ -102,6 +232,15 @@ class TraceBatch:
     #                                    for serial (per-seed parity by
     #                                    construction), "jax.random" for
     #                                    the jax backend
+    routing: Optional[List[Dict[str, Any]]] = None
+    #                                    one record per grid point: the
+    #                                    chosen backend plus, for
+    #                                    backend="fastest", the cost-model
+    #                                    estimates/reason (see
+    #                                    _route_fastest); explicit backends
+    #                                    record {"chosen": ..., "forced":
+    #                                    True}. Surfaced in run_experiment
+    #                                    JSON meta.
 
     # ------------------------------------------------------------ arrays
     def stat(self, field: str) -> np.ndarray:
@@ -223,22 +362,86 @@ def _is_jax_problem(problem) -> bool:
     return isinstance(problem, JaxProblem)
 
 
+def _route_fastest(strat: AggregationStrategy, model, problem, K_pt: int,
+                   S: int, rng_scheme: str, tol_pt) -> "tuple[str, Dict]":
+    """The ``backend="fastest"`` router: pick the cheapest *eligible*
+    engine for one grid point and say why.
+
+    Hard rules first (executability and contracts beat estimates):
+    a :class:`~repro.core.batch_jax.JaxProblem` runs on jax or raises;
+    deterministic universal m-sync timing replicates one scalar run on
+    ``vectorized`` (nothing for a device sweep to win); an explicit
+    ``rng_scheme="stream"`` request on a sampled model is a parity
+    contract jax cannot honor; ``tol_grad_sq`` early exit needs the
+    event loop. Sweeps below the :data:`JAX_MIN_WORK` probe floor stay
+    on the host engines with no probe or estimate (jit compilation
+    dominates any jax engine there). Everything else is decided by
+    comparing :func:`estimate_backend_seconds` for the host engine vs
+    the jax engine, with the accelerator probe folded in.
+
+    Returns ``(chosen, info)`` where ``info`` is the routing record
+    stored per grid point in :class:`TraceBatch.routing`.
+    """
+    n = model.n
+    kind = _engine_kind(strat)
+    vec_ok = _vectorized_eligible(strat, model, problem, K_pt, tol_pt)
+    host = "vectorized" if vec_ok else "serial"
+    info: Dict[str, Any] = {"engine": kind or "event-loop",
+                            "work": int(S) * int(K_pt) * int(n)}
+
+    def pick(chosen, reason):
+        info.update(chosen=chosen, reason=reason)
+        return chosen, info
+
+    if _is_jax_problem(problem):
+        from .batch_jax import _check_supported, jax_supported
+        if tol_pt is None and K_pt > 0 and jax_supported(strat, model,
+                                                         problem):
+            return pick("jax", "jax-problem: only jax can execute it")
+        # raise the precise unsupported-combination error instead of
+        # letting the serial engine crash inside the jax oracle
+        _check_supported(strat, model, problem)
+        raise NotImplementedError(
+            "JaxProblem sweeps run on the jax backend only, which does "
+            "not support tol_grad_sq early exit or K <= 0; use a NumPy "
+            "Problem with backend='serial'")
+    if isinstance(model, UniversalModel) and vec_ok:
+        # deterministic universal m-sync timing replicates ONE scalar
+        # run across seeds — no sweep for a device engine to win
+        return pick("vectorized", "deterministic-replication")
+    if tol_pt is not None or K_pt <= 0:
+        return pick(host, "tol-early-exit needs the event loop")
+    if kind is None:
+        return pick(host, "no jax engine for this strategy")
+    if (rng_scheme == "stream"
+            and not isinstance(model, (FixedTimes, UniversalModel))):
+        return pick(host, "stream-parity contract excludes jax")
+    if info["work"] < JAX_MIN_WORK:
+        return pick(host, "below the JAX_MIN_WORK probe floor")
+    from .batch_jax import jax_supported
+    if not jax_supported(strat, model, problem):
+        return pick(host, "model/oracle unsupported by the jax engines")
+    accel = _accelerator_present()
+    est = {host: estimate_backend_seconds(host, strat, model, S, K_pt, n),
+           "jax": estimate_backend_seconds("jax", strat, model, S, K_pt, n,
+                                           accelerator=accel)}
+    info["est_seconds"] = {k: round(v, 6) for k, v in est.items()}
+    info["accelerator"] = accel
+    chosen = min(est, key=est.get)
+    return pick(chosen, "cost-model")
+
+
 def _jax_eligible(strategy: AggregationStrategy, model, problem,
                   tol_grad_sq, K: int, S: int) -> bool:
-    """True when the jax backend supports the combination AND the sweep
-    is big enough (``S * K * n >= JAX_MIN_WORK``) to amortize jit. A
-    :class:`~repro.core.batch_jax.JaxProblem` bypasses the size gate:
-    jax is the only backend that can execute its oracle at all.
-    Support now spans the full strategy × model matrix (m-sync family,
-    Rennala, Malenia, Async/Ringmaster × fixed/sampled/universal), so
-    ``fastest`` no longer forces Malenia or universal scenarios onto
-    the serial path."""
-    if tol_grad_sq is not None or K <= 0:
+    """DEPRECATED shim (PR 3/4 signature): True when ``fastest`` would
+    route this combination to jax. Routing decisions now come from
+    :func:`_route_fastest` / :func:`estimate_backend_seconds`."""
+    try:
+        chosen, _ = _route_fastest(strategy, model, problem, K, S,
+                                   "counter", tol_grad_sq)
+    except NotImplementedError:
         return False
-    if not _is_jax_problem(problem) and S * K * model.n < JAX_MIN_WORK:
-        return False
-    from .batch_jax import jax_supported
-    return jax_supported(strategy, model, problem)
+    return chosen == "jax"
 
 
 # ---------------------------------------------------------------------------
@@ -256,7 +459,8 @@ def simulate_batch(strategy: StrategySpec,
                    tol_grad_sq: Optional[float] = None,
                    backend: str = "auto",
                    rng_scheme: str = "counter",
-                   use_pallas: bool = False) -> TraceBatch:
+                   use_pallas: bool = False,
+                   x64: bool = False) -> TraceBatch:
     """Run ``strategy`` under ``model`` across ``seeds`` × ``grid``.
 
     ``seeds`` is an int (→ ``range(seeds)``) or an explicit sequence.
@@ -273,7 +477,12 @@ def simulate_batch(strategy: StrategySpec,
     strategy (m-sync family, rennala, malenia, async, ringmaster) under
     every time-model class, timing-only or with a
     :class:`~repro.core.batch_jax.JaxProblem`; ``deadline``/``dropout``
-    and NumPy oracles stay on the host engines. See the module
+    and NumPy oracles stay on the host engines. ``x64=True`` runs the
+    jax backend in float64 — slower, but gives per-run tie parity with
+    the float64 NumPy event heap on adversarially tie-heavy instances
+    (flat-power partial participation) where float32 tie-breaking
+    diverges by whole events; the NumPy engines are always float64, so
+    the flag only affects grid points that run on jax. See the module
     docstring for backend and grid semantics.
     """
     seed_list = list(range(seeds)) if isinstance(seeds, (int, np.integer)) \
@@ -291,6 +500,7 @@ def simulate_batch(strategy: StrategySpec,
     traces: List[List[Trace]] = []
     used_backends = []
     used_schemes = []
+    used_routing: List[Dict[str, Any]] = []
     for pt in points:
         sim_kw = {k: pt[k] for k in pt if k in SIM_GRID_KEYS}
         strat_kw = {**base_kw, **{k: v for k, v in pt.items()
@@ -305,41 +515,20 @@ def simulate_batch(strategy: StrategySpec,
             strat = make_strategy(strat)
         strat.bind(model.n)
 
-        chosen = backend
         if backend == "auto":
             chosen = "vectorized" if _vectorized_eligible(
                 strat, model, problem, K_pt, tol_pt) else "serial"
+            route_info = {"chosen": chosen, "forced": False,
+                          "reason": "auto: vectorized when eligible",
+                          "engine": _engine_kind(strat) or "event-loop"}
         elif backend == "fastest":
-            # an explicit stream request is a parity contract jax cannot
-            # honor for sampled models (jax.random draws) — stay on the
-            # stream-capable engines there, unless only jax can execute
-            # the problem (a JaxProblem oracle), where executability wins
-            jax_ok = (_is_jax_problem(problem)
-                      or rng_scheme != "stream"
-                      or isinstance(model, (FixedTimes, UniversalModel)))
-            if (isinstance(model, UniversalModel)
-                    and _vectorized_eligible(strat, model, problem, K_pt,
-                                             tol_pt)):
-                # deterministic universal m-sync timing replicates ONE
-                # scalar run across seeds — no sweep for jax to win
-                chosen = "vectorized"
-            elif jax_ok and _jax_eligible(strat, model, problem, tol_pt,
-                                          K_pt, len(seed_list)):
-                chosen = "jax"
-            elif _is_jax_problem(problem):
-                # only jax can execute a JaxProblem oracle; raise the
-                # precise unsupported-combination error instead of
-                # letting the serial engine crash inside it
-                from .batch_jax import _check_supported
-                _check_supported(strat, model, problem)
-                raise NotImplementedError(
-                    "JaxProblem sweeps run on the jax backend only, "
-                    "which does not support tol_grad_sq early exit or "
-                    "K <= 0; use a NumPy Problem with backend='serial'")
-            elif _vectorized_eligible(strat, model, problem, K_pt, tol_pt):
-                chosen = "vectorized"
-            else:
-                chosen = "serial"
+            chosen, route_info = _route_fastest(strat, model, problem,
+                                                K_pt, len(seed_list),
+                                                rng_scheme, tol_pt)
+        else:
+            chosen = backend
+            route_info = {"chosen": chosen, "forced": True,
+                          "engine": _engine_kind(strat) or "event-loop"}
         if chosen == "vectorized":
             if not _vectorized_eligible(strat, model, problem, K_pt,
                                         tol_pt):
@@ -362,7 +551,7 @@ def simulate_batch(strategy: StrategySpec,
             row = simulate_batch_jax(strat, model, K_pt, problem=problem,
                                      gamma=gamma_pt, seeds=seed_list,
                                      record_every=re_pt,
-                                     use_pallas=use_pallas)
+                                     use_pallas=use_pallas, x64=x64)
         else:
             row = [simulate(factory(**strat_kw), model, K_pt,
                             problem=problem, gamma=gamma_pt, seed=s,
@@ -372,6 +561,7 @@ def simulate_batch(strategy: StrategySpec,
         used_backends.append(chosen)
         used_schemes.append({"serial": "stream",
                              "jax": "jax.random"}.get(chosen, rng_scheme))
+        used_routing.append(route_info)
 
     # auto can pick different backends per grid point; report faithfully
     backend_label = used_backends[0] if len(set(used_backends)) == 1 \
@@ -380,4 +570,5 @@ def simulate_batch(strategy: StrategySpec,
         else "+".join(sorted(set(used_schemes)))
     return TraceBatch(strategy=name, grid=points,
                       seeds=np.asarray(seed_list), traces=traces,
-                      backend=backend_label, rng_scheme=scheme_label)
+                      backend=backend_label, rng_scheme=scheme_label,
+                      routing=used_routing)

@@ -23,12 +23,22 @@ family:
   over the chain pool plus an exact snap-to-arrival step; boundary ties
   are consumed one arrival at a time (worker-major) so the predicate
   first becomes true exactly as in the event engine.
-* **Async / Ringmaster** — an arrival-indexed ``lax.while_loop``: each
-  iteration pops the earliest pending finish per seed, steps (or, for
-  Ringmaster, discards over-delayed gradients), and restarts that worker
-  with ONE keyed draw from a pre-split ``(seeds, workers)`` key grid
-  (:func:`~repro.core.time_models.jax_worker_key_grid`) — one draw per
-  arrival instead of a full ``(seeds, n)`` row, ~n× less draw volume.
+* **Async / Ringmaster** — a renewal-chain **arrival scan**: because a
+  popped worker always restarts immediately (accept or discard), its
+  arrival times form a renewal chain independent of the server state, so
+  the engine pre-draws every worker's chain in bulk
+  (:func:`~repro.core.time_models.jax_chain_draws` — prefix-stable
+  ``fold_in``-keyed duration rows, auto-sized ``L`` with doubling
+  retries), merges the ``(S, n*L)`` pool into global arrival order ONCE
+  (:func:`~repro.kernels.order_stats.smallest_k` — host stable argsort
+  on CPU, device sort on accelerators), and runs ONE ``lax.scan`` over
+  the ordered arrival window with O(1) per-arrival state transitions
+  (worker id gather, Ringmaster delay test, version/snapshot scatter).
+  Timing-only Async needs no scan at all: the first ``K`` merged
+  arrivals ARE the steps. This replaces the PR 4 arrival-indexed
+  ``lax.while_loop`` (kept as :func:`_arrival_while_run`, a
+  benchmark/cross-check reference only), whose O(S·n) argmin per arrival
+  and K serialized iterations made async the slowest device path.
   Per-worker start-iterate snapshots make the delayed-gradient math path
   exact.
 
@@ -69,7 +79,7 @@ from .strategies import (AggregationStrategy, Async, Malenia, MSync,
 from .time_models import FixedTimes, SubExponentialTimes, UniversalModel
 
 __all__ = ["JaxProblem", "quadratic_worst_case_jax", "simulate_batch_jax",
-           "jax_supported"]
+           "jax_supported", "arrival_scan_work"]
 
 # Malenia round-end search: value-bisection passes over the chain pool,
 # then snap-to-arrival passes (each consumes >= 1 tie class; more than a
@@ -221,7 +231,9 @@ def _timing_round(ft, ver, comp, k, cand, m, use_pallas):
     acc = lax.cond(jnp.all(leq.sum(axis=1) == m),
                    lambda _: leq, exact_acc, operand=None)
     popped = stale & (ft < T[:, None])
-    comp = comp + m + popped.sum(axis=1)
+    # int32 sums: under x64 bool sums default to int64 and would promote
+    # the carried counters out of their scan-carry dtype
+    comp = comp + m + popped.sum(axis=1, dtype=jnp.int32)
     ft = jnp.where(popped, cand, ft)
     ver = jnp.where(popped, k, ver)
     return ft, ver, comp, T, acc
@@ -255,6 +267,14 @@ def _fixed_timing_run(taus, S: int, m: int, K: int, use_pallas: bool):
 _fixed_timing_jit = None
 
 
+def _engine_dtype():
+    """float64 under the ``x64=True`` engine mode, float32 otherwise."""
+    import jax
+    import jax.numpy as jnp
+
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
 def _keys_and_x(problem, S, n, seeds):
     """Per-seed PRNG keys and the broadcast initial iterate (``(S, 1)``
     zeros for timing-only runs)."""
@@ -263,9 +283,10 @@ def _keys_and_x(problem, S, n, seeds):
 
     keys0 = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
     if problem is not None:
+        dt = _engine_dtype()
         x_init = jnp.broadcast_to(
-            jnp.asarray(problem.x0, dtype=jnp.float32),
-            (S,) + np.shape(problem.x0)).astype(jnp.float32)
+            jnp.asarray(problem.x0, dtype=dt),
+            (S,) + np.shape(problem.x0)).astype(dt)
     else:
         x_init = jnp.zeros((S, 1))
     return keys0, x_init
@@ -441,7 +462,7 @@ def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
         acc = lt | (eq & ((jnp.cumsum(eq, axis=1) - 1) < quota))
         cnt = acc.reshape(S, n, B).sum(axis=2)    # accepted per worker
         popped = stale & (ft < T[:, None])        # discarded stale pops
-        comp = comp + B + popped.sum(axis=1)
+        comp = comp + B + popped.sum(axis=1, dtype=jnp.int32)
         # the B-th (stepping) arrival: last accepted entry at exactly T;
         # its worker restarts at the new iterate (version k + 1)
         stepper = jnp.argmax(jnp.where(acc & eq, flat_idx[None, :], -1),
@@ -474,8 +495,17 @@ def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
 
 def _malenia_grad_fn(problem, n, L):
     """Malenia math update: ``(1/n) sum_i (1/B_i) sum_{j<B_i} g_ij`` at
-    ``x^k`` — one ``lax.scan`` over the ``L`` chain slots so memory stays
-    ``(S, n, d)`` per slot instead of ``(S, n, L, d)``."""
+    ``x^k`` — a **count-compacted** slot loop: slot ``j`` draws only
+    while some worker still has an accepted arrival there
+    (``j < max_i B_i``), so the per-round oracle volume is
+    ``n * max(B)`` instead of the full masked ``n * L`` pool. ``L`` is
+    sized for the model's speed *spread* (a fast worker's chain must
+    cover the slowest worker's first delivery), so on sparse rounds —
+    near-homogeneous speeds, ``B_i ~ ceil(S)`` — ``max(B) << L`` and the
+    compaction cuts most of the draw volume. Slot keys are still split
+    ``L`` ways up front, so the drawn values per occupied slot are
+    bitwise-identical to the uncompacted loop (zero-weight slots are
+    skipped, never re-keyed); memory stays ``(S, n, d)`` per slot."""
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -483,17 +513,23 @@ def _malenia_grad_fn(problem, n, L):
     def upd(x, B, round_keys):
         slot_keys = jax.vmap(lambda k: jax.random.split(k, L))(round_keys)
         w = 1.0 / (jnp.maximum(B, 1).astype(x.dtype) * n)  # (S, n)
+        Bmax = jnp.max(B)
 
-        def body(carry, jk):
-            j, kcol = jk                                   # kcol: (S, 2)
+        def cond(c):
+            return c[0] < Bmax
+
+        def body(c):
+            j, acc = c
+            kcol = slot_keys[:, j]                         # (S, 2)
             gk = jax.vmap(lambda k: jax.random.split(k, n))(kcol)
             g = jax.vmap(jax.vmap(problem.stoch_grad, (None, 0)),
                          (0, 0))(x, gk)                    # (S, n, d)
             wj = jnp.where(j < B, w, 0.0)
-            return carry + (g * wj[..., None]).sum(axis=1), None
+            return j + 1, acc + (g * wj[..., None]).sum(axis=1)
 
-        out, _ = lax.scan(body, jnp.zeros_like(x),
-                          (jnp.arange(L), jnp.moveaxis(slot_keys, 1, 0)))
+        _, out = lax.while_loop(cond, body,
+                                (jnp.zeros((), jnp.int32),
+                                 jnp.zeros_like(x)))
         return out
 
     return upd
@@ -546,7 +582,9 @@ def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
 
     def P_of_counts(B):
         ok1 = jnp.all(B >= 1, axis=-1)
-        hm = n / jnp.sum(1.0 / jnp.maximum(B, 1).astype(jnp.float32),
+        # engine dtype, not hard-coded f32: the x64 tie-parity mode needs
+        # the harmonic-mean threshold test at float64 like the NumPy heap
+        hm = n / jnp.sum(1.0 / jnp.maximum(B, 1).astype(_engine_dtype()),
                          axis=-1)
         return ok1 & (hm >= S_target)
 
@@ -630,8 +668,9 @@ def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
                               axis=1)
 
             popped = stale & (ft < T[:, None])    # discarded stale pops
-            comp = comp + B.sum(axis=1) + popped.sum(axis=1)
-            used = used + B.sum(axis=1)
+            comp = (comp + B.sum(axis=1, dtype=jnp.int32)
+                    + popped.sum(axis=1, dtype=jnp.int32))
+            used = used + B.sum(axis=1, dtype=jnp.int32)
             # chain exhausted: an (L+1)-th arrival before the round end
             bad = bad | bad_k | (ch[..., L] <= T[:, None]).any(axis=1)
 
@@ -673,9 +712,332 @@ def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
         f"simulate_batch_jax or use backend='serial'")
 
 
-def _arrival_run(model, problem, max_delay, delay_adaptive, n, S, K,
-                 gamma, seeds):
-    """Async/Ringmaster as an arrival-indexed ``lax.while_loop``: each
+# --------------------------------------------------------------------------
+# Async / Ringmaster: the renewal-chain arrival-scan engine
+# --------------------------------------------------------------------------
+
+# timing-only chain/scan programs are cached here so repeated same-shape
+# sweeps (grid points, benchmark loops) skip recompilation; math programs
+# close over the oracle and recompile per call like the other engines.
+# Keys are (hashable sampler/model handle, static shape ints, x64 flag).
+# Bounded FIFO: long sessions sweeping many model instances would
+# otherwise retain one compiled program (plus its captured closure) per
+# instance forever.
+_CHAIN_PROGS: dict = {}
+_SCAN_PROGS: dict = {}
+_PROG_CACHE_CAP = 64
+
+
+def _prog_cache_put(cache: dict, key, value):
+    if len(cache) >= _PROG_CACHE_CAP:
+        cache.pop(next(iter(cache)))          # FIFO: dicts keep insert order
+    cache[key] = value
+    return value
+
+# arrival-scan sizing: chain-length safety factors and retry budget
+_CHAIN_GROWTH = 1.25
+_CHAIN_SLACK = 8.0
+_CHAIN_RETRIES = 5
+
+
+def _chain_plan(model, n: int, arrivals: int) -> int:
+    """Initial per-worker chain length ``L`` for a window of ``arrivals``
+    global pops: expected max per-worker share of the window from the
+    model's mean rates, a fluctuation cushion, capped at ``arrivals + 1``
+    (one worker can own at most the whole window; the ``+ 1`` entry is
+    the exhaustion sentinel). The arrival-scan engine doubles ``L`` and
+    retries if a drawn chain is outrun anyway."""
+    if isinstance(model, UniversalModel):
+        span = float(model.grid[-1] - model.grid[0]) or 1.0
+        rates = np.maximum(np.asarray(model.cum[:, -1], dtype=float) / span,
+                           1e-9)
+    else:
+        taus = np.asarray(model.mean_times(), dtype=float)
+        rates = 1.0 / np.maximum(taus, 1e-12)
+    share = float(rates.max() / max(rates.sum(), 1e-12))
+    exp_max = arrivals * share
+    L = int(np.ceil(_CHAIN_GROWTH * exp_max
+                    + 4.0 * np.sqrt(max(exp_max, 1.0)) + _CHAIN_SLACK))
+    return max(min(L, arrivals + 1), int(np.ceil(arrivals / n)) + 1, 4)
+
+
+def _ring_pop_budget(n: int, K: int, max_delay: int) -> int:
+    """Extra-arrival budget for the Ringmaster window: the engine pops
+    ~``1 + sqrt(n / (max_delay + 1))`` arrivals per accept (empirical fit
+    on the exponential model — the discard rate self-limits because a
+    stalled server drives delays back to zero), plus slack; exhaustion
+    retries quadruple it."""
+    pops = 1.0 + float(np.sqrt(n / (max_delay + 1.0)))
+    return int(K * min(float(n), pops - 1.0)) + 2 * n
+
+
+def arrival_scan_work(model, n: int, K: int, ringmaster: bool = False,
+                      max_delay: int = 0) -> "tuple[int, int]":
+    """``(pool_elements, window_arrivals)`` the arrival-scan engine would
+    process for this shape — the same sizing the engine itself uses
+    (:func:`_chain_plan` chains, :func:`_ring_pop_budget` window). The
+    cost-model router in :mod:`repro.core.batch` consumes this; pure
+    host arithmetic, no jax import."""
+    budget = _ring_pop_budget(n, K, max_delay) if ringmaster else 0
+    L = _chain_plan(model, n, K + budget)
+    return n * L, min(K + budget, n * L)
+
+
+def _chain_builder(model, S: int, n: int, L: int):
+    """``chains(chain_keys) -> (S, n, L)`` absolute arrival times of each
+    worker's renewal chain from ``t = 0`` (entry ``j`` = the worker's
+    ``j+1``-th arrival). Sampled models draw prefix-stable
+    :func:`~repro.core.time_models.jax_chain_draws` duration rows and
+    cumsum; FixedTimes is the closed form ``(j+1) * tau``; universal
+    models iterate the deterministic ``finish_times_jax`` inversion.
+    Timing-relevant programs are jit-cached across calls (keyed by the
+    model's sampler identity / the model itself, the static shape and
+    the x64 mode), so same-shape sweeps compile once."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from .time_models import jax_chain_draws
+
+    x64 = bool(jax.config.jax_enable_x64)
+    if isinstance(model, FixedTimes):
+        key = ("fixed", S, n, L, x64)
+        if key not in _CHAIN_PROGS:
+            def fixed_chain(taus, chain_keys):      # keys unused: no RNG
+                steps = taus[None, :, None] * jnp.arange(1, L + 1)
+                return jnp.broadcast_to(steps, (S, n, L))
+
+            _prog_cache_put(_CHAIN_PROGS, key, jax.jit(fixed_chain))
+        prog = _CHAIN_PROGS[key]
+        taus = model.taus
+        return lambda chain_keys: prog(jnp.asarray(taus), chain_keys)
+    if isinstance(model, UniversalModel):
+        key = (model, S, n, L, x64)                 # identity-hashed
+        if key not in _CHAIN_PROGS:
+            def universal_chain(chain_keys):        # keys unused: no RNG
+                def body(c, _):
+                    nxt = model.finish_times_jax(c)
+                    return nxt, nxt
+
+                _, out = lax.scan(body, jnp.zeros((S, n)), None, length=L)
+                return jnp.moveaxis(out, 0, -1)     # (S, n, L)
+
+            _prog_cache_put(_CHAIN_PROGS, key, jax.jit(universal_chain))
+        return _CHAIN_PROGS[key]
+    sampler = model.jax_sampler
+    key = (sampler, S, n, L, x64)
+    if key not in _CHAIN_PROGS:
+        def sampled_chain(chain_keys):
+            d = jax_chain_draws(chain_keys, L, sampler)     # (S, L, n)
+            return jnp.cumsum(jnp.moveaxis(d, 1, 2), axis=-1)
+
+        _prog_cache_put(_CHAIN_PROGS, key, jax.jit(sampled_chain))
+    return _CHAIN_PROGS[key]
+
+
+def _ring_timing_prog(S: int, n: int, K: int, max_delay: int):
+    """Cached timing-only Ringmaster arrival scan: O(1) per-arrival work
+    (version gather, delay test, version scatter) over the pre-merged
+    window. Returns ``(k_final, computed, accept)``; wall-clock times
+    stay host-side (the merged order already carries them)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    key = (S, n, K, max_delay, bool(jax.config.jax_enable_x64))
+    if key in _SCAN_PROGS:
+        return _SCAN_PROGS[key]
+
+    rows = jnp.arange(S)
+
+    @jax.jit
+    def run(w_seq):                                 # (A, S) worker ids
+        def body(carry, w):
+            k, ver, comp = carry
+            vw = ver[rows, w]
+            active = k < K
+            acc = active & ((k - vw) <= max_delay)
+            k = k + acc
+            ver = ver.at[rows, w].set(jnp.where(active, k, vw))
+            comp = comp + active
+            return (k, ver, comp), acc
+
+        init = (jnp.zeros(S, jnp.int32), jnp.zeros((S, n), jnp.int32),
+                jnp.zeros(S, jnp.int32))
+        (kf, _, comp), acc = lax.scan(body, init, w_seq)
+        return kf, comp, acc                        # acc: (A, S)
+
+    return _prog_cache_put(_SCAN_PROGS, key, run)
+
+
+def _arrival_math_prog(problem, gamma, delay_adaptive, S, n, K, max_delay,
+                       x_init, xs_init):
+    """Math-path arrival scan (Async and Ringmaster): per arrival, one
+    oracle draw at the popped worker's start-iterate snapshot, a masked
+    step, and version/snapshot scatters. Gradient keys are
+    ``fold_in(seed key, global arrival index)`` — prefix-stable, so
+    chain-doubling retries leave already-certified seeds bitwise
+    unchanged. Closes over the oracle: compiles per call, like
+    :func:`_general_run`."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    rows = jnp.arange(S)
+
+    @jax.jit
+    def run(w_seq, gkey_root):                      # (A, S), (S, 2)
+        def body(carry, inp):
+            k, ver, comp, x, xs = carry
+            w, a = inp
+            gk = jax.vmap(lambda kk: jax.random.fold_in(kk, a))(gkey_root)
+            vw = ver[rows, w]
+            active = k < K
+            acc = active & ((k - vw) <= max_delay)
+            g = jax.vmap(problem.stoch_grad)(xs[rows, w], gk)
+            mult = (1.0 / (1.0 + (k - vw).astype(g.dtype) / n)
+                    if delay_adaptive else jnp.ones(S, g.dtype))
+            x = jnp.where(acc[:, None], x - gamma * mult[:, None] * g, x)
+            val = jax.vmap(problem.f)(x)
+            gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
+            k = k + acc
+            ver = ver.at[rows, w].set(jnp.where(active, k, vw))
+            xs = xs.at[rows, w].set(
+                jnp.where(active[:, None], x, xs[rows, w]))
+            comp = comp + active
+            return (k, ver, comp, x, xs), (acc, val, gn)
+
+        A = w_seq.shape[0]
+        init = (jnp.zeros(S, jnp.int32), jnp.zeros((S, n), jnp.int32),
+                jnp.zeros(S, jnp.int32), x_init, xs_init)
+        (kf, _, comp, x, _), (acc, val, gn) = lax.scan(
+            body, init, (w_seq, jnp.arange(A, dtype=jnp.int32)))
+        return kf, comp, x, acc, val, gn
+
+    return run
+
+
+def _chain_scan_run(model, problem, ringmaster, max_delay, delay_adaptive,
+                    n, S, K, gamma, seeds, chain_len=None):
+    """Async/Ringmaster as the renewal-chain arrival scan (module doc):
+    a popped worker restarts immediately whether its gradient is used or
+    discarded, so every worker's arrival times form a renewal chain that
+    is INDEPENDENT of the server recursion. The engine therefore
+    pre-draws all chains in bulk, merges the ``(S, n*L)`` pool into
+    global arrival order once (ties by (worker, arrival index) — the
+    backend's documented contract, matching the while_loop's argmin),
+    and replays the server recursion over the ordered window:
+
+    * timing-only Async — no recursion at all: every arrival is a step,
+      so the first ``K`` merged arrivals ARE the step times;
+    * Ringmaster / any math path — ONE ``lax.scan`` whose body is O(1)
+      per arrival (gather the popped worker's version, delay-test,
+      masked step, scatter version/snapshot), vs the while_loop's
+      O(S·n) argmin per arrival and K serialized pops.
+
+    Exactness: identical event order to the serial heap for
+    deterministic models in generic position (delayed-gradient math via
+    the same per-worker snapshots); distribution-equal for sampled
+    models. Chain coverage is verified per seed — a worker whose last
+    chain entry lands at or before the seed's final step time could have
+    had unmodeled arrivals, so the run retries with doubled chains
+    (prefix-stable draws keep certified seeds bitwise unchanged), then
+    raises rather than silently dropping arrivals."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.order_stats import smallest_k
+
+    math = problem is not None
+    keys0, x_init = _keys_and_x(problem, S, n, seeds)
+    sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys0)
+    gkey_root, chain_root = sub[:, 0], sub[:, 1]
+    if math:
+        xs_init = jnp.broadcast_to(x_init[:, None, :],
+                                   (S, n) + x_init.shape[1:])
+
+    # Async never discards: the window is exactly K. Ringmaster gets the
+    # empirical discard budget (see _ring_pop_budget).
+    budget = _ring_pop_budget(n, K, max_delay) if ringmaster else 0
+    L = int(chain_len) if chain_len else _chain_plan(model, n, K + budget)
+    scan_needed = math or ringmaster
+
+    for _ in range(_CHAIN_RETRIES):
+        A = min(K + budget, n * L)
+        if A < K:              # pool cannot even contain K arrivals
+            L *= 2
+            continue
+        chains = _chain_builder(model, S, n, L)(chain_root)
+        pool = chains.reshape(S, n * L)
+        t_seq, idx = smallest_k(pool, A)            # (S, A) ascending
+        w_seq = (idx // L).astype(jnp.int32).T      # (A, S)
+        last = np.asarray(chains[:, :, L - 1])      # exhaustion sentinel
+        t_host = np.asarray(t_seq)                  # (S, A)
+
+        if not scan_needed:
+            # timing-only Async: arrivals ARE the steps (A == K)
+            kfin = np.full(S, K)
+            comp = np.full(S, K)
+            T = t_host.T                            # (K, S)
+            x = val = gn = None
+            T_end = t_host[:, K - 1]
+        else:
+            if math:
+                prog = _arrival_math_prog(problem, gamma, delay_adaptive,
+                                          S, n, K, max_delay, x_init,
+                                          xs_init)
+                kfin, comp, x, acc, val, gn = jax.block_until_ready(
+                    prog(w_seq, gkey_root))
+                val = np.asarray(val)               # (A, S)
+                gn = np.asarray(gn)
+            else:
+                kfin, comp, acc = jax.block_until_ready(
+                    _ring_timing_prog(S, n, K, max_delay)(w_seq))
+                x = val = gn = None
+            kfin = np.asarray(kfin)
+            comp = np.asarray(comp)
+            acc = np.asarray(acc)                   # (A, S) accept mask
+            # compact accepted arrivals into the (K, S) step buffers
+            T = np.zeros((K, S))
+            if math:
+                vK = np.zeros((K, S))
+                gK = np.zeros((K, S))
+            T_end = np.full(S, np.inf)
+            for s in range(S):
+                sel = np.flatnonzero(acc[:, s])[:K]
+                got = sel.size
+                T[:got, s] = t_host[s, sel]
+                if math:
+                    vK[:got, s] = val[sel, s]
+                    gK[:got, s] = gn[sel, s]
+                if got == K:
+                    T_end[s] = T[K - 1, s]
+            if math:
+                val, gn = vK, gK
+
+        bad = (np.asarray(kfin) < K) | (last <= T_end[:, None]).any(axis=1)
+        if not bad.any():
+            return np.asarray(comp), x, T, val, gn
+        L *= 2
+        budget = min(budget * 4, n * L - K) if ringmaster else 0
+    raise RuntimeError(
+        f"arrival-scan jax engine could not certify chain coverage within "
+        f"{L // 2}-slot renewal chains even after doubling retries "
+        f"(extreme speed heterogeneity or a discard storm — max_delay "
+        f"far below the typical delay?); pass a larger chain_len to "
+        f"simulate_batch_jax or use backend='serial'")
+
+
+def _arrival_while_run(model, problem, max_delay, delay_adaptive, n, S, K,
+                       gamma, seeds):
+    """PR 4 reference engine — Async/Ringmaster as an arrival-indexed
+    ``lax.while_loop``. NOT routed by :func:`simulate_batch_jax` anymore
+    (the renewal-chain arrival scan replaced it); kept callable via
+    ``async_engine="while"`` as the benchmark baseline
+    (``benchmarks/simbatch_speed.py`` gates the scan's speedup against
+    it) and as an independent cross-check of the scan's recursion.
+
+    Each
     iteration pops the earliest pending finish per seed (ties by worker
     index), steps unless the gradient's delay exceeds ``max_delay``
     (discard => recompute at the current iterate), and restarts the
@@ -804,10 +1166,13 @@ def simulate_batch_jax(strategy: AggregationStrategy,
                        seeds: Sequence[int] = (0,),
                        record_every: int = 1,
                        use_pallas: bool = False,
-                       malenia_chain: Optional[int] = None) -> List[Trace]:
+                       malenia_chain: Optional[int] = None,
+                       async_chain: Optional[int] = None,
+                       async_engine: str = "scan",
+                       x64: bool = False) -> List[Trace]:
     """One jitted ``(seeds, ...)`` array program per strategy family
     (m-sync round scan, Rennala/Malenia renewal scans, Async/Ringmaster
-    keyed arrival recursion); returns the per-seed :class:`Trace` list
+    arrival scan); returns the per-seed :class:`Trace` list
     (timing-only traces have empty arrays, like the scalar fast path).
 
     RNG/backend guarantees: every draw comes from ``jax.random`` keys
@@ -822,15 +1187,35 @@ def simulate_batch_jax(strategy: AggregationStrategy,
     arriving while the slowest delivers its first), so strongly
     heterogeneous models allocate ``(seeds, n, L+1)`` chains with large
     ``L``; the engine retries with doubled chains, then raises, if a
-    round outruns them.
+    round outruns them. ``async_chain`` is the analogous override for
+    the Async/Ringmaster arrival-scan chains (default from
+    :func:`_chain_plan`); ``async_engine="while"`` falls back to the PR 4
+    ``lax.while_loop`` reference engine (benchmarking/cross-checks only).
 
-    The FixedTimes timing-only m-sync case hits a module-level jit cache
-    (no recompile across calls of the same shape); the other programs
-    close over the oracle and sampler, so they recompile per call — fine
-    for sweep-sized S × K, not for tight loops of tiny calls.
+    ``x64=True`` runs the whole program in float64 (via
+    ``jax.experimental.enable_x64``): slower, but gives per-run tie
+    parity with the float64 NumPy event heap on adversarially tie-heavy
+    instances (flat-power partial participation) where float32
+    tie-breaking diverges by whole events.
+
+    The FixedTimes timing-only m-sync case and the timing-only
+    arrival-scan programs hit module-level jit caches (no recompile
+    across calls of the same shape); the other programs close over the
+    oracle and sampler, so they recompile per call — fine for
+    sweep-sized S × K, not for tight loops of tiny calls.
     """
     import jax
     import jax.numpy as jnp
+
+    if x64 and not jax.config.jax_enable_x64:
+        from jax.experimental import enable_x64
+        with enable_x64():
+            return simulate_batch_jax(
+                strategy, model, K, problem=problem, gamma=gamma,
+                seeds=seeds, record_every=record_every,
+                use_pallas=use_pallas, malenia_chain=malenia_chain,
+                async_chain=async_chain, async_engine=async_engine,
+                x64=False)
 
     strategy.bind(model.n)
     kind = _check_supported(strategy, model, problem)
@@ -847,7 +1232,9 @@ def simulate_batch_jax(strategy: AggregationStrategy,
                                  gamma=gamma, seeds=[seeds[0]],
                                  record_every=record_every,
                                  use_pallas=use_pallas,
-                                 malenia_chain=malenia_chain)
+                                 malenia_chain=malenia_chain,
+                                 async_chain=async_chain,
+                                 async_engine=async_engine)
         return [dataclasses.replace(row[0]) for _ in range(S)]
 
     fixed = isinstance(model, FixedTimes)
@@ -881,9 +1268,17 @@ def simulate_batch_jax(strategy: AggregationStrategy,
     else:
         used = K          # every server step consumes exactly one gradient
         md = int(strategy.max_delay) if kind == "ringmaster" else K + 1
-        comp, x, T, val, gn = _arrival_run(
-            model, problem, md, bool(getattr(strategy, "delay_adaptive",
-                                             False)), n, S, K, gamma, seeds)
+        adaptive = bool(getattr(strategy, "delay_adaptive", False))
+        if async_engine == "while":               # PR 4 reference engine
+            comp, x, T, val, gn = _arrival_while_run(
+                model, problem, md, adaptive, n, S, K, gamma, seeds)
+        elif async_engine == "scan":
+            comp, x, T, val, gn = _chain_scan_run(
+                model, problem, kind == "ringmaster", md, adaptive,
+                n, S, K, gamma, seeds, chain_len=async_chain)
+        else:
+            raise ValueError(f"unknown async_engine {async_engine!r}; "
+                             "use 'scan' or 'while'")
 
     comp = np.asarray(comp)
     T = np.asarray(T)                             # (K, S)
@@ -895,7 +1290,7 @@ def simulate_batch_jax(strategy: AggregationStrategy,
         gn = np.asarray(gn)
         x_np = np.asarray(x)
         rec = np.arange(record_every, K + 1, record_every)     # steps k
-        x0j = jnp.asarray(problem.x0, dtype=jnp.float32)
+        x0j = jnp.asarray(problem.x0, dtype=_engine_dtype())
         f0 = float(problem.f(x0j))
         g0 = np.asarray(problem.grad(x0j))
         gn0 = float(np.dot(g0, g0))

@@ -74,6 +74,7 @@ __all__ = [
     "SubExponentialTimes",
     "philox_rngs",
     "jax_worker_key_grid",
+    "jax_chain_draws",
     "truncated_normal_times",
     "exponential_times",
     "shifted_exponential_times",
@@ -127,6 +128,37 @@ def jax_worker_key_grid(seed_keys, n: int):
         seed_keys = jnp.stack(
             [jax.random.PRNGKey(int(s)) for s in seed_keys])
     return jax.vmap(lambda k: jax.random.split(k, n))(seed_keys)
+
+
+def jax_chain_draws(chain_keys, L: int, row_sampler):
+    """``(seeds, L, workers)`` renewal-chain duration rows for the
+    arrival-scan async engine.
+
+    Row ``(s, j)`` is ``row_sampler(fold_in(chain_keys[s], j))`` — ONE
+    vectorized draw of every worker's ``j``-th renewal duration (the
+    model's ``jax_sampler``), so the whole chain pool costs ``S * L``
+    key derivations instead of ``S * n * L`` per-item draws. Cumulative
+    sums along ``j`` turn the rows into each worker's arrival chain.
+
+    Contract (the arrival-scan twin of the :func:`philox_rngs` /
+    :func:`jax_worker_key_grid` counter contracts): row ``(s, j)`` is a
+    pure function of *(seed key, slot j)* via ``jax.random.fold_in`` —
+    independent of ``L`` (**prefix-stable**: growing ``L`` appends rows
+    and never reshuffles existing ones, which the engine's
+    chain-doubling retries rely on to leave already-certified seeds
+    bitwise unchanged), of the sweep composition, and of arrival order.
+    Like every ``jax.random`` path it is equal in distribution to — and
+    never stream-equal with — the NumPy engines.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def per_seed(key):
+        return jax.vmap(
+            lambda j: row_sampler(jax.random.fold_in(key, j)))(
+                jnp.arange(L))
+
+    return jax.vmap(per_seed)(chain_keys)
 
 
 def _as_rng(key, rng_scheme: str):

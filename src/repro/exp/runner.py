@@ -80,6 +80,7 @@ def run_experiment(strategy,
                    backend: str = "fastest",
                    rng_scheme: str = "counter",
                    use_pallas: bool = False,
+                   x64: bool = False,
                    scenario_kwargs: Optional[Dict[str, Any]] = None,
                    target_frac: Optional[float] = None,
                    json_path: Optional[str] = None,
@@ -93,12 +94,18 @@ def run_experiment(strategy,
     to that fraction of its initial value, quantiled across seeds.
     ``json_path`` writes the summary as a JSON artifact.
 
-    The default ``backend="fastest"`` picks the fastest *eligible*
-    engine per grid point — ``jax`` for device-scale sweeps
-    (``seeds * K * n >= repro.core.batch.JAX_MIN_WORK``), else the
-    seed-batched NumPy ``vectorized`` engine, else ``serial`` — and the
-    backend that actually ran is recorded in the JSON artifact's
-    ``meta.backend`` (plus per-row ``backend``/``rng_scheme``).
+    The default ``backend="fastest"`` routes each grid point through the
+    per-engine cost model
+    (:func:`repro.core.batch.estimate_backend_seconds`): the host engine
+    and the jax engine that would run the combination are priced as a
+    function of engine kind (round scan / arrival scan / event loop),
+    S, K, n, math vs timing-only and accelerator presence, and the
+    cheaper one runs. The backend that actually ran is recorded in the
+    JSON artifact's ``meta.backend`` (plus per-row
+    ``backend``/``rng_scheme``) and the full per-grid-point routing
+    decision — estimates, accelerator flag, reason — lands in
+    ``meta.routing``. ``x64=True`` runs jax grid points in float64 for
+    per-run tie parity on tie-heavy instances (partial participation).
     """
     if isinstance(scenario, str):
         model = make_scenario(scenario, n, **(scenario_kwargs or {}))
@@ -112,7 +119,8 @@ def run_experiment(strategy,
     batch = simulate_batch(strategy, model, K, problem=problem, gamma=gamma,
                            seeds=seeds, grid=grid, record_every=record_every,
                            tol_grad_sq=tol_grad_sq, backend=backend,
-                           rng_scheme=rng_scheme, use_pallas=use_pallas)
+                           rng_scheme=rng_scheme, use_pallas=use_pallas,
+                           x64=x64)
     rows = batch.summary(target_frac=target_frac)
     for row in rows:
         row["scenario"] = scen_name
@@ -122,6 +130,7 @@ def run_experiment(strategy,
             "K": K, "seeds": list(map(int, batch.seeds)),
             "backend": batch.backend,
             "rng_scheme": batch.rng_scheme,
+            "routing": batch.routing,
             "grid": batch.grid if grid else None}
     result = ExperimentResult(name=name or f"{batch.strategy}@{scen_name}",
                               meta=meta, batch=batch, rows=rows)

@@ -560,12 +560,13 @@ def test_fastest_backend_resolution():
 
 
 def test_fastest_routing_admits_malenia_and_universal():
-    """ISSUE 4 satellite: backend="fastest" no longer forces Malenia and
-    universal models onto the serial path — the jax engines are eligible
-    (above the work threshold), while deterministic universal m-sync
-    timing stays on the replicating vectorized engine."""
+    """ISSUE 4 satellite (reworked for the ISSUE 5 cost-model router):
+    the jax engines support the full paper matrix, and the router picks
+    jax wherever its estimated cost beats the host engine — in
+    particular Malenia and async sweeps at device scale, where the
+    serial heap's per-event cost dominates."""
     from repro.core import powers_figure3
-    from repro.core.batch import JAX_MIN_WORK, _jax_eligible
+    from repro.core.batch import _route_fastest
     from repro.core.batch_jax import jax_supported
     from repro.core.strategies import Malenia, make_strategy
 
@@ -576,10 +577,16 @@ def test_fastest_routing_admits_malenia_and_universal():
             strat = make_strategy(name)
             strat.bind(model.n)
             assert jax_supported(strat, model, None), (name, type(model))
-            # the size gate is the only thing between them and jax
-            S_big = JAX_MIN_WORK // (10 * model.n) + 1
-            assert _jax_eligible(strat, model, None, None, 10, S_big), \
-                (name, type(model))
+    # device-scale seed sweeps: the cost model prices the serial event
+    # loop above the jax engines and routes to jax, recording both
+    for name in ("malenia", "async"):
+        strat = make_strategy(name)
+        strat.bind(fixed.n)
+        chosen, info = _route_fastest(strat, fixed, None, 10, 6251,
+                                      "counter", None)
+        assert chosen == "jax", (name, info)
+        assert info["reason"] == "cost-model"
+        assert info["est_seconds"]["jax"] < info["est_seconds"]["serial"]
     # grads_by_worker is a NumPy callable — still serial
     mal = Malenia(S=1.0, grads_by_worker=lambda i, x, r: x)
     mal.bind(16)
@@ -594,6 +601,202 @@ def test_fastest_routing_admits_malenia_and_universal():
                         backend="jax")
     assert tb.backend == "jax"
     assert len({tr.total_time for tr in tb.traces[0]}) == 1
+
+
+# ----------------------------------------- arrival-scan async engine (jax)
+def test_chain_scan_matches_while_reference():
+    """ISSUE 5 tentpole: the renewal-chain arrival scan reproduces the
+    PR 4 while_loop reference engine event-for-event on deterministic
+    models (wall clock, per-step times, gradient counts) for both Async
+    and Ringmaster — the two recursions must agree, the scan is just the
+    batched replay of the same event order."""
+    from repro.core.batch_jax import simulate_batch_jax
+    from repro.core.strategies import make_strategy
+    model = _generic_fixed(12, seed=7)
+    for name, kw in (("async", {}), ("ringmaster", {"max_delay": 3})):
+        strat = make_strategy(name, **kw)
+        scan = simulate_batch_jax(strat, model, 25, seeds=[0, 1])
+        ref = simulate_batch_jax(strat, model, 25, seeds=[0, 1],
+                                 async_engine="while")
+        for a, b in zip(scan, ref):
+            assert a.total_time == pytest.approx(b.total_time, rel=1e-6)
+            assert a.gradients_computed == b.gradients_computed
+            assert a.gradients_used == b.gradients_used
+    with pytest.raises(ValueError):
+        simulate_batch_jax(make_strategy("async"), model, 5, seeds=[0],
+                           async_engine="heap")
+
+
+def test_chain_scan_exhaustion_retry_prefix_stable():
+    """A chain_len far below what the window needs forces the
+    chain-doubling retries; prefix-stable draws mean the certified
+    result is identical to an un-starved run and exact against the
+    serial event engine."""
+    from repro.core.batch_jax import simulate_batch_jax
+    from repro.core.strategies import make_strategy
+    model = _generic_fixed(6, seed=3)
+    strat = make_strategy("async")
+    starved = simulate_batch_jax(strat, model, 40, seeds=[0, 1],
+                                 async_chain=2)
+    easy = simulate_batch_jax(strat, model, 40, seeds=[0, 1])
+    tb_s = simulate_batch("async", model, K=40, seeds=2, backend="serial")
+    for s, (a, b) in enumerate(zip(starved, easy)):
+        assert a.total_time == b.total_time
+        assert a.total_time == pytest.approx(
+            tb_s.traces[0][s].total_time, rel=1e-6)
+        assert a.gradients_computed == tb_s.traces[0][s].gradients_computed
+
+
+def test_chain_scan_ringmaster_discard_storm():
+    """max_delay far below the typical delay floods the window with
+    discards; the budgeted window plus retries must still reproduce the
+    serial engine's accept/discard accounting exactly (deterministic
+    model)."""
+    model = _generic_fixed(16, seed=11)
+    tb_j = simulate_batch(("ringmaster", {"max_delay": 1}), model, K=30,
+                          seeds=2, backend="jax")
+    tb_s = simulate_batch(("ringmaster", {"max_delay": 1}), model, K=30,
+                          seeds=2, backend="serial")
+    np.testing.assert_allclose(tb_j.total_time, tb_s.total_time,
+                               rtol=1e-5)
+    np.testing.assert_array_equal(tb_j.stat("gradients_computed"),
+                                  tb_s.stat("gradients_computed"))
+    assert tb_s.traces[0][0].gradients_computed \
+        > tb_s.traces[0][0].gradients_used    # discards actually happened
+
+
+def test_jax_chain_draws_prefix_stable():
+    """The chain-draw contract: row (s, j) is a pure function of
+    (seed key, slot j) — growing L appends rows without reshuffling."""
+    import jax
+    from repro.core import exponential_times
+    from repro.core.time_models import jax_chain_draws
+    model = exponential_times(1.0, 7)
+    keys = jax.numpy.stack([jax.random.PRNGKey(s) for s in (0, 5)])
+    short = np.asarray(jax_chain_draws(keys, 3, model.jax_sampler))
+    long = np.asarray(jax_chain_draws(keys, 9, model.jax_sampler))
+    np.testing.assert_array_equal(long[:, :3], short)
+
+
+def test_smallest_k_merge_primitive():
+    import jax.numpy as jnp
+    from repro.kernels.order_stats import smallest_k
+    rng = np.random.default_rng(5)
+    x = rng.uniform(0.0, 1.0, (4, 30))
+    x[2, 5] = x[2, 11] = x[2, 3]             # tie class: index order wins
+    ref_idx = np.argsort(x, axis=-1, kind="stable")
+    for k in (1, 7, 30):
+        for host in (True, False):
+            vals, idx = smallest_k(jnp.asarray(x), k, prefer_host=host)
+            np.testing.assert_array_equal(np.asarray(idx),
+                                          ref_idx[:, :k])
+            np.testing.assert_allclose(
+                np.asarray(vals),
+                np.take_along_axis(x, ref_idx[:, :k], axis=-1), rtol=1e-6)
+    with pytest.raises(ValueError):
+        smallest_k(jnp.asarray(x), 0)
+
+
+# ------------------------------------------------- cost-model router (jax)
+def test_router_small_async_stays_serial():
+    """ISSUE 5: tiny async sweeps never reach for jax — they fall under
+    the JAX_MIN_WORK probe floor and stay on the serial heap, with the
+    decision recorded per grid point."""
+    from repro.core import exponential_times
+    model = exponential_times(1.0, 12)
+    tb = simulate_batch("async", model, K=30, seeds=2, backend="fastest")
+    assert tb.backend == "serial"
+    assert tb.routing[0]["chosen"] == "serial"
+    assert "JAX_MIN_WORK" in tb.routing[0]["reason"]
+
+
+def test_router_cost_model_decisions():
+    """The router compares engine-aware estimates: the serial heap's
+    per-event cost vs the arrival scan's pool cost (async), and an
+    accelerator discounts jax compute."""
+    from repro.core.batch import _route_fastest, estimate_backend_seconds
+    from repro.core.strategies import make_strategy
+    model = exponential_times(1.0, 1000)
+    strat = make_strategy("async")
+    strat.bind(model.n)
+    # the benchmark shape: chain scan beats the heap even on CPU
+    chosen, info = _route_fastest(strat, model, None, 2000, 32,
+                                  "counter", None)
+    assert chosen == "jax" and info["reason"] == "cost-model"
+    assert info["est_seconds"]["jax"] < info["est_seconds"]["serial"]
+    # an accelerator can only make jax cheaper
+    for name in ("async", "rennala", "malenia"):
+        st = make_strategy(name)
+        st.bind(model.n)
+        cpu = estimate_backend_seconds("jax", st, model, 32, 200, model.n)
+        dev = estimate_backend_seconds("jax", st, model, 32, 200, model.n,
+                                       accelerator=True)
+        assert dev <= cpu, name
+    with pytest.raises(ValueError):
+        estimate_backend_seconds("fastest", strat, model, 2, 3, model.n)
+
+
+def test_routing_recorded_everywhere():
+    """Routing lands in the TraceBatch for every backend mode and flows
+    into run_experiment JSON meta."""
+    from repro.exp import run_experiment
+    model = FixedTimes(np.arange(1.0, 9.0))
+    tb = simulate_batch("msync", model, K=3, seeds=2, backend="jax")
+    assert tb.routing[0] == {"chosen": "jax", "forced": True,
+                             "engine": "msync"}
+    tb = simulate_batch("msync", model, K=3, seeds=2)
+    assert tb.routing[0]["chosen"] == "vectorized"
+    assert tb.routing[0]["forced"] is False
+    res = run_experiment(("msync", {"m": 2}), model, n=8, K=3, seeds=2)
+    assert res.meta["routing"][0]["chosen"] == res.meta["backend"]
+    # JaxProblem: executability wins, recorded as such
+    from repro.core.batch_jax import quadratic_worst_case_jax
+    tb = simulate_batch("msync", model, K=3,
+                        problem=quadratic_worst_case_jax(d=10, p=1.0),
+                        gamma=0.1, seeds=2, backend="fastest")
+    assert tb.routing[0]["reason"].startswith("jax-problem")
+
+
+def test_jax_min_work_alias_importable():
+    """ISSUE 5 satellite: the deprecated flat-gate constant stays
+    importable (downstream callers) and still bounds the router's probe
+    floor."""
+    from repro.core.batch import JAX_MIN_WORK
+    assert isinstance(JAX_MIN_WORK, int) and JAX_MIN_WORK > 0
+
+
+# ------------------------------------------------------- x64 engine mode
+def test_x64_partial_participation_per_run_parity():
+    """ISSUE 5 satellite: x64=True gives per-run tie parity with the
+    float64 event heap on the adversarially tie-heavy partial-
+    participation grid, where the float32 engine diverges by whole
+    events (distribution-level only)."""
+    from repro.core import PartialParticipationModel
+    model = PartialParticipationModel(n=10, v=1.0, p=0.2, period=5.0,
+                                      t_max=500.0)
+    tb_s = simulate_batch(("msync", {"m": 8}), model, K=10, seeds=2,
+                          backend="serial")
+    tb_64 = simulate_batch(("msync", {"m": 8}), model, K=10, seeds=2,
+                           backend="jax", x64=True)
+    np.testing.assert_allclose(tb_64.total_time, tb_s.total_time,
+                               rtol=1e-9)
+    np.testing.assert_array_equal(tb_64.stat("gradients_computed"),
+                                  tb_s.stat("gradients_computed"))
+    np.testing.assert_array_equal(tb_64.stat("gradients_used"),
+                                  tb_s.stat("gradients_used"))
+    # async family + malenia on the same grid: wall clock matches per
+    # run too (malenia's exact-tie consumption ORDER may still differ —
+    # the worker-major contract — so only the clock is asserted there)
+    for spec in (("async", {}), ("ringmaster", {"max_delay": 2}),
+                 ("rennala", {"batch": 6}), ("malenia", {"S": 2.0})):
+        a = simulate_batch(spec, model, K=8, seeds=2, backend="serial")
+        b = simulate_batch(spec, model, K=8, seeds=2, backend="jax",
+                           x64=True)
+        np.testing.assert_allclose(b.total_time, a.total_time, rtol=1e-9,
+                                   err_msg=str(spec))
+    # the flag leaves the default engines in float32 afterwards
+    import jax
+    assert not jax.config.jax_enable_x64
 
 
 # ------------------------------------------------------------ order stats
