@@ -1,6 +1,6 @@
 """Perf regression gate: compare fresh benchmark JSON artifacts against
 the committed baselines (ISSUE 3 satellite; generalized to multiple
-artifacts for ISSUE 4).
+artifacts for ISSUE 4; per-lane diff + split exit codes for ISSUE 6).
 
 The gate takes ``measured baseline`` path PAIRS — CI runs it over both
 ``BENCH_simbatch.json`` (engine speedups + simulated outputs) and
@@ -22,6 +22,21 @@ versa — including whole sections) fail loudly — silently dropping a
 tracked metric is how perf gates rot, and mismatched ``meta`` entries
 (n/S/K/seeds/...) fail as a config mismatch rather than masquerading as
 drift.
+
+Exit codes (CI branches on these):
+
+* ``0`` — every lane within bounds;
+* ``1`` — numeric failure only: a speedup under its floor or a
+  simulated output outside the two-sided band (a *perf/behavior
+  regression* — investigate the change);
+* ``2`` — structural failure: a baseline file missing/unreadable, a
+  ``meta`` config mismatch, or metric keys present on one side only
+  (the *gate itself* is broken — regenerate or re-commit
+  ``benchmarks/baselines/``). Structural beats numeric when both occur.
+
+On failure every offending lane prints one aligned row — lane name,
+measured value, baseline value, and the bound it violated — so the CI
+log answers "which lane, by how much" without re-running locally.
 
 Speedup ratios are hardware-sensitive: a baseline recorded on a fast
 dev box would set floors a slower CI runner cannot meet even without a
@@ -47,27 +62,57 @@ metrics.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
+from typing import List, Optional
 
 # sections gated as one-sided floors (higher is better); everything else
 # numeric is a simulated output, gated two-sided
 ONE_SIDED_SECTIONS = ("speedup_vs_serial",)
 
+EXIT_OK = 0
+EXIT_REGRESSION = 1      # numeric: floor/band violated
+EXIT_STRUCTURAL = 2      # missing baseline / config or key mismatch
 
-def compare(measured: dict, baseline: dict, tol: float) -> list:
-    """Return a list of failure strings (empty => gate passes)."""
-    failures = []
+
+@dataclasses.dataclass(frozen=True)
+class Failure:
+    """One failed lane: what was measured, what bounded it, which kind.
+
+    ``kind`` is ``"regression"`` (numeric violation — exit 1) or
+    ``"structural"`` (missing/mismatched gate inputs — exit 2).
+    ``measured``/``baseline`` are ``None`` for one-sided-missing keys.
+    """
+    lane: str
+    measured: Optional[float]
+    baseline: Optional[float]
+    bound: str
+    kind: str
+
+    def row(self) -> str:
+        fmt = (lambda v: "—" if v is None
+               else (f"{v:.6g}" if isinstance(v, (int, float)) else str(v)))
+        return (f"  {self.lane:<42} {fmt(self.measured):>12} "
+                f"{fmt(self.baseline):>12}   {self.bound}")
+
+
+_HEADER = (f"  {'lane':<42} {'measured':>12} {'baseline':>12}   bound")
+
+
+def compare(measured: dict, baseline: dict, tol: float) -> List[Failure]:
+    """Return the failed lanes (empty => gate passes)."""
+    failures: List[Failure] = []
     meta_m = measured.get("meta", {})
     meta_b = baseline.get("meta", {})
     for key in sorted(set(meta_m) | set(meta_b)):
         got, want = meta_m.get(key), meta_b.get(key)
         if got != want:
-            failures.append(
-                f"meta.{key}: measured {got!r} vs baseline {want!r} — "
-                f"benchmark config mismatch, not a perf result; "
-                f"regenerate the baseline")
+            failures.append(Failure(
+                f"meta.{key}", None, None,
+                f"config mismatch: measured {got!r} vs baseline {want!r} "
+                f"— regenerate the baseline", "structural"))
     if failures:
         return failures
 
@@ -76,17 +121,24 @@ def compare(measured: dict, baseline: dict, tol: float) -> list:
     for extra in sorted(k for k in measured
                         if k != "meta" and isinstance(measured[k], dict)
                         and k not in baseline):
-        failures.append(f"{extra}: section not in baseline — "
-                        f"re-commit benchmarks/baselines/")
+        failures.append(Failure(
+            extra, None, None,
+            "section not in baseline — re-commit benchmarks/baselines/",
+            "structural"))
 
     def keys_match(section):
         a = set(measured.get(section, {}))
         b = set(baseline.get(section, {}))
         for missing in sorted(b - a):
-            failures.append(f"{section}.{missing}: missing from measurement")
+            failures.append(Failure(
+                f"{section}.{missing}", None,
+                baseline[section][missing],
+                "missing from measurement", "structural"))
         for extra in sorted(a - b):
-            failures.append(f"{section}.{extra}: not in baseline — "
-                            f"re-commit benchmarks/baselines/")
+            failures.append(Failure(
+                f"{section}.{extra}", measured[section][extra], None,
+                "not in baseline — re-commit benchmarks/baselines/",
+                "structural"))
         return sorted(a & b)
 
     for section in sections:
@@ -95,41 +147,62 @@ def compare(measured: dict, baseline: dict, tol: float) -> list:
             got = measured[section][key]
             want = baseline[section][key]
             if one_sided:
-                if got < want * (1.0 - tol):
-                    failures.append(
-                        f"{section}.{key}: {got:.2f}x < "
-                        f"{want:.2f}x * (1 - {tol:.0%}) — perf regression")
+                floor = want * (1.0 - tol)
+                if got < floor:
+                    failures.append(Failure(
+                        f"{section}.{key}", got, want,
+                        f">= {floor:.2f}x (floor = baseline - {tol:.0%})"
+                        f" — perf regression", "regression"))
             elif abs(got - want) > tol * abs(want):
-                failures.append(
-                    f"{section}.{key}: {got:.6g} vs baseline "
-                    f"{want:.6g} (> ±{tol:.0%}) — simulated-output drift")
+                failures.append(Failure(
+                    f"{section}.{key}", got, want,
+                    f"within ±{tol:.0%} of baseline — simulated-output "
+                    f"drift", "regression"))
     return failures
 
 
-def main() -> int:
+def exit_code(failures: List[Failure]) -> int:
+    if any(f.kind == "structural" for f in failures):
+        return EXIT_STRUCTURAL
+    if failures:
+        return EXIT_REGRESSION
+    return EXIT_OK
+
+
+def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("files", nargs="+",
                     help="measured baseline [measured baseline ...] pairs")
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("REPRO_PERF_TOL", "0.30")))
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if len(args.files) % 2:
         ap.error("need (measured, baseline) path PAIRS")
-    rc = 0
+    rc = EXIT_OK
     for mpath, bpath in zip(args.files[::2], args.files[1::2]):
-        with open(mpath) as fh:
-            measured = json.load(fh)
-        with open(bpath) as fh:
-            baseline = json.load(fh)
+        try:
+            with open(mpath) as fh:
+                measured = json.load(fh)
+            with open(bpath) as fh:
+                baseline = json.load(fh)
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"PERF GATE FAIL [{mpath} vs {bpath}]: cannot load "
+                  f"gate inputs: {exc}")
+            rc = max(rc, EXIT_STRUCTURAL)
+            continue
         failures = compare(measured, baseline, args.tol)
-        for f in failures:
-            print(f"PERF GATE FAIL [{mpath}]: {f}")
-        if not failures:
+        if failures:
+            print(f"PERF GATE FAIL [{mpath} vs {bpath}] — "
+                  f"{len(failures)} lane(s):")
+            print(_HEADER)
+            for f in failures:
+                print(f.row())
+        else:
             n_metrics = sum(len(v) for k, v in baseline.items()
                             if k != "meta" and isinstance(v, dict))
             print(f"perf gate OK [{mpath} vs {bpath}] "
                   f"(tol ±{args.tol:.0%}, {n_metrics} metrics)")
-        rc |= bool(failures)
+        rc = max(rc, exit_code(failures))
     return rc
 
 

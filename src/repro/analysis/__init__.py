@@ -1,0 +1,33 @@
+"""AST-level contract analyzer for the repo's hand-enforced invariants.
+
+Three pass families (see DESIGN.md "Enforced invariants" for the rule
+table and rationale):
+
+* :mod:`repro.analysis.rng` — RNG-stream discipline in the engine
+  modules (RNG001–RNG003);
+* :mod:`repro.analysis.purity` — jit/scan purity of traced functions
+  (JIT001–JIT005);
+* :mod:`repro.analysis.registry` — ``STRATEGIES`` / ``SCENARIOS`` /
+  time-model / DESIGN.md §3b coverage-matrix lockstep (REG001–REG005).
+
+Stdlib-``ast`` only: the analyzer parses, never imports, so it runs on
+a tree whose dependencies are absent (and CI runs it before pytest).
+Entry points: ``python -m repro.analysis`` or
+:func:`repro.analysis.analyze`. Violations are suppressed in place with
+``# repcheck: ignore[RULE]`` pragmas.
+"""
+
+from .cli import analyze, main
+from .findings import RULES, Finding, filter_suppressed, parse_pragmas
+from .passes import ModuleSource, load_module
+from .purity import run_purity_pass, traced_functions
+from .registry import (collect_registered, parse_design_tables,
+                       run_registry_pass)
+from .rng import run_rng_pass
+
+__all__ = [
+    "analyze", "main", "Finding", "RULES", "parse_pragmas",
+    "filter_suppressed", "ModuleSource", "load_module",
+    "run_rng_pass", "run_purity_pass", "traced_functions",
+    "run_registry_pass", "collect_registered", "parse_design_tables",
+]

@@ -1,0 +1,118 @@
+"""``python -m repro.analysis`` — run every contract pass over a tree.
+
+Default scan: ``src/`` + ``benchmarks/`` under ``--root`` (the repo
+checkout; CI runs from the repo root). Pass explicit files/dirs to
+narrow the sweep. ``--format json`` emits a machine-readable findings
+list (the CI artifact); exit status is nonzero iff findings remain
+after pragma filtering.
+
+Pass scoping by path (mirrors ISSUE 6 / DESIGN "Enforced invariants"):
+
+* RNG discipline — ``core/batch_jax.py``, ``core/time_models.py``,
+  ``kernels/*``; the host-RNG ban (RNG003) only on the jax-only modules
+  (``batch_jax`` + ``kernels``), since ``time_models``' NumPy layer *is*
+  the reference implementation.
+* Jit/scan purity — every ``.py`` file scanned; the x64 dtype rule
+  (JIT005) only on ``core/batch_jax.py``, the one module with an
+  ``x64=True`` engine mode to protect.
+* Registry cross-check — once per invocation against the repo-root
+  ``strategies.py`` / ``scenarios.py`` / ``time_models.py`` / DESIGN.md
+  quartet (skipped with ``--no-registry`` or when the quartet is absent,
+  e.g. scanning a fixture directory).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from .findings import RULES, Finding
+from .passes import iter_py_files, load_module
+from .purity import run_purity_pass
+from .registry import run_registry_pass
+from .rng import run_rng_pass
+
+__all__ = ["analyze", "main"]
+
+_RNG_SCOPE = ("core/batch_jax.py", "core/time_models.py", "/kernels/")
+_JAX_ONLY = ("core/batch_jax.py", "/kernels/")
+_X64_STRICT = ("core/batch_jax.py",)
+
+
+def _in_scope(rel: str, patterns) -> bool:
+    rel = "/" + rel.replace("\\", "/")      # so "kernels/x.py" matches
+    return any(rel.endswith(p) or p in rel for p in patterns)
+
+
+def analyze(root: Path, paths: Optional[List[Path]] = None,
+            registry: bool = True) -> List[Finding]:
+    """Run all passes; returns pragma-filtered findings, sorted."""
+    root = Path(root)
+    if paths is None:
+        paths = [p for p in (root / "src", root / "benchmarks")
+                 if p.exists()]
+    findings: List[Finding] = []
+    for path in iter_py_files([Path(p) for p in paths]):
+        try:
+            rel = str(path.relative_to(root))
+        except ValueError:
+            rel = str(path)
+        try:
+            mod = load_module(path, rel=rel)
+        except SyntaxError as exc:
+            findings.append(Finding(rel, exc.lineno or 1, "PARSE",
+                                    f"syntax error: {exc.msg}"))
+            continue
+        if _in_scope(rel, _RNG_SCOPE):
+            findings.extend(
+                run_rng_pass(mod, jax_only=_in_scope(rel, _JAX_ONLY)))
+        findings.extend(
+            run_purity_pass(mod, x64_strict=_in_scope(rel, _X64_STRICT)))
+    if registry and (root / "DESIGN.md").exists():
+        findings.extend(run_registry_pass(root))
+    return sorted(findings)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-level contract analyzer: RNG-stream discipline, "
+                    "jit/scan purity, registry/coverage cross-checks.")
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help="files or directories to scan "
+                             "(default: <root>/src + <root>/benchmarks)")
+    parser.add_argument("--root", type=Path, default=Path("."),
+                        help="repo root for default paths and the "
+                             "registry cross-check (default: cwd)")
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text")
+    parser.add_argument("--no-registry", action="store_true",
+                        help="skip the DESIGN.md registry cross-check")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule table and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    findings = analyze(args.root, paths=args.paths or None,
+                       registry=not args.no_registry)
+    if args.format == "json":
+        print(json.dumps({"count": len(findings),
+                          "findings": [f.to_dict() for f in findings]},
+                         indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        print(f"repcheck: {len(findings)} finding(s)"
+              if findings else "repcheck: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

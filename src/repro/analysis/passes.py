@@ -1,0 +1,113 @@
+"""Pass framework: parsed-module container + shared AST helpers.
+
+Each pass is a callable ``(ModuleSource) -> List[Finding]`` (or, for
+the repo-level registry pass, a callable over the repo root). The
+orchestrator in :mod:`repro.analysis.cli` loads every ``.py`` file,
+runs the per-module passes whose scope matches, applies the pragma
+filter, and merges the results.
+
+AST helpers here are deliberately syntactic: ``dotted_name`` prints an
+attribute chain (``jax.random.split``), ``call_name`` resolves a call's
+target through common import aliases. No imports are executed — the
+analyzer must be runnable on a tree whose dependencies are absent.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+from .findings import Finding, filter_suppressed, parse_pragmas
+
+__all__ = ["ModuleSource", "load_module", "dotted_name", "call_name",
+           "assigned_names", "iter_py_files"]
+
+
+@dataclasses.dataclass
+class ModuleSource:
+    """A parsed module plus everything passes need about it."""
+    path: Path
+    rel: str                       # path as reported in findings
+    source: str
+    tree: ast.Module
+    pragmas: Dict[int, Set[str]]
+    # alias -> canonical module, from `import numpy as np` etc.
+    import_aliases: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # name -> canonical dotted origin, from `from jax import lax` etc.
+    from_imports: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def apply_pragmas(self, findings: List[Finding]) -> List[Finding]:
+        return filter_suppressed(findings, self.pragmas)
+
+
+def load_module(path: Path, rel: Optional[str] = None) -> ModuleSource:
+    source = path.read_text()
+    tree = ast.parse(source, filename=str(path))
+    mod = ModuleSource(path=path, rel=rel or str(path), source=source,
+                       tree=tree, pragmas=parse_pragmas(source))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                mod.import_aliases[alias.asname or alias.name] = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                mod.from_imports[alias.asname or alias.name] = (
+                    f"{node.module}.{alias.name}")
+    return mod
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.random.split`` for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call, mod: ModuleSource) -> Optional[str]:
+    """Canonical dotted target of a call, resolved through imports.
+
+    ``np.random.normal`` -> ``numpy.random.normal`` when the module did
+    ``import numpy as np``; ``lax.scan`` -> ``jax.lax.scan`` after
+    ``from jax import lax``; plain names pass through unchanged.
+    """
+    name = dotted_name(node.func)
+    if name is None:
+        return None
+    head, _, tail = name.partition(".")
+    if head in mod.import_aliases:
+        head = mod.import_aliases[head]
+    elif head in mod.from_imports:
+        head = mod.from_imports[head]
+    return f"{head}.{tail}" if tail else head
+
+
+def assigned_names(target: ast.AST) -> List[str]:
+    """Flatten an assignment target into the plain names it binds."""
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in target.elts:
+            out.extend(assigned_names(elt))
+        return out
+    if isinstance(target, ast.Starred):
+        return assigned_names(target.value)
+    return []
+
+
+def iter_py_files(paths: List[Path]) -> List[Path]:
+    """Expand files/directories into a sorted list of ``.py`` files."""
+    out: Set[Path] = set()
+    for p in paths:
+        if p.is_dir():
+            out.update(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            out.add(p)
+    return sorted(out)

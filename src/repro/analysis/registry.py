@@ -1,0 +1,249 @@
+"""Registry/coverage cross-check pass: REG001 – REG005.
+
+Statically (no imports executed) collects:
+
+* ``STRATEGIES`` names — ``@register_strategy("name")`` decorations in
+  ``core/strategies.py`` (plus literal ``STRATEGIES["name"] = ...``
+  assignments);
+* ``SCENARIOS`` names — ``@register_scenario("name")`` in
+  ``exp/scenarios.py``, and per-factory the time-model constructors each
+  references;
+* time-model factory names — top-level functions/classes (and their
+  methods) in ``core/time_models.py``;
+* the DESIGN.md §3b *coverage matrix* (markdown table whose first header
+  cell starts with ``strategy``) and *scenario table* (first header cell
+  ``scenario``), both searched inside the §3b section.
+
+and reports drift in either direction. Matrix rows may group
+strategies with ``/`` (``sync/msync``) and carry parenthesized
+qualifiers — ``deadline (serial — by design)`` parses as ``deadline``.
+Registry findings are structural, not line-local: they have no pragma
+escape — fix the matrix or the registry.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from .findings import Finding
+from .passes import load_module
+
+__all__ = ["run_registry_pass", "collect_registered",
+           "parse_design_tables"]
+
+_SECTION_RE = re.compile(r"^##\s+§3b\b", re.MULTILINE)
+_NEXT_SECTION_RE = re.compile(r"^##\s+(?!#)", re.MULTILINE)
+
+
+def collect_registered(path: Path, decorator: str,
+                       registry: str) -> Dict[str, int]:
+    """``{name: lineno}`` of every registration in a registry module."""
+    mod = load_module(path)
+    out: Dict[str, int] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            for deco in node.decorator_list:
+                if (isinstance(deco, ast.Call)
+                        and isinstance(deco.func, ast.Name)
+                        and deco.func.id == decorator
+                        and deco.args
+                        and isinstance(deco.args[0], ast.Constant)):
+                    out[deco.args[0].value] = node.lineno
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == registry
+                        and isinstance(t.slice, ast.Constant)):
+                    out[t.slice.value] = node.lineno
+    return out
+
+
+def _tables_in(text: str, base_line: int) -> List[List[Tuple[int, List[str]]]]:
+    """All markdown tables as lists of (lineno, cells) rows."""
+    tables, current = [], []
+    for lineno, line in enumerate(text.splitlines(), start=base_line):
+        stripped = line.strip()
+        if stripped.startswith("|"):
+            cells = [c.strip() for c in stripped.strip("|").split("|")]
+            if all(set(c) <= set("-: ") for c in cells):
+                continue                      # separator row
+            current.append((lineno, cells))
+        elif current:
+            tables.append(current)
+            current = []
+    if current:
+        tables.append(current)
+    return tables
+
+
+def _row_strategies(cell: str) -> List[str]:
+    """First-column cell -> strategy tokens (strip parens, split '/')."""
+    cell = re.sub(r"\(.*?\)", "", cell)
+    cell = cell.replace("`", "").replace("*", "")
+    return [tok.strip() for tok in cell.split("/") if tok.strip()]
+
+
+def parse_design_tables(design_path: Path):
+    """(matrix: {name: lineno}, scenarios: {name: lineno}) from §3b.
+
+    Missing section/tables come back as ``None`` so the caller can emit
+    a structural finding instead of a spray of per-name mismatches.
+    """
+    text = design_path.read_text()
+    m = _SECTION_RE.search(text)
+    if not m:
+        return None, None
+    start = m.end()
+    nxt = _NEXT_SECTION_RE.search(text, start)
+    section = text[start:nxt.start()] if nxt else text[start:]
+    base_line = text[:start].count("\n") + 1
+    matrix: Optional[Dict[str, int]] = None
+    scen: Optional[Dict[str, int]] = None
+    for table in _tables_in(section, base_line):
+        header = table[0][1]
+        first = header[0].lower()
+        if first.startswith("strategy") and matrix is None:
+            matrix = {}
+            for lineno, cells in table[1:]:
+                for tok in _row_strategies(cells[0]):
+                    matrix[tok] = lineno
+        elif first.startswith("scenario") and scen is None:
+            scen = {}
+            for lineno, cells in table[1:]:
+                for tok in _row_strategies(cells[0]):
+                    scen[tok] = lineno
+    return matrix, scen
+
+
+def _time_model_names(path: Path) -> Tuple[Set[str], Dict[str, Set[str]]]:
+    """Top-level def/class names + per-class attribute names."""
+    mod = load_module(path)
+    top: Set[str] = set()
+    class_attrs: Dict[str, Set[str]] = {}
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            top.add(node.name)
+        elif isinstance(node, ast.ClassDef):
+            top.add(node.name)
+            attrs: Set[str] = set()
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+                    attrs.add(sub.name)
+                elif isinstance(sub, ast.Assign):
+                    for t in sub.targets:
+                        if isinstance(t, ast.Name):
+                            attrs.add(t.id)
+                        elif (isinstance(t, ast.Attribute)
+                              and isinstance(t.value, ast.Name)
+                              and t.value.id == "self"):
+                            attrs.add(t.attr)
+                elif isinstance(sub, ast.AnnAssign) and isinstance(
+                        sub.target, (ast.Name, ast.Attribute)):
+                    if isinstance(sub.target, ast.Name):
+                        attrs.add(sub.target.id)
+                    elif isinstance(sub.target.value, ast.Name) \
+                            and sub.target.value.id == "self":
+                        attrs.add(sub.target.attr)
+            class_attrs[node.name] = attrs
+    return top, class_attrs
+
+
+def run_registry_pass(root: Path, *,
+                      strategies_path: Optional[Path] = None,
+                      scenarios_path: Optional[Path] = None,
+                      time_models_path: Optional[Path] = None,
+                      design_path: Optional[Path] = None) -> List[Finding]:
+    root = Path(root)
+    strategies_path = strategies_path or (
+        root / "src/repro/core/strategies.py")
+    scenarios_path = scenarios_path or (root / "src/repro/exp/scenarios.py")
+    time_models_path = time_models_path or (
+        root / "src/repro/core/time_models.py")
+    design_path = design_path or (root / "DESIGN.md")
+    findings: List[Finding] = []
+
+    missing = [p for p in (strategies_path, scenarios_path,
+                           time_models_path, design_path)
+               if not p.exists()]
+    if missing:
+        return [Finding(str(p), 1, "REG001",
+                        "registry cross-check input missing")
+                for p in missing]
+
+    strategies = collect_registered(strategies_path, "register_strategy",
+                                    "STRATEGIES")
+    scenarios = collect_registered(scenarios_path, "register_scenario",
+                                   "SCENARIOS")
+    matrix, scen_table = parse_design_tables(design_path)
+    rel_design = str(design_path)
+    rel_strat = str(strategies_path)
+    rel_scen = str(scenarios_path)
+
+    if matrix is None:
+        findings.append(Finding(rel_design, 1, "REG002",
+                                "DESIGN.md §3b coverage matrix (table "
+                                "with 'strategy' header) not found"))
+        matrix = {}
+    if scen_table is None:
+        findings.append(Finding(rel_design, 1, "REG004",
+                                "DESIGN.md §3b scenario table (table "
+                                "with 'scenario' header) not found"))
+        scen_table = {}
+
+    for name, lineno in sorted(strategies.items()):
+        if name not in matrix:
+            findings.append(Finding(
+                rel_strat, lineno, "REG001",
+                f"strategy {name!r} registered here but absent from the "
+                f"DESIGN.md §3b coverage matrix"))
+    for name, lineno in sorted(matrix.items()):
+        if name not in strategies:
+            findings.append(Finding(
+                rel_design, lineno, "REG002",
+                f"coverage-matrix row names strategy {name!r} which is "
+                f"not registered in STRATEGIES"))
+    for name, lineno in sorted(scenarios.items()):
+        if name not in scen_table:
+            findings.append(Finding(
+                rel_scen, lineno, "REG003",
+                f"scenario {name!r} registered here but absent from the "
+                f"DESIGN.md §3b scenario table"))
+    for name, lineno in sorted(scen_table.items()):
+        if name not in scenarios:
+            findings.append(Finding(
+                rel_design, lineno, "REG004",
+                f"scenario-table row names scenario {name!r} which is "
+                f"not registered in SCENARIOS"))
+
+    # REG005: every time_models name the scenario factories touch exists
+    top, class_attrs = _time_model_names(time_models_path)
+    scen_mod = load_module(scenarios_path)
+    tm_imports: Dict[str, str] = {}       # local alias -> imported name
+    for node in ast.walk(scen_mod.tree):
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.endswith("time_models"):
+            for alias in node.names:
+                tm_imports[alias.asname or alias.name] = alias.name
+                if alias.name not in top:
+                    findings.append(Finding(
+                        rel_scen, node.lineno, "REG005",
+                        f"import of {alias.name!r} from time_models, "
+                        f"which defines no such factory"))
+    for node in ast.walk(scen_mod.tree):
+        if isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id in tm_imports:
+            cls = tm_imports[node.value.id]
+            attrs = class_attrs.get(cls)
+            if attrs is not None and node.attr not in attrs:
+                findings.append(Finding(
+                    rel_scen, node.lineno, "REG005",
+                    f"{cls}.{node.attr} referenced here but "
+                    f"{cls} defines no such factory"))
+    return findings

@@ -1,0 +1,161 @@
+"""RNG-discipline pass: RNG001 / RNG002 / RNG003.
+
+Scope (decided by the caller via path patterns, see ``cli.DEFAULT_RNG_GLOBS``):
+``core/batch_jax.py``, ``core/time_models.py`` and ``kernels/`` for the
+key-plumbing rules; the jax-only modules (``batch_jax`` + ``kernels``,
+NOT ``time_models`` whose NumPy layer is the reference implementation)
+additionally ban host ``np.random``.
+
+The keyed-draw contract these rules pin down (DESIGN.md §3b): every
+``jax.random`` draw consumes a key that reaches it through ``split`` /
+``fold_in`` / parameter plumbing. A literal ``PRNGKey(7)`` inside an
+engine body silently correlates seeds; the *same* key expression feeding
+two draw sites reuses a stream (draws become identical, not
+independent); a host ``np.random`` call inside a jax engine both breaks
+device residency and escapes the per-seed Philox counter discipline.
+"""
+
+from __future__ import annotations
+
+import ast
+import itertools
+from typing import Dict, Iterator, List, Optional
+
+from .findings import Finding
+from .passes import ModuleSource, assigned_names, call_name
+
+__all__ = ["run_rng_pass", "DRAW_FNS"]
+
+_KEY_ROOTS = {"jax.random.PRNGKey", "jax.random.key"}
+
+# jax.random functions that CONSUME a key (first arg / key=). split and
+# fold_in are derivations, not draws — deriving twice from one parent is
+# the legitimate pattern, so they are excluded on purpose.
+DRAW_FNS = frozenset({
+    "normal", "uniform", "bernoulli", "exponential", "gamma", "beta",
+    "categorical", "choice", "permutation", "randint", "bits", "poisson",
+    "truncated_normal", "gumbel", "laplace", "logistic", "cauchy",
+    "rademacher", "dirichlet", "multivariate_normal", "t",
+})
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _scope_body(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function's body, stopping at nested function boundaries."""
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    stack = list(body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, _FUNC_NODES):
+            continue                      # nested scope analyzed separately
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _assignment_counts(fn: ast.AST) -> Dict[str, int]:
+    """How many times each name is (re)bound inside this scope."""
+    counts: Dict[str, int] = {}
+
+    def bump(name: str) -> None:
+        counts[name] = counts.get(name, 0) + 1
+
+    args = getattr(fn, "args", None)
+    if args is not None:
+        for a in itertools.chain(args.posonlyargs, args.args,
+                                 args.kwonlyargs,
+                                 filter(None, [args.vararg, args.kwarg])):
+            bump(a.arg)
+    for node in _scope_body(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                for name in assigned_names(t):
+                    bump(name)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            for name in assigned_names(node.target):
+                bump(name)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            for name in assigned_names(node.target):
+                bump(name)
+                bump(name)                # loop vars rebind per iteration
+        elif isinstance(node, ast.comprehension):
+            for name in assigned_names(node.target):
+                bump(name)
+                bump(name)
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            for name in assigned_names(node.optional_vars):
+                bump(name)
+        elif isinstance(node, ast.NamedExpr):
+            for name in assigned_names(node.target):
+                bump(name)
+    return counts
+
+
+def _draw_key_arg(node: ast.Call, mod: ModuleSource) -> Optional[ast.AST]:
+    """The key expression of a jax.random draw call, else None."""
+    name = call_name(node, mod)
+    if not name or not name.startswith("jax.random."):
+        return None
+    if name.rsplit(".", 1)[-1] not in DRAW_FNS:
+        return None
+    if node.args:
+        return node.args[0]
+    for kw in node.keywords:
+        if kw.arg == "key":
+            return kw.value
+    return None
+
+
+def run_rng_pass(mod: ModuleSource, jax_only: bool) -> List[Finding]:
+    """RNG001/RNG002 on every function scope; RNG003 iff ``jax_only``."""
+    findings: List[Finding] = []
+
+    # RNG003: module-wide, any scope (host RNG is wrong even at import
+    # time in a jax-only engine module).
+    if jax_only:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                name = call_name(node, mod)
+                if name and (name.startswith("numpy.random.")
+                             or name.startswith("np.random.")):
+                    findings.append(Finding(
+                        mod.rel, node.lineno, "RNG003",
+                        f"host RNG call {name} in jax-only engine module"))
+
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, _FUNC_NODES):
+            continue
+        counts = _assignment_counts(fn)
+        # key-expression dump -> first draw site line
+        seen_keys: Dict[str, int] = {}
+        for node in _scope_body(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node, mod)
+            # RNG001: literal-constant root key inside an engine body
+            if (name in _KEY_ROOTS and node.args
+                    and isinstance(node.args[0], ast.Constant)):
+                findings.append(Finding(
+                    mod.rel, node.lineno, "RNG001",
+                    f"literal {name}({node.args[0].value!r}) inside a "
+                    f"function body; derive keys via split/fold_in or "
+                    f"accept one as a parameter"))
+            # RNG002: identical key expression at two draw sites
+            key_expr = _draw_key_arg(node, mod)
+            if key_expr is None:
+                continue
+            names = [n.id for n in ast.walk(key_expr)
+                     if isinstance(n, ast.Name)]
+            if any(counts.get(n, 1) > 1 for n in names):
+                continue            # name rebound between sites: streams
+                                    # may differ, syntactic equality lies
+            dump = ast.dump(key_expr)
+            if dump in seen_keys:
+                findings.append(Finding(
+                    mod.rel, node.lineno, "RNG002",
+                    f"key expression {ast.unparse(key_expr)!r} already "
+                    f"feeds the draw at line {seen_keys[dump]}; reusing "
+                    f"it makes the two draws identical — split the key"))
+            else:
+                seen_keys[dump] = node.lineno
+    return mod.apply_pragmas(findings)

@@ -272,7 +272,10 @@ def _engine_dtype():
     import jax
     import jax.numpy as jnp
 
-    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    # The one traced-reachable site allowed to name both dtypes: this IS
+    # the selector every engine derives its dtype from, and it reads the
+    # x64 flag — so it cannot pin the wrong precision.
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32  # repcheck: ignore[JIT005]
 
 
 def _keys_and_x(problem, S, n, seeds):
@@ -1101,8 +1104,11 @@ def _arrival_while_run(model, problem, max_delay, delay_adaptive, n, S, K,
         kc = jnp.clip(k, 0, K - 1)
         if math:
             g = jax.vmap(problem.stoch_grad)(xs[rows, w], sub[:, 1])
-            mult = (1.0 / (1.0 + delay.astype(jnp.float32) / n)
-                    if delay_adaptive else jnp.ones(S, jnp.float32))
+            # g.dtype, not a hard-coded float32: under x64=True the
+            # carry is float64 and a float32 mult would silently down-
+            # cast the step (the scan engine already derives its dtype).
+            mult = (1.0 / (1.0 + delay.astype(g.dtype) / n)
+                    if delay_adaptive else jnp.ones(S, g.dtype))
             x = jnp.where(accept[:, None],
                           x - gamma * mult[:, None] * g, x)
             val = jax.vmap(problem.f)(x)

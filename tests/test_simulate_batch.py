@@ -799,6 +799,34 @@ def test_x64_partial_participation_per_run_parity():
     assert not jax.config.jax_enable_x64
 
 
+def test_x64_delay_adaptive_while_scan_parity():
+    """repcheck JIT005 regression (ISSUE 6 satellite): the while_loop
+    reference engine's delay-adaptive multiplier must inherit the engine
+    dtype. The pre-fix body hard-coded ``jnp.float32`` for the
+    ``1/(1+delay/n)`` step scaling, so under ``x64=True`` every accepted
+    step silently downcast while the arrival scan ran float64 — the two
+    recursions replay the same event order on a deterministic model
+    (oracle p=1 ignores its key), so their iterates must now agree at
+    float64 precision, far below float32 resolution."""
+    from repro.core.batch_jax import (quadratic_worst_case_jax,
+                                      simulate_batch_jax)
+    from repro.core.strategies import make_strategy
+    model = _generic_fixed(10, seed=5)
+    prob = quadratic_worst_case_jax(d=20, p=1.0)
+    strat = make_strategy("async", delay_adaptive=True)
+    scan = simulate_batch_jax(strat, model, 30, problem=prob, gamma=0.3,
+                              seeds=[0, 1], record_every=5, x64=True)
+    ref = simulate_batch_jax(strat, model, 30, problem=prob, gamma=0.3,
+                             seeds=[0, 1], record_every=5, x64=True,
+                             async_engine="while")
+    for a, b in zip(scan, ref):
+        assert a.total_time == pytest.approx(b.total_time, rel=1e-12)
+        np.testing.assert_allclose(a.values, b.values, rtol=1e-12)
+        np.testing.assert_allclose(a.grad_norms, b.grad_norms,
+                                   rtol=1e-12)
+        assert a.gradients_used == b.gradients_used
+
+
 # ------------------------------------------------------------ order stats
 def test_mth_smallest_kernels_match_sort():
     import jax.numpy as jnp
