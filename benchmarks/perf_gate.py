@@ -2,16 +2,20 @@
 the committed baselines (ISSUE 3 satellite; generalized to multiple
 artifacts for ISSUE 4; per-lane diff + split exit codes for ISSUE 6).
 
-The gate takes ``measured baseline`` path PAIRS — CI runs it over both
-``BENCH_simbatch.json`` (engine speedups + simulated outputs) and
+The gate takes ``measured baseline`` path PAIRS — CI runs it over
+``BENCH_simbatch.json`` (engine speedups + simulated outputs),
 ``BENCH_fig8.json`` (the fig8_grid per-figure ``run_experiment``
-artifact, so behavior drift beyond the simbatch shapes is caught too).
+artifact, so behavior drift beyond the simbatch shapes is caught too)
+and, in the sharded lane, ``BENCH_sweep.json`` (the
+``backend="jax_sharded"`` scaling-efficiency lane from
+``benchmarks/sweep_scaling.py``).
 
 Rules per artifact (tolerance ±30% by default, ``REPRO_PERF_TOL``
 overrides):
 
-* ``speedup_vs_serial.*`` — one-sided floors: a measured speedup may
-  exceed the baseline freely but must not drop below
+* ``speedup_vs_serial.*`` / ``speedup_vs_unsharded.*``
+  (:data:`ONE_SIDED_SECTIONS`) — one-sided floors: a measured speedup
+  may exceed the baseline freely but must not drop below
   ``baseline * (1 - tol)`` (perf regression).
 * every other numeric section (``total_time_mean.*``,
   ``s_per_useful_grad_mean.*``, ...) — two-sided: these are *simulated*
@@ -45,7 +49,8 @@ therefore seeded *conservatively* — speedup entries are chosen so the
 -30% floors land at the acceptance criteria asserted inside
 ``simbatch_speed.py`` itself (jax 7.15 → floor 5x, counter 5.72 →
 floor 4x, async keyed 1.86 → floor 1.3x, arrival-scan chain 4.29 →
-floor 3x, routed-vs-alternative 1.43 → floor 1x), while simulated-output
+floor 3x, routed-vs-alternative 1.43 → floor 1x, sharded-sweep dN
+3.571 → floor 2.5x), while simulated-output
 entries are exact simulator results (machine-independent, tight drift
 detectors — the fig8 grid is deterministic end to end). To tighten the
 speedup floors, regenerate the baseline ON THE RUNNER CLASS IT GATES
@@ -70,7 +75,7 @@ from typing import List, Optional
 
 # sections gated as one-sided floors (higher is better); everything else
 # numeric is a simulated output, gated two-sided
-ONE_SIDED_SECTIONS = ("speedup_vs_serial",)
+ONE_SIDED_SECTIONS = ("speedup_vs_serial", "speedup_vs_unsharded")
 
 EXIT_OK = 0
 EXIT_REGRESSION = 1      # numeric: floor/band violated

@@ -22,6 +22,9 @@ Modules:
   thm55_participation  Theorem 5.5 window under the rotating adversary
   simbatch_speed     simulate_batch jax >= 5x / counter >= 4x acceptance
                      smokes; writes the BENCH_simbatch.json perf baseline
+  sweep_scaling      backend="jax_sharded" vs unsharded sweep speedup at
+                     forced device counts (subprocess per XLA_FLAGS
+                     setting); writes the BENCH_sweep.json perf baseline
   order_stats_speed  Pallas top-m kernel vs lax.top_k vs iterative
                      extraction at n in {1e3, 1e5}
 
@@ -40,8 +43,9 @@ import time
 
 from . import (ablation_m_sweep, fig5_quadratic, fig8_grid, malenia_het,
                order_stats_speed, sec6_async_needed, sec6_heterogeneous,
-               sec53_gap, secj_R_estimation, simbatch_speed, table_mstar,
-               thm23_logfactor, thm32_random, thm55_participation)
+               sec53_gap, secj_R_estimation, simbatch_speed, sweep_scaling,
+               table_mstar, thm23_logfactor, thm32_random,
+               thm55_participation)
 
 MODULES = [
     ("fig5_quadratic", fig5_quadratic),
@@ -58,6 +62,7 @@ MODULES = [
     ("sec6_heterogeneous", sec6_heterogeneous),
     ("simbatch_speed", simbatch_speed),
     ("order_stats_speed", order_stats_speed),
+    ("sweep_scaling", sweep_scaling),
 ]
 
 

@@ -33,8 +33,19 @@ reported as context (exact RNG parity, smaller speedup).
 model): the perf regression gate (``benchmarks/perf_gate.py``, run by
 CI) compares it against the committed baseline in
 ``benchmarks/baselines/``.
+
+``--calibrate`` measures THIS machine's engines and inverts the
+``backend="fastest"`` cost model
+(:data:`repro.core.batch.COST_CONSTANTS`) for its per-machine
+constants, writing a JSON artifact that
+:func:`repro.core.batch.load_cost_constants` merges over the hard-coded
+container defaults (point ``REPRO_COST_CONSTANTS`` at it, or call the
+loader). The defaults only need to get routing ORDERINGS right;
+calibrating tightens the boundaries on hosts with very different
+serial/jit ratios (e.g. a fast dev box vs a throttled CI runner).
 """
 
+import argparse
 import dataclasses
 import json
 import os
@@ -43,10 +54,12 @@ import time
 import numpy as np
 
 from repro.core import STRATEGIES, make_strategy, simulate, simulate_batch
-from repro.core.batch_jax import simulate_batch_jax
+from repro.core.batch import load_cost_constants
+from repro.core.batch_jax import arrival_scan_work, simulate_batch_jax
 from repro.exp import make_scenario
 
 BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_simbatch.json")
+CALIB_JSON_DEFAULT = "cost_constants.json"
 
 
 def run(fast: bool = True):
@@ -234,8 +247,111 @@ def _timed(fn) -> float:
     return time.perf_counter() - t0
 
 
+def calibrate(out: str = CALIB_JSON_DEFAULT):
+    """Measure this machine's engines and solve
+    :func:`repro.core.batch.estimate_backend_seconds` for its constants.
+
+    Each constant is recovered from the engine whose cost formula it
+    dominates, at a shape where that term IS dominant (so the inversion
+    is well-conditioned): serial m-sync → ``np_elem``, serial async
+    event loop → ``heap_event``, counter-vectorized m-sync →
+    ``vec_elem``, warm jit-cached FixedTimes m-sync → ``jax_elem``,
+    cold-minus-warm closure-compiled m-sync → ``jit_compile``, warm
+    timing-only Async arrival scan → ``pool_elem``, warm Ringmaster
+    minus its pool term → ``scan_step``. ``accel_speedup`` is left to
+    the default — there is nothing to measure on a CPU-only host, and
+    :func:`load_cost_constants` fills any key the artifact omits.
+
+    Writes ``{"meta": ..., "constants": ...}`` to ``out`` (the shape
+    ``load_cost_constants`` consumes) and round-trips it through the
+    loader as a self-check. Returns harness rows.
+    """
+    n, S, K, m = 400, 8, 100, 8
+    K_async = 1500
+    work = float(S) * K * n
+    rmodel = make_scenario("exponential", n)
+    fmodel = make_scenario("fixed_sqrt", n)
+    spec = ("msync", {"m": m})
+
+    t_serial = _timed(lambda: [
+        simulate(STRATEGIES["msync"](m=m), rmodel, K=K, seed=s)
+        for s in range(S)])
+    np_elem = t_serial / work
+
+    t_heap = _timed(lambda: [
+        simulate(STRATEGIES["async"](), rmodel, K=K_async, seed=s)
+        for s in range(S)])
+    heap_event = t_heap / (S * K_async)
+
+    t_vec = min(_timed(lambda: simulate_batch(
+        spec, rmodel, K=K, seeds=S, backend="vectorized",
+        rng_scheme="counter")) for _ in range(3))
+    vec_elem = t_vec / work
+
+    # FixedTimes timing program is module-cached: warm time is pure
+    # scanned compute, the jax_elem term alone
+    simulate_batch(spec, fmodel, K=K, seeds=S, backend="jax")
+    t_jax_warm = min(_timed(lambda: simulate_batch(
+        spec, fmodel, K=K, seeds=S, backend="jax")) for _ in range(3))
+    jax_elem = t_jax_warm / work
+
+    # random-model program is closure-compiled: first call at a fresh
+    # shape pays the compile the cost model charges per call
+    t_jax_cold = _timed(lambda: simulate_batch(
+        spec, rmodel, K=K, seeds=S, backend="jax"))
+    t_jax_rwarm = min(_timed(lambda: simulate_batch(
+        spec, rmodel, K=K, seeds=S, backend="jax")) for _ in range(3))
+    jit_compile = max(t_jax_cold - t_jax_rwarm, 0.05)
+
+    pool, _ = arrival_scan_work(rmodel, n, K_async, ringmaster=False,
+                                max_delay=0)
+    simulate_batch("async", rmodel, K=K_async, seeds=S, backend="jax")
+    t_async = min(_timed(lambda: simulate_batch(
+        "async", rmodel, K=K_async, seeds=S, backend="jax"))
+        for _ in range(3))
+    pool_elem = t_async / (S * pool)
+
+    md = 8
+    rspec = ("ringmaster", {"max_delay": md})
+    pool_r, window = arrival_scan_work(rmodel, n, K_async, ringmaster=True,
+                                       max_delay=md)
+    simulate_batch(rspec, rmodel, K=K_async, seeds=S, backend="jax")
+    t_ring = min(_timed(lambda: simulate_batch(
+        rspec, rmodel, K=K_async, seeds=S, backend="jax"))
+        for _ in range(3))
+    scan_step = max((t_ring - S * pool_r * pool_elem)
+                    / (window * (S / 32.0)), 1e-8)
+
+    constants = {
+        "np_elem": np_elem, "heap_event": heap_event,
+        "vec_elem": vec_elem, "jax_elem": jax_elem,
+        "jit_compile": jit_compile, "pool_elem": pool_elem,
+        "scan_step": scan_step,
+    }
+    with open(out, "w") as fh:
+        json.dump({"meta": {"n": n, "S": S, "K": K, "m": m,
+                            "K_async": K_async,
+                            "source": "simbatch_speed --calibrate"},
+                   "constants": constants}, fh, indent=2)
+    # self-check: the loader must pick up every measured key
+    merged = load_cost_constants(out, apply=False)
+    for key, val in constants.items():
+        assert merged[key] == val, (key, merged[key], val)
+    assert merged["accel_speedup"] > 0          # default fills the gap
+
+    return [(f"calibrate/{k}", v, f"written to {out}")
+            for k, v in constants.items()]
+
+
 def main():
-    for name, val, derived in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure per-machine cost-model constants")
+    ap.add_argument("--out", default=CALIB_JSON_DEFAULT,
+                    help="calibration JSON path (with --calibrate)")
+    args = ap.parse_args()
+    rows = calibrate(args.out) if args.calibrate else run()
+    for name, val, derived in rows:
         print(f"{name},{val},{derived}")
 
 

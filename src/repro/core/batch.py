@@ -34,6 +34,17 @@ Backends (``backend=``):
   tolerance for deterministic models/oracles in generic position
   (adversarially tie-heavy instances, e.g. partial participation, can
   diverge by whole events under the worker-index tie-break).
+* ``"jax_sharded"`` — :mod:`repro.launch.sweep`: the jax engines, but
+  every (grid point × seed) pair becomes one work unit, units are
+  packed into shape buckets (same compiled program — m-sync buckets
+  even fuse heterogeneous ``m``/``gamma`` as traced per-unit inputs)
+  and each bucket is ``shard_map``ped over a 1-D ``data`` mesh of the
+  local devices. Per-seed results are bitwise identical to
+  ``backend="jax"`` (the per-seed key streams are sweep-independent);
+  the per-point routing records carry the bucket, compile-vs-execute
+  wall times and program-cache hits. m-sync and Async/Ringmaster
+  shard; Rennala/Malenia fall back to the per-point jax engine inside
+  the sweep (recorded as ``fallback``).
 * ``"auto"`` (default) — ``vectorized`` when eligible, else ``serial``.
 * ``"fastest"`` — like ``auto`` but routes each grid point through a
   **per-engine cost model** (:func:`estimate_backend_seconds`): the
@@ -61,6 +72,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
@@ -70,7 +82,7 @@ from .strategies import (AggregationStrategy, MSync, STRATEGIES, Trace,
 from .time_models import FixedTimes, TimeModel, UniversalModel, philox_rngs
 
 __all__ = ["TraceBatch", "simulate_batch", "SIM_GRID_KEYS", "JAX_MIN_WORK",
-           "estimate_backend_seconds"]
+           "estimate_backend_seconds", "load_cost_constants"]
 
 # grid keys routed to simulate() itself; everything else goes to the
 # strategy factory
@@ -89,11 +101,11 @@ JAX_MIN_WORK = 1_000_000
 # the per-engine cost model behind backend="fastest"
 # ---------------------------------------------------------------------------
 
-#: Cost-model constants, calibrated on this container's CPU via
-#: ``benchmarks/simbatch_speed.py`` shapes (n=1000, S=32). They only need
-#: to get the ORDERING right near the routing boundaries, not absolute
-#: wall-clock; regenerate by timing the engines if they drift.
-COST_CONSTANTS = {
+#: Hard-coded fallback cost-model constants, calibrated on this
+#: container's CPU via ``benchmarks/simbatch_speed.py`` shapes (n=1000,
+#: S=32). They only need to get the ORDERING right near the routing
+#: boundaries, not absolute wall-clock.
+_DEFAULT_COST_CONSTANTS = {
     "heap_event": 2.6e-6,    # serial event-loop seconds per heap pop
     "np_elem": 1.1e-7,       # serial m-sync fast path, per S*K*n element
     "vec_elem": 2.0e-8,      # vectorized counter engine, per element
@@ -103,6 +115,52 @@ COST_CONSTANTS = {
     "jit_compile": 0.6,      # closure-compiled program, per call
     "accel_speedup": 20.0,   # discount on jax COMPUTE (not compile) terms
 }
+
+#: The ACTIVE cost-model constants the router reads. Self-calibrating:
+#: ``benchmarks/simbatch_speed.py --calibrate`` measures this machine's
+#: engines and persists a JSON that :func:`load_cost_constants` merges
+#: over the defaults (set ``REPRO_COST_CONSTANTS=/path.json`` to load at
+#: import, or call the loader explicitly). Mutated in place so every
+#: importer sees the calibrated values.
+COST_CONSTANTS = dict(_DEFAULT_COST_CONSTANTS)
+
+
+def load_cost_constants(path: Optional[str] = None,
+                        apply: bool = True) -> Dict[str, float]:
+    """Merge measured per-machine cost constants over the hard-coded
+    defaults and (by default) install them as the active
+    :data:`COST_CONSTANTS`.
+
+    ``path`` defaults to the ``REPRO_COST_CONSTANTS`` environment
+    variable. The JSON may be flat or ``{"constants": {...}}`` (the
+    ``--calibrate`` artifact shape); unknown keys and unreadable files
+    are ignored — routing must never fail because a calibration file
+    went stale.
+    """
+    import json
+    import os
+
+    merged = dict(_DEFAULT_COST_CONSTANTS)
+    if path is None:
+        path = os.environ.get("REPRO_COST_CONSTANTS", "")
+    if path:
+        try:
+            with open(path) as fh:
+                data = json.load(fh)
+            consts = data.get("constants", data) if isinstance(data, dict) \
+                else {}
+            merged.update({k: float(v) for k, v in consts.items()
+                           if k in merged and float(v) > 0.0})
+        except (OSError, ValueError, TypeError):
+            pass                      # stale/bad calibration: defaults win
+    if apply:
+        COST_CONSTANTS.clear()
+        COST_CONSTANTS.update(merged)
+    return merged
+
+
+if os.environ.get("REPRO_COST_CONSTANTS"):
+    load_cost_constants()
 
 
 def _accelerator_present() -> bool:
@@ -122,9 +180,27 @@ def _accelerator_present() -> bool:
 _ACCEL_PRESENT = None
 
 
+def _device_count() -> int:
+    """Local jax device count (the sharded sweep's mesh size). Cached
+    like :func:`_accelerator_present` — only consulted once a sweep is
+    big enough that the jax import is already amortized."""
+    global _DEVICE_COUNT
+    if _DEVICE_COUNT is None:
+        try:
+            import jax
+            _DEVICE_COUNT = jax.local_device_count()
+        except Exception:           # pragma: no cover - jax always present
+            _DEVICE_COUNT = 1
+    return _DEVICE_COUNT
+
+
+_DEVICE_COUNT = None
+
+
 def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
                              model, S: int, K: int, n: int,
-                             accelerator: bool = False) -> float:
+                             accelerator: bool = False,
+                             devices: Optional[int] = None) -> float:
     """Estimated wall-clock seconds for one timing-only grid point.
 
     ``backend`` is ``"serial"``, ``"vectorized"`` or ``"jax"``;
@@ -150,6 +226,13 @@ def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
     ``accelerator=True`` divides the jax COMPUTE terms by
     ``accel_speedup`` (compile is host-bound and stays). Host engines
     never get the discount — they run on the CPU regardless.
+
+    ``backend="jax_sharded"`` prices the sharded sweep of THIS point's
+    units (its S seeds) on ``devices`` devices (default: the local
+    device count): jax compute terms divide by ``min(devices, S)``,
+    compile does not — it is host-bound and paid once per shape bucket,
+    and the per-point estimate conservatively charges it in full (the
+    sweep layer's cross-point fusion can only make reality cheaper).
     """
     C = COST_CONSTANTS
     kind = _engine_kind(strategy)
@@ -174,8 +257,15 @@ def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
         else:                       # malenia: every worker >= 1 per round
             events = float(K) * n
         return S * events * C["heap_event"]
-    if backend != "jax":
+    if backend not in ("jax", "jax_sharded"):
         raise ValueError(f"no cost model for backend {backend!r}")
+    shard = 1.0
+    if backend == "jax_sharded" and kind in ("msync", "async",
+                                             "ringmaster"):
+        # rennala/malenia have no sharded program (the sweep falls back
+        # to the per-point jax engine), so only these kinds divide
+        D = _device_count() if devices is None else int(devices)
+        shard = float(max(min(D, S), 1))
     accel = C["accel_speedup"] if accelerator else 1.0
     if kind in ("async", "ringmaster"):
         from .batch_jax import arrival_scan_work
@@ -186,17 +276,17 @@ def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
         cost = S * pool * C["pool_elem"]
         if ring:
             cost += window * C["scan_step"] * (S / 32.0)
-        return cost / accel         # jit-cached: no compile term
+        return cost / accel / shard  # jit-cached: no compile term
     if kind == "rennala":
         elems = work * max(int(getattr(strategy, "batch", 1)), 1)
     elif kind == "malenia":
         elems = work * 2.0 * max(float(getattr(strategy, "S", 1.0)), 1.0)
     else:
         elems = work
-    cost = elems * C["jax_elem"] / accel
+    cost = elems * C["jax_elem"] / accel / shard
     fixed_timing_cached = kind == "msync" and isinstance(model, FixedTimes)
-    if not fixed_timing_cached:
-        cost += C["jit_compile"]    # closure-compiled per call
+    if backend == "jax_sharded" or not fixed_timing_cached:
+        cost += C["jit_compile"]    # closure-/AOT-compiled per call
     return cost
 
 
@@ -397,6 +487,22 @@ def _route_fastest(strat: AggregationStrategy, model, problem, K_pt: int,
         from .batch_jax import _check_supported, jax_supported
         if tol_pt is None and K_pt > 0 and jax_supported(strat, model,
                                                          problem):
+            devices = _device_count()
+            if (devices > 1 and kind in ("msync", "async", "ringmaster")
+                    and info["work"] / devices >= JAX_MIN_WORK):
+                accel = _accelerator_present()
+                est = {"jax": estimate_backend_seconds(
+                           "jax", strat, model, S, K_pt, n,
+                           accelerator=accel),
+                       "jax_sharded": estimate_backend_seconds(
+                           "jax_sharded", strat, model, S, K_pt, n,
+                           accelerator=accel, devices=devices)}
+                info["est_seconds"] = {k: round(v, 6)
+                                       for k, v in est.items()}
+                info["devices"] = devices
+                info["accelerator"] = accel
+                return pick(min(est, key=est.get),
+                            "jax-problem: only a jax engine can run it")
             return pick("jax", "jax-problem: only jax can execute it")
         # raise the precise unsupported-combination error instead of
         # letting the serial engine crash inside the jax oracle
@@ -425,6 +531,15 @@ def _route_fastest(strat: AggregationStrategy, model, problem, K_pt: int,
     est = {host: estimate_backend_seconds(host, strat, model, S, K_pt, n),
            "jax": estimate_backend_seconds("jax", strat, model, S, K_pt, n,
                                            accelerator=accel)}
+    devices = _device_count()
+    if (devices > 1 and kind in ("msync", "async", "ringmaster")
+            and info["work"] / devices >= JAX_MIN_WORK):
+        # sharded sweep: only with real devices to spread over AND
+        # enough per-device work to clear the same probe floor
+        est["jax_sharded"] = estimate_backend_seconds(
+            "jax_sharded", strat, model, S, K_pt, n, accelerator=accel,
+            devices=devices)
+        info["devices"] = devices
     info["est_seconds"] = {k: round(v, 6) for k, v in est.items()}
     info["accelerator"] = accel
     chosen = min(est, key=est.get)
@@ -489,7 +604,8 @@ def simulate_batch(strategy: StrategySpec,
         else [int(s) for s in seeds]
     if not seed_list:
         raise ValueError("need at least one seed")
-    if backend not in ("auto", "fastest", "serial", "vectorized", "jax"):
+    if backend not in ("auto", "fastest", "serial", "vectorized", "jax",
+                       "jax_sharded"):
         raise ValueError(f"unknown backend {backend!r}")
     if rng_scheme not in ("counter", "stream"):
         raise ValueError(f"unknown rng_scheme {rng_scheme!r}; "
@@ -501,6 +617,7 @@ def simulate_batch(strategy: StrategySpec,
     used_backends = []
     used_schemes = []
     used_routing: List[Dict[str, Any]] = []
+    sharded_points = []        # (grid index, SweepPoint) → one fused sweep
     for pt in points:
         sim_kw = {k: pt[k] for k in pt if k in SIM_GRID_KEYS}
         strat_kw = {**base_kw, **{k: v for k, v in pt.items()
@@ -552,6 +669,17 @@ def simulate_batch(strategy: StrategySpec,
                                      gamma=gamma_pt, seeds=seed_list,
                                      record_every=re_pt,
                                      use_pallas=use_pallas, x64=x64)
+        elif chosen == "jax_sharded":
+            if tol_pt is not None:
+                raise NotImplementedError(
+                    "tol_grad_sq early exit is not supported by the jax "
+                    "backends (fixed-length scan); use backend='serial'")
+            from ..launch.sweep import SweepPoint
+            sharded_points.append(
+                (len(traces), SweepPoint(index=len(traces), strategy=strat,
+                                         K=K_pt, gamma=gamma_pt,
+                                         record_every=re_pt)))
+            row = None             # filled by the fused sweep below
         else:
             row = [simulate(factory(**strat_kw), model, K_pt,
                             problem=problem, gamma=gamma_pt, seed=s,
@@ -559,9 +687,22 @@ def simulate_batch(strategy: StrategySpec,
                    for s in seed_list]
         traces.append(row)
         used_backends.append(chosen)
-        used_schemes.append({"serial": "stream",
-                             "jax": "jax.random"}.get(chosen, rng_scheme))
+        used_schemes.append({"serial": "stream", "jax": "jax.random",
+                             "jax_sharded": "jax.random"
+                             }.get(chosen, rng_scheme))
         used_routing.append(route_info)
+
+    if sharded_points:
+        # ONE fused, shape-bucketed, shard_mapped launch for every grid
+        # point routed to the sharded sweep backend
+        from ..launch.sweep import run_sharded_sweep
+        results = run_sharded_sweep([sp for _, sp in sharded_points],
+                                    model, problem, seed_list,
+                                    use_pallas=use_pallas, x64=x64)
+        for g, _ in sharded_points:
+            row, shard_rec = results[g]
+            traces[g] = row
+            used_routing[g] = {**used_routing[g], "shard": shard_rec}
 
     # auto can pick different backends per grid point; report faithfully
     backend_label = used_backends[0] if len(set(used_backends)) == 1 \

@@ -239,6 +239,43 @@ def _timing_round(ft, ver, comp, k, cand, m, use_pallas):
     return ft, ver, comp, T, acc
 
 
+def _timing_round_rowwise(ft, ver, comp, k, cand, m_vec):
+    """:func:`_timing_round` with a TRACED per-row ``m`` — the sharded
+    sweep backend fuses grid points with different ``m`` into one
+    compiled program, so ``m`` arrives as a ``(rows,)`` int32 tensor.
+
+    Bitwise parity with the static-``m`` round: the row-wise selection
+    returns the same element value as :func:`mth_smallest`, and the
+    tie fast path is output-equivalent by construction — when every
+    row's ``<= T`` count equals its ``m``, the quota acceptance accepts
+    exactly the ``leq`` mask, so whichever branch the (per-shard local)
+    ``lax.cond`` takes, the accept mask is identical.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    from ..kernels.order_stats import mth_smallest_rowwise
+
+    stale = ver < k
+    T = mth_smallest_rowwise(cand, m_vec)
+    leq = cand <= T[:, None]
+
+    def exact_acc(_):
+        c_lt = (cand < T[:, None]).sum(axis=1)
+        tie = cand == T[:, None]
+        tie_rank = jnp.cumsum(tie, axis=1) - 1
+        return (cand < T[:, None]) | (tie
+                                      & (tie_rank < (m_vec - c_lt)[:, None]))
+
+    acc = lax.cond(jnp.all(leq.sum(axis=1) == m_vec),
+                   lambda _: leq, exact_acc, operand=None)
+    popped = stale & (ft < T[:, None])
+    comp = comp + m_vec + popped.sum(axis=1, dtype=jnp.int32)
+    ft = jnp.where(popped, cand, ft)
+    ver = jnp.where(popped, k, ver)
+    return ft, ver, comp, T, acc
+
+
 def _fixed_timing_run(taus, S: int, m: int, K: int, use_pallas: bool):
     """Timing-only m-sync under FixedTimes: module-level jit, cached
     across calls (the benchmark-smoke hot path — no RNG at all)."""
@@ -421,6 +458,135 @@ def _general_run(model, problem, m, n, S, K, gamma, use_pallas, seeds):
         return comp, x, T, val, gn
 
     return jax.block_until_ready(run(keys0))
+
+
+class _ById:
+    """Identity-keyed hashable wrapper: models/problems (unhashable
+    dataclasses, closures over arrays) key the sweep program cache by
+    object identity; the strong reference pins the id for the cache
+    entry's lifetime."""
+
+    __slots__ = ("obj",)
+
+    def __init__(self, obj):
+        self.obj = obj
+
+    def __hash__(self):
+        return id(self.obj)
+
+    def __eq__(self, other):
+        return isinstance(other, _ById) and other.obj is self.obj
+
+
+#: AOT-compiled sharded sweep programs, FIFO like _CHAIN_PROGS/_SCAN_PROGS:
+#: key = (family, static shape/params, mesh devices, model/problem ids).
+_SWEEP_PROGS: dict = {}
+
+
+def _mesh_cache_key(mesh):
+    return tuple(d.id for d in mesh.devices.flat)
+
+
+def sharded_msync_run(model, problem, n, S, K, seeds, m_list, gamma_list,
+                      use_pallas, mesh, meta=None):
+    """Fused + sharded m-sync family run over ``S = len(seeds)`` work
+    units (one unit = one (grid point, seed) pair; the caller has
+    already flattened and padded to a multiple of the mesh size).
+
+    One compiled program covers every unit: timing-only units fuse
+    heterogeneous ``m`` through the traced row-wise selection
+    (:func:`_timing_round_rowwise`), math units fuse heterogeneous
+    ``gamma`` as a traced per-unit stepsize vector (``m`` stays static
+    for math — the oracle batch splits ``m`` ways). Per-unit draw
+    streams are byte-for-byte the :func:`_general_run` streams (the
+    same 4-way per-round key split of ``PRNGKey(seed)``), so each
+    unit's outputs are bitwise identical to the unsharded
+    ``backend="jax"`` run of its grid point. The program is
+    ``shard_map``ped over the mesh's 1-D ``data`` axis and AOT-compiled
+    (``lower().compile()``) so compile vs execute wall time and cache
+    hits are observable; ``meta`` (if given) receives
+    ``compile_s``/``exec_s``/``cache_hit``.
+
+    ``use_pallas`` is accepted for signature symmetry but the row-wise
+    counting selection always runs the fused elementwise path — the
+    selected value is the same element either way.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    math = problem is not None
+    keys0, x_init = _keys_and_x(problem, S, n, seeds)
+    m_static = int(m_list[0]) if math else None
+    if math:
+        grad_mean = _grad_mean_fn(problem, m_static)
+    dt = _engine_dtype()
+    m_in = jnp.asarray(m_list, jnp.int32)
+    g_in = jnp.asarray(gamma_list, dt)
+
+    def unit_prog(keys, m_vec, gamma_vec, x0):
+        U = keys.shape[0]                     # local block under shard_map
+        finish_all = _finish_factory(model, U, n)
+
+        def step(carry, k):
+            ft, ver, comp, x, kk = carry
+            sub = jax.vmap(lambda q: jax.random.split(q, 4))(kk)
+            kk = sub[:, 0]
+            stale = ver < k
+            cand = jnp.where(stale, finish_all(sub[:, 1], ft), ft)
+            ft, ver, comp, T, acc = _timing_round_rowwise(ft, ver, comp, k,
+                                                          cand, m_vec)
+            ft = jnp.where(acc, finish_all(sub[:, 2],
+                                           jnp.broadcast_to(T[:, None],
+                                                            (U, n))), ft)
+            ver = jnp.where(acc, k + 1, ver)
+            if math:
+                x = x - gamma_vec[:, None] * grad_mean(x, sub[:, 3])
+                val = jax.vmap(problem.f)(x)
+                gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
+            else:
+                val = gn = jnp.zeros(U)
+            return (ft, ver, comp, x, kk), (T, val, gn)
+
+        sub = jax.vmap(lambda q: jax.random.split(q, 2))(keys)
+        ft0 = finish_all(sub[:, 1], jnp.zeros((U, n)))
+        init = (ft0, jnp.zeros((U, n), jnp.int32), jnp.zeros(U, jnp.int32),
+                x0, sub[:, 0])
+        (_, _, comp, x, _), (T, val, gn) = lax.scan(
+            step, init, jnp.arange(K, dtype=jnp.int32))
+        return comp, x, T, val, gn
+
+    P = PartitionSpec
+    # check_rep=False: no collectives anywhere in the program, and jax
+    # 0.4.x has no replication rule for the selection's while_loop
+    wrapped = shard_map(
+        unit_prog, mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data"), P("data")),
+        out_specs=(P("data"), P("data"), P(None, "data"), P(None, "data"),
+                   P(None, "data")),
+        check_rep=False)
+
+    key = ("msync", math, m_static, n, S, K,
+           bool(jax.config.jax_enable_x64), _mesh_cache_key(mesh),
+           _ById(model), _ById(problem))
+    hit = key in _SWEEP_PROGS
+    args = (keys0, m_in, g_in, x_init)
+    compile_s = 0.0
+    if not hit:
+        t0 = time.perf_counter()
+        compiled = jax.jit(wrapped).lower(*args).compile()
+        compile_s = time.perf_counter() - t0
+        _prog_cache_put(_SWEEP_PROGS, key, compiled)
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(_SWEEP_PROGS[key](*args))
+    if meta is not None:
+        meta.update(cache_hit=hit, compile_s=round(compile_s, 4),
+                    exec_s=round(time.perf_counter() - t0, 4))
+    return out
 
 
 def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
@@ -786,7 +952,34 @@ def arrival_scan_work(model, n: int, K: int, ringmaster: bool = False,
     return n * L, min(K + budget, n * L)
 
 
-def _chain_builder(model, S: int, n: int, L: int):
+def _shard_wrap(fn, mesh, in_specs, out_specs):
+    """``shard_map`` + jit a per-row program over the 1-D ``data`` axis
+    (None mesh: plain jit — the unsharded path is the same program)."""
+    import jax
+
+    if mesh is None:
+        return jax.jit(fn)
+    from jax.experimental.shard_map import shard_map
+
+    # check_rep=False: these programs have no collectives, and jax 0.4.x
+    # lacks replication rules for some of their primitives (while_loop)
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False))
+
+
+def _mesh_rows(S: int, mesh) -> int:
+    """Per-device row block for a ``(S, ...)`` batch on a 1-D mesh."""
+    if mesh is None:
+        return S
+    D = mesh.devices.size
+    if S % D:
+        raise ValueError(
+            f"sharded arrival scan needs rows % devices == 0 (got "
+            f"S={S}, D={D}); the sweep layer pads units before calling")
+    return S // D
+
+
+def _chain_builder(model, S: int, n: int, L: int, mesh=None):
     """``chains(chain_keys) -> (S, n, L)`` absolute arrival times of each
     worker's renewal chain from ``t = 0`` (entry ``j`` = the worker's
     ``j+1``-th arrival). Sampled models draw prefix-stable
@@ -794,67 +987,84 @@ def _chain_builder(model, S: int, n: int, L: int):
     cumsum; FixedTimes is the closed form ``(j+1) * tau``; universal
     models iterate the deterministic ``finish_times_jax`` inversion.
     Timing-relevant programs are jit-cached across calls (keyed by the
-    model's sampler identity / the model itself, the static shape and
-    the x64 mode), so same-shape sweeps compile once."""
+    model's sampler identity / the model itself, the static shape, the
+    x64 mode and the mesh), so same-shape sweeps compile once. With a
+    ``mesh`` the program is ``shard_map``ped over the seed/unit axis —
+    every chain row is a pure function of its own key, so the sharded
+    rows are bitwise the unsharded rows."""
     import jax
     import jax.numpy as jnp
     from jax import lax
+    from jax.sharding import PartitionSpec as P
 
     from .time_models import jax_chain_draws
 
     x64 = bool(jax.config.jax_enable_x64)
+    rows = _mesh_rows(S, mesh)
+    mk = None if mesh is None else _mesh_cache_key(mesh)
     if isinstance(model, FixedTimes):
-        key = ("fixed", S, n, L, x64)
+        key = ("fixed", S, n, L, x64, mk)
         if key not in _CHAIN_PROGS:
             def fixed_chain(taus, chain_keys):      # keys unused: no RNG
                 steps = taus[None, :, None] * jnp.arange(1, L + 1)
-                return jnp.broadcast_to(steps, (S, n, L))
+                return jnp.broadcast_to(steps, (rows, n, L))
 
-            _prog_cache_put(_CHAIN_PROGS, key, jax.jit(fixed_chain))
+            _prog_cache_put(_CHAIN_PROGS, key,
+                            _shard_wrap(fixed_chain, mesh,
+                                        (P(), P("data")), P("data")))
         prog = _CHAIN_PROGS[key]
         taus = model.taus
         return lambda chain_keys: prog(jnp.asarray(taus), chain_keys)
     if isinstance(model, UniversalModel):
-        key = (model, S, n, L, x64)                 # identity-hashed
+        key = (model, S, n, L, x64, mk)             # identity-hashed
         if key not in _CHAIN_PROGS:
             def universal_chain(chain_keys):        # keys unused: no RNG
                 def body(c, _):
                     nxt = model.finish_times_jax(c)
                     return nxt, nxt
 
-                _, out = lax.scan(body, jnp.zeros((S, n)), None, length=L)
-                return jnp.moveaxis(out, 0, -1)     # (S, n, L)
+                _, out = lax.scan(body, jnp.zeros((rows, n)), None,
+                                  length=L)
+                return jnp.moveaxis(out, 0, -1)     # (rows, n, L)
 
-            _prog_cache_put(_CHAIN_PROGS, key, jax.jit(universal_chain))
+            _prog_cache_put(_CHAIN_PROGS, key,
+                            _shard_wrap(universal_chain, mesh,
+                                        (P("data"),), P("data")))
         return _CHAIN_PROGS[key]
     sampler = model.jax_sampler
-    key = (sampler, S, n, L, x64)
+    key = (sampler, S, n, L, x64, mk)
     if key not in _CHAIN_PROGS:
         def sampled_chain(chain_keys):
-            d = jax_chain_draws(chain_keys, L, sampler)     # (S, L, n)
+            d = jax_chain_draws(chain_keys, L, sampler)     # (rows, L, n)
             return jnp.cumsum(jnp.moveaxis(d, 1, 2), axis=-1)
 
-        _prog_cache_put(_CHAIN_PROGS, key, jax.jit(sampled_chain))
+        _prog_cache_put(_CHAIN_PROGS, key,
+                        _shard_wrap(sampled_chain, mesh,
+                                    (P("data"),), P("data")))
     return _CHAIN_PROGS[key]
 
 
-def _ring_timing_prog(S: int, n: int, K: int, max_delay: int):
+def _ring_timing_prog(S: int, n: int, K: int, max_delay: int, mesh=None):
     """Cached timing-only Ringmaster arrival scan: O(1) per-arrival work
     (version gather, delay test, version scatter) over the pre-merged
     window. Returns ``(k_final, computed, accept)``; wall-clock times
-    stay host-side (the merged order already carries them)."""
+    stay host-side (the merged order already carries them). With a
+    ``mesh`` the scan is ``shard_map``ped over the seed/unit columns —
+    the recursion is column-independent, so sharding is bitwise-free."""
     import jax
     import jax.numpy as jnp
     from jax import lax
+    from jax.sharding import PartitionSpec as P
 
-    key = (S, n, K, max_delay, bool(jax.config.jax_enable_x64))
+    key = (S, n, K, max_delay, bool(jax.config.jax_enable_x64),
+           None if mesh is None else _mesh_cache_key(mesh))
     if key in _SCAN_PROGS:
         return _SCAN_PROGS[key]
 
-    rows = jnp.arange(S)
+    R = _mesh_rows(S, mesh)
+    rows = jnp.arange(R)
 
-    @jax.jit
-    def run(w_seq):                                 # (A, S) worker ids
+    def run(w_seq):                                 # (A, R) worker ids
         def body(carry, w):
             k, ver, comp = carry
             vw = ver[rows, w]
@@ -865,31 +1075,36 @@ def _ring_timing_prog(S: int, n: int, K: int, max_delay: int):
             comp = comp + active
             return (k, ver, comp), acc
 
-        init = (jnp.zeros(S, jnp.int32), jnp.zeros((S, n), jnp.int32),
-                jnp.zeros(S, jnp.int32))
+        init = (jnp.zeros(R, jnp.int32), jnp.zeros((R, n), jnp.int32),
+                jnp.zeros(R, jnp.int32))
         (kf, _, comp), acc = lax.scan(body, init, w_seq)
-        return kf, comp, acc                        # acc: (A, S)
+        return kf, comp, acc                        # acc: (A, R)
 
-    return _prog_cache_put(_SCAN_PROGS, key, run)
+    return _prog_cache_put(
+        _SCAN_PROGS, key,
+        _shard_wrap(run, mesh, (P(None, "data"),),
+                    (P("data"), P("data"), P(None, "data"))))
 
 
 def _arrival_math_prog(problem, gamma, delay_adaptive, S, n, K, max_delay,
-                       x_init, xs_init):
+                       mesh=None):
     """Math-path arrival scan (Async and Ringmaster): per arrival, one
     oracle draw at the popped worker's start-iterate snapshot, a masked
     step, and version/snapshot scatters. Gradient keys are
     ``fold_in(seed key, global arrival index)`` — prefix-stable, so
     chain-doubling retries leave already-certified seeds bitwise
     unchanged. Closes over the oracle: compiles per call, like
-    :func:`_general_run`."""
+    :func:`_general_run`. With a ``mesh`` the seed/unit axis is
+    ``shard_map``ped (every column's recursion is independent)."""
     import jax
     import jax.numpy as jnp
     from jax import lax
+    from jax.sharding import PartitionSpec as P
 
-    rows = jnp.arange(S)
+    R = _mesh_rows(S, mesh)
+    rows = jnp.arange(R)
 
-    @jax.jit
-    def run(w_seq, gkey_root):                      # (A, S), (S, 2)
+    def run(w_seq, gkey_root, x_init, xs_init):     # (A, R), (R, 2), ...
         def body(carry, inp):
             k, ver, comp, x, xs = carry
             w, a = inp
@@ -899,7 +1114,7 @@ def _arrival_math_prog(problem, gamma, delay_adaptive, S, n, K, max_delay,
             acc = active & ((k - vw) <= max_delay)
             g = jax.vmap(problem.stoch_grad)(xs[rows, w], gk)
             mult = (1.0 / (1.0 + (k - vw).astype(g.dtype) / n)
-                    if delay_adaptive else jnp.ones(S, g.dtype))
+                    if delay_adaptive else jnp.ones(R, g.dtype))
             x = jnp.where(acc[:, None], x - gamma * mult[:, None] * g, x)
             val = jax.vmap(problem.f)(x)
             gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
@@ -911,17 +1126,22 @@ def _arrival_math_prog(problem, gamma, delay_adaptive, S, n, K, max_delay,
             return (k, ver, comp, x, xs), (acc, val, gn)
 
         A = w_seq.shape[0]
-        init = (jnp.zeros(S, jnp.int32), jnp.zeros((S, n), jnp.int32),
-                jnp.zeros(S, jnp.int32), x_init, xs_init)
+        init = (jnp.zeros(R, jnp.int32), jnp.zeros((R, n), jnp.int32),
+                jnp.zeros(R, jnp.int32), x_init, xs_init)
         (kf, _, comp, x, _), (acc, val, gn) = lax.scan(
             body, init, (w_seq, jnp.arange(A, dtype=jnp.int32)))
         return kf, comp, x, acc, val, gn
 
-    return run
+    return _shard_wrap(
+        run, mesh,
+        (P(None, "data"), P("data"), P("data"), P("data")),
+        (P("data"), P("data"), P("data"), P(None, "data"),
+         P(None, "data"), P(None, "data")))
 
 
 def _chain_scan_run(model, problem, ringmaster, max_delay, delay_adaptive,
-                    n, S, K, gamma, seeds, chain_len=None):
+                    n, S, K, gamma, seeds, chain_len=None, mesh=None,
+                    meta=None):
     """Async/Ringmaster as the renewal-chain arrival scan (module doc):
     a popped worker restarts immediately whether its gradient is used or
     discarded, so every worker's arrival times form a renewal chain that
@@ -945,7 +1165,18 @@ def _chain_scan_run(model, problem, ringmaster, max_delay, delay_adaptive,
     chain entry lands at or before the seed's final step time could have
     had unmodeled arrivals, so the run retries with doubled chains
     (prefix-stable draws keep certified seeds bitwise unchanged), then
-    raises rather than silently dropping arrivals."""
+    raises rather than silently dropping arrivals.
+
+    ``mesh`` shards the chain build and the arrival scan over the
+    seed/unit rows (``shard_map`` on the 1-D ``data`` axis; rows must be
+    a multiple of the mesh size — the sweep layer pads). The merged pool
+    sort and the per-seed compaction stay host-side exactly as in the
+    unsharded path, and every device-side row is a pure function of its
+    own key, so sharded results are bitwise the unsharded results.
+    ``meta`` (if given) collects chain/scan wall times and program-cache
+    hits for the routing record."""
+    import time
+
     import jax
     import jax.numpy as jnp
 
@@ -970,7 +1201,11 @@ def _chain_scan_run(model, problem, ringmaster, max_delay, delay_adaptive,
         if A < K:              # pool cannot even contain K arrivals
             L *= 2
             continue
-        chains = _chain_builder(model, S, n, L)(chain_root)
+        builder = _chain_builder(model, S, n, L, mesh=mesh)
+        t0 = time.perf_counter()
+        chains = jax.block_until_ready(builder(chain_root))
+        if meta is not None:
+            meta["chain_s"] = round(time.perf_counter() - t0, 4)
         pool = chains.reshape(S, n * L)
         t_seq, idx = smallest_k(pool, A)            # (S, A) ascending
         w_seq = (idx // L).astype(jnp.int32).T      # (A, S)
@@ -985,18 +1220,27 @@ def _chain_scan_run(model, problem, ringmaster, max_delay, delay_adaptive,
             x = val = gn = None
             T_end = t_host[:, K - 1]
         else:
+            t0 = time.perf_counter()
             if math:
                 prog = _arrival_math_prog(problem, gamma, delay_adaptive,
-                                          S, n, K, max_delay, x_init,
-                                          xs_init)
+                                          S, n, K, max_delay, mesh=mesh)
                 kfin, comp, x, acc, val, gn = jax.block_until_ready(
-                    prog(w_seq, gkey_root))
+                    prog(w_seq, gkey_root, x_init, xs_init))
                 val = np.asarray(val)               # (A, S)
                 gn = np.asarray(gn)
             else:
+                scan_key_known = (
+                    S, n, K, max_delay, bool(jax.config.jax_enable_x64),
+                    None if mesh is None else _mesh_cache_key(mesh)
+                ) in _SCAN_PROGS
+                if meta is not None:
+                    meta["scan_cache_hit"] = scan_key_known
                 kfin, comp, acc = jax.block_until_ready(
-                    _ring_timing_prog(S, n, K, max_delay)(w_seq))
+                    _ring_timing_prog(S, n, K, max_delay,
+                                      mesh=mesh)(w_seq))
                 x = val = gn = None
+            if meta is not None:
+                meta["scan_s"] = round(time.perf_counter() - t0, 4)
             kfin = np.asarray(kfin)
             comp = np.asarray(comp)
             acc = np.asarray(acc)                   # (A, S) accept mask
@@ -1286,6 +1530,19 @@ def simulate_batch_jax(strategy: AggregationStrategy,
             raise ValueError(f"unknown async_engine {async_engine!r}; "
                              "use 'scan' or 'while'")
 
+    return assemble_traces(comp, x, T, val, gn, used, S, K, record_every,
+                           problem)
+
+
+def assemble_traces(comp, x, T, val, gn, used, S, K, record_every,
+                    problem) -> List[Trace]:
+    """Package raw engine outputs (``comp (S,)``, ``T/val/gn (K, S)``,
+    ``x (S, d)``) into the per-seed :class:`Trace` list — shared by
+    :func:`simulate_batch_jax` and the sharded sweep backend, so both
+    paths produce structurally identical traces from identical arrays."""
+    import jax.numpy as jnp
+
+    math = problem is not None
     comp = np.asarray(comp)
     T = np.asarray(T)                             # (K, S)
     used = np.broadcast_to(np.asarray(used), (S,))  # malenia: per seed

@@ -104,8 +104,16 @@ def run_experiment(strategy,
     JSON artifact's ``meta.backend`` (plus per-row
     ``backend``/``rng_scheme``) and the full per-grid-point routing
     decision — estimates, accelerator flag, reason — lands in
-    ``meta.routing``. ``x64=True`` runs jax grid points in float64 for
-    per-run tie parity on tie-heavy instances (partial participation).
+    ``meta.routing``. On multi-device hosts the router may pick
+    ``backend="jax_sharded"`` (the :mod:`repro.launch.sweep` fused
+    sweep); its per-bucket shard/compile/cache meta appears under each
+    routing entry's ``shard`` key. ``x64=True`` runs jax grid points in
+    float64 for per-run tie parity on tie-heavy instances (partial
+    participation).
+
+    ``json_path`` is written only on the coordinator process
+    (:func:`repro.launch.sweep.is_coordinator`) so a multi-host launch
+    produces one artifact, not one per host.
     """
     if isinstance(scenario, str):
         model = make_scenario(scenario, n, **(scenario_kwargs or {}))
@@ -135,7 +143,9 @@ def run_experiment(strategy,
     result = ExperimentResult(name=name or f"{batch.strategy}@{scen_name}",
                               meta=meta, batch=batch, rows=rows)
     if json_path:
-        result.to_json(json_path)
+        from repro.launch.sweep import is_coordinator
+        if is_coordinator():
+            result.to_json(json_path)
     return result
 
 

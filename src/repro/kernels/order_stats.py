@@ -41,7 +41,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 __all__ = ["mth_smallest", "mth_smallest_iterative", "mth_smallest_counting",
-           "mth_smallest_pallas", "smallest_k"]
+           "mth_smallest_rowwise", "mth_smallest_pallas", "smallest_k"]
 
 # above this m the O(m*n) extraction loop loses to top_k even on CPU
 _MAX_ITERATIVE_M = 64
@@ -144,6 +144,32 @@ def mth_smallest_counting(x: jnp.ndarray, m: int) -> jnp.ndarray:
     val, ok = _counting_select(x, m)
     return lax.cond(ok, lambda: val,
                     lambda: -lax.top_k(-x, m)[0][..., m - 1])
+
+
+def mth_smallest_rowwise(x: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """m-th smallest along the last axis with a TRACED per-row ``m``.
+
+    The sharded sweep backend fuses grid points with different ``m``
+    into one compiled program, so ``m`` arrives as an ``(rows,)`` int32
+    tensor instead of a static Python int. :func:`_counting_select`
+    only consumes ``m`` through rank comparisons, so the same
+    elementwise bisection works unchanged; the unverified-row fallback
+    swaps ``lax.top_k`` (static ``k`` only) for a full-sort gather,
+    paid only when the ``lax.cond`` is actually taken. Tie semantics
+    are identical to :func:`mth_smallest`: the statistic counts
+    multiplicity, so the snapped value equals
+    ``jnp.sort(x)[..., m-1]`` bitwise (both select an element of
+    ``x``).
+    """
+    m = jnp.asarray(m, jnp.int32)
+    val, ok = _counting_select(x, m)
+
+    def sort_select():
+        order = jnp.sort(x, axis=-1)
+        return jnp.take_along_axis(order, (m - 1)[..., None],
+                                   axis=-1)[..., 0]
+
+    return lax.cond(ok, lambda: val, sort_select)
 
 
 def smallest_k(x, k: int, *, prefer_host: bool = None):
