@@ -16,7 +16,6 @@ to end, so these are exact machine-independent simulator outputs):
 in ``benchmarks/baselines/`` in CI, gating behavior drift in the
 per-figure run_experiment path beyond the simbatch shapes (ISSUE 4)."""
 
-import json
 import os
 
 from repro.core import optimal_m
@@ -55,9 +54,9 @@ def run(fast: bool = True, seeds: int = 8):
                      f"{r['seeds']} seeds "
                      f"discard={r['discard_fraction_mean']:.2f} "
                      f"backend={r['backend']}"))
-    with open(BENCH_JSON, "w") as fh:
-        json.dump({"meta": {"fast": fast, "seeds": seeds},
-                   "s_per_useful_grad_mean": metrics}, fh, indent=2)
+    from repro.exp.runner import atomic_write_json
+    atomic_write_json(BENCH_JSON, {"meta": {"fast": fast, "seeds": seeds},
+                                   "s_per_useful_grad_mean": metrics})
     return rows
 
 

@@ -25,6 +25,9 @@ Modules:
   sweep_scaling      backend="jax_sharded" vs unsharded sweep speedup at
                      forced device counts (subprocess per XLA_FLAGS
                      setting); writes the BENCH_sweep.json perf baseline
+  fault_frontier     strategy race across the §3c fault regimes
+                     (crash/slowdown/bursts/spikes/mix) vs fault-free;
+                     writes BENCH_fault_frontier.json
   order_stats_speed  Pallas top-m kernel vs lax.top_k vs iterative
                      extraction at n in {1e3, 1e5}
 
@@ -37,15 +40,14 @@ from __future__ import annotations
 
 import argparse
 import inspect
-import json
 import sys
 import time
 
-from . import (ablation_m_sweep, fig5_quadratic, fig8_grid, malenia_het,
-               order_stats_speed, sec6_async_needed, sec6_heterogeneous,
-               sec53_gap, secj_R_estimation, simbatch_speed, sweep_scaling,
-               table_mstar, thm23_logfactor, thm32_random,
-               thm55_participation)
+from . import (ablation_m_sweep, fault_frontier, fig5_quadratic, fig8_grid,
+               malenia_het, order_stats_speed, sec6_async_needed,
+               sec6_heterogeneous, sec53_gap, secj_R_estimation,
+               simbatch_speed, sweep_scaling, table_mstar, thm23_logfactor,
+               thm32_random, thm55_participation)
 
 MODULES = [
     ("fig5_quadratic", fig5_quadratic),
@@ -60,6 +62,7 @@ MODULES = [
     ("ablation_m_sweep", ablation_m_sweep),
     ("thm55_participation", thm55_participation),
     ("sec6_heterogeneous", sec6_heterogeneous),
+    ("fault_frontier", fault_frontier),
     ("simbatch_speed", simbatch_speed),
     ("order_stats_speed", order_stats_speed),
     ("sweep_scaling", sweep_scaling),
@@ -104,13 +107,12 @@ def main() -> None:
             all_rows.append({"name": f"_error/{name}",
                              "value": type(e).__name__, "derived": str(e)})
     if args.json:
-        from repro.exp.runner import sanitize_json
-        with open(args.json, "w") as fh:
-            json.dump(sanitize_json(
-                {"meta": {"slow": args.slow, "seeds": args.seeds,
-                          "only": args.only, "failures": failures},
-                 "timings_s": timings,
-                 "rows": all_rows}), fh, indent=2, default=str)
+        from repro.exp.runner import atomic_write_json, sanitize_json
+        atomic_write_json(args.json, sanitize_json(
+            {"meta": {"slow": args.slow, "seeds": args.seeds,
+                      "only": args.only, "failures": failures},
+             "timings_s": timings,
+             "rows": all_rows}), default=str)
     if failures:
         sys.exit(1)
 

@@ -47,7 +47,6 @@ serial/jit ratios (e.g. a fast dev box vs a throttled CI runner).
 
 import argparse
 import dataclasses
-import json
 import os
 import time
 
@@ -217,8 +216,8 @@ def run(fast: bool = True):
         f"backend='fastest' routed async to {routed}, but {alt} is "
         f"{1.0 / routed_vs_alt:.2f}x faster — cost model miscalibrated")
 
-    with open(BENCH_JSON, "w") as fh:
-        json.dump({
+    from repro.exp.runner import atomic_write_json
+    atomic_write_json(BENCH_JSON, {
             "meta": {"n": n, "S": S, "K": K, "m": m, "fast": fast,
                      "K_async": K_async, "async_engine": "scan",
                      "async_routed": routed},
@@ -237,7 +236,7 @@ def run(fast: bool = True):
                 "exponential_msync": exp_total_mean,
                 "exponential_async": async_total_mean,
             },
-        }, fh, indent=2)
+        })
     return rows
 
 
@@ -328,11 +327,11 @@ def calibrate(out: str = CALIB_JSON_DEFAULT):
         "jit_compile": jit_compile, "pool_elem": pool_elem,
         "scan_step": scan_step,
     }
-    with open(out, "w") as fh:
-        json.dump({"meta": {"n": n, "S": S, "K": K, "m": m,
-                            "K_async": K_async,
-                            "source": "simbatch_speed --calibrate"},
-                   "constants": constants}, fh, indent=2)
+    from repro.exp.runner import atomic_write_json
+    atomic_write_json(out, {"meta": {"n": n, "S": S, "K": K, "m": m,
+                                     "K_async": K_async,
+                                     "source": "simbatch_speed --calibrate"},
+                            "constants": constants})
     # self-check: the loader must pick up every measured key
     merged = load_cost_constants(out, apply=False)
     for key, val in constants.items():

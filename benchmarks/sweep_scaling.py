@@ -126,23 +126,46 @@ def _worker(devices: int) -> dict:
     }
 
 
+#: per-worker-launch wall-clock ceiling; a hung XLA compile would
+#: otherwise stall the whole benchmark lane forever
+SPAWN_TIMEOUT_S = 600
+
+
 def _spawn(devices: int) -> dict:
-    """Run ``--worker devices`` in a subprocess with the XLA flag set."""
+    """Run ``--worker devices`` in a subprocess with the XLA flag set.
+
+    Each launch gets a :data:`SPAWN_TIMEOUT_S` deadline and one retry
+    (compile-cache warmup makes a second attempt much cheaper); the
+    final failure carries the worker's stdout/stderr tail as the
+    diagnostic.
+    """
     env = dict(os.environ)
     flag = f"--xla_force_host_platform_device_count={devices}"
     env["XLA_FLAGS"] = f"{env.get('XLA_FLAGS', '')} {flag}".strip()
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (_SRC, env.get("PYTHONPATH")) if p)
-    proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.sweep_scaling", "--worker",
-         str(devices)],
-        capture_output=True, text=True, env=env,
-        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    if proc.returncode != 0:
-        raise RuntimeError(
-            f"sweep_scaling worker d={devices} failed:\n{proc.stdout}\n"
-            f"{proc.stderr}")
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    last_err = None
+    for attempt in (1, 2):
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-m", "benchmarks.sweep_scaling",
+                 "--worker", str(devices)],
+                capture_output=True, text=True, env=env,
+                timeout=SPAWN_TIMEOUT_S,
+                cwd=os.path.dirname(os.path.dirname(
+                    os.path.abspath(__file__))))
+        except subprocess.TimeoutExpired as exc:
+            last_err = (f"timed out after {SPAWN_TIMEOUT_S}s "
+                        f"(attempt {attempt}):\n{exc.stdout or ''}\n"
+                        f"{exc.stderr or ''}")
+            continue
+        if proc.returncode != 0:
+            last_err = (f"exit {proc.returncode} (attempt {attempt}):\n"
+                        f"{proc.stdout}\n{proc.stderr}")
+            continue
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+    raise RuntimeError(
+        f"sweep_scaling worker d={devices} failed twice; last: {last_err}")
 
 
 def run(fast: bool = True):
@@ -183,16 +206,16 @@ def run(fast: bool = True):
         speedups[f"d{max(DEVICES)}"],
         f"acceptance: >= {MIN_SPEEDUP_D4}x, bitwise-identical traces"))
 
-    with open(BENCH_JSON, "w") as fh:
-        json.dump({
-            "meta": {"scenario": SCENARIO, "n": N, "S": S, "K": K,
-                     "m_grid": list(M_GRID), "devices": list(DEVICES)},
-            "speedup_vs_unsharded": speedups,
-            "total_time_mean": {
-                "exponential_msync_sweep": results[DEVICES[0]]
-                ["total_time_mean"],
-            },
-        }, fh, indent=2)
+    from repro.exp.runner import atomic_write_json
+    atomic_write_json(BENCH_JSON, {
+        "meta": {"scenario": SCENARIO, "n": N, "S": S, "K": K,
+                 "m_grid": list(M_GRID), "devices": list(DEVICES)},
+        "speedup_vs_unsharded": speedups,
+        "total_time_mean": {
+            "exponential_msync_sweep": results[DEVICES[0]]
+            ["total_time_mean"],
+        },
+    })
     return rows
 
 

@@ -8,7 +8,9 @@ table and rationale):
 * :mod:`repro.analysis.purity` — jit/scan purity of traced functions
   (JIT001–JIT005);
 * :mod:`repro.analysis.registry` — ``STRATEGIES`` / ``SCENARIOS`` /
-  time-model / DESIGN.md §3b coverage-matrix lockstep (REG001–REG005).
+  time-model / DESIGN.md §3b coverage-matrix lockstep (REG001–REG005);
+* :mod:`repro.analysis.robustness` — swallowed exceptions and
+  non-atomic artifact writes (ROB001–ROB002).
 
 Stdlib-``ast`` only: the analyzer parses, never imports, so it runs on
 a tree whose dependencies are absent (and CI runs it before pytest).
@@ -24,10 +26,12 @@ from .purity import run_purity_pass, traced_functions
 from .registry import (collect_registered, parse_design_tables,
                        run_registry_pass)
 from .rng import run_rng_pass
+from .robustness import run_robustness_pass
 
 __all__ = [
     "analyze", "main", "Finding", "RULES", "parse_pragmas",
     "filter_suppressed", "ModuleSource", "load_module",
     "run_rng_pass", "run_purity_pass", "traced_functions",
     "run_registry_pass", "collect_registered", "parse_design_tables",
+    "run_robustness_pass",
 ]

@@ -15,6 +15,9 @@ Pass scoping by path (mirrors ISSUE 6 / DESIGN "Enforced invariants"):
 * Jit/scan purity — every ``.py`` file scanned; the x64 dtype rule
   (JIT005) only on ``core/batch_jax.py``, the one module with an
   ``x64=True`` engine mode to protect.
+* Robustness — swallowed exceptions (ROB001) on engine/launch code
+  (``core/``, ``launch/``); non-atomic JSON artifact writes (ROB002) on
+  the artifact writers (``exp/``, ``benchmarks/``).
 * Registry cross-check — once per invocation against the repo-root
   ``strategies.py`` / ``scenarios.py`` / ``time_models.py`` / DESIGN.md
   quartet (skipped with ``--no-registry`` or when the quartet is absent,
@@ -34,12 +37,15 @@ from .passes import iter_py_files, load_module
 from .purity import run_purity_pass
 from .registry import run_registry_pass
 from .rng import run_rng_pass
+from .robustness import run_robustness_pass
 
 __all__ = ["analyze", "main"]
 
 _RNG_SCOPE = ("core/batch_jax.py", "core/time_models.py", "/kernels/")
 _JAX_ONLY = ("core/batch_jax.py", "/kernels/")
 _X64_STRICT = ("core/batch_jax.py",)
+_ROB_EXC_SCOPE = ("core/", "launch/")        # ROB001: engine/launch code
+_ROB_IO_SCOPE = ("exp/", "benchmarks/")      # ROB002: artifact writers
 
 
 def _in_scope(rel: str, patterns) -> bool:
@@ -71,6 +77,11 @@ def analyze(root: Path, paths: Optional[List[Path]] = None,
                 run_rng_pass(mod, jax_only=_in_scope(rel, _JAX_ONLY)))
         findings.extend(
             run_purity_pass(mod, x64_strict=_in_scope(rel, _X64_STRICT)))
+        rob_exc = _in_scope(rel, _ROB_EXC_SCOPE)
+        rob_io = _in_scope(rel, _ROB_IO_SCOPE)
+        if rob_exc or rob_io:
+            findings.extend(run_robustness_pass(
+                mod, exceptions=rob_exc, io=rob_io))
     if registry and (root / "DESIGN.md").exists():
         findings.extend(run_registry_pass(root))
     return sorted(findings)

@@ -50,6 +50,12 @@ RULES: Dict[str, str] = {
               "is not registered in SCENARIOS",
     "REG005": "SCENARIOS factory references a time-model factory that "
               "does not exist in repro.core.time_models",
+    "ROB001": "bare except / `except Exception: pass` in engine or "
+              "launch code silently swallows failures the degradation "
+              "ladder should record",
+    "ROB002": "non-atomic artifact write: json.dump into "
+              "open(path, 'w') (use repro.exp.runner.atomic_write_json "
+              "— tmp file + os.replace)",
 }
 
 _PRAGMA_RE = re.compile(

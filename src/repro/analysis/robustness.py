@@ -1,0 +1,156 @@
+"""Robustness pass: swallowed exceptions + non-atomic artifact writes.
+
+Two rules backing the DESIGN §3c degradation-ladder and crash-safety
+contracts:
+
+* **ROB001** — in engine/launch code (``core/``, ``launch/``), a bare
+  ``except:`` or an ``except Exception:`` whose body is only ``pass``
+  silently swallows failures the ladder is supposed to *record*. The
+  fix is to narrow the exception, handle it, or append a downgrade
+  record (see ``TraceBatch.routing``); an intentional swallow takes a
+  same-line ``# repcheck: ignore[ROB001]``. The ladder's own
+  ``except Exception:`` blocks are fine — they retry and record, so
+  their bodies are not ``pass``.
+* **ROB002** — in artifact-writing code (``exp/``, ``benchmarks/``), a
+  ``json.dump(obj, fh)`` into a handle opened with ``open(path, "w")``
+  is not crash-safe: a kill mid-write leaves a truncated JSON that
+  poisons resume/perf-gate readers. Use
+  :func:`repro.exp.runner.atomic_write_json` (tmp + ``os.replace``).
+  Functions that call ``os.replace`` themselves are exempt — that IS
+  the atomic pattern, so the helper's own body doesn't flag.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from .findings import Finding
+from .passes import ModuleSource, call_name
+
+__all__ = ["run_robustness_pass"]
+
+_WRITE_MODES = ("w", "wt", "w+", "wb")
+
+
+def _is_pass_only(body: List[ast.stmt]) -> bool:
+    return all(isinstance(s, ast.Pass) for s in body)
+
+
+def _exception_names(node: Optional[ast.expr]) -> List[str]:
+    """Names caught by an except clause (``Exception``, tuples, ...)."""
+    if node is None:
+        return []
+    if isinstance(node, ast.Tuple):
+        out: List[str] = []
+        for elt in node.elts:
+            out.extend(_exception_names(elt))
+        return out
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, ast.Attribute):
+        return [node.attr]
+    return []
+
+
+def _check_exceptions(mod: ModuleSource) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            out.append(Finding(
+                mod.rel, node.lineno, "ROB001",
+                "bare `except:` swallows everything (including "
+                "SystemExit/KeyboardInterrupt); catch a specific "
+                "exception or `Exception`, and record the failure "
+                "instead of hiding it"))
+        elif ("Exception" in _exception_names(node.type)
+              and _is_pass_only(node.body)):
+            out.append(Finding(
+                mod.rel, node.lineno, "ROB001",
+                "`except Exception: pass` silently swallows engine "
+                "failures; handle it, narrow it, or record a "
+                "downgrade (TraceBatch.routing) so the degradation "
+                "is observable"))
+    return out
+
+
+def _open_write_handles(with_node: ast.With, mod: ModuleSource
+                        ) -> List[str]:
+    """Names bound to ``open(path, "w"...)`` by this ``with``'s items."""
+    names: List[str] = []
+    for item in with_node.items:
+        call = item.context_expr
+        if not (isinstance(call, ast.Call)
+                and call_name(call, mod) in ("open", "io.open")):
+            continue
+        mode = None
+        if len(call.args) >= 2:
+            mode = call.args[1]
+        for kw in call.keywords:
+            if kw.arg == "mode":
+                mode = kw.value
+        if not (isinstance(mode, ast.Constant)
+                and isinstance(mode.value, str)
+                and mode.value in _WRITE_MODES):
+            continue
+        if isinstance(item.optional_vars, ast.Name):
+            names.append(item.optional_vars.id)
+    return names
+
+
+def _calls_os_replace(scope: ast.AST, mod: ModuleSource) -> bool:
+    return any(isinstance(n, ast.Call)
+               and call_name(n, mod) == "os.replace"
+               for n in ast.walk(scope))
+
+
+def _check_atomic_writes(mod: ModuleSource) -> List[Finding]:
+    # nearest enclosing function decides the os.replace exemption
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(mod.tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+
+    def enclosing_scope(node: ast.AST) -> ast.AST:
+        cur = parents.get(node)
+        while cur is not None and not isinstance(
+                cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            cur = parents.get(cur)
+        return cur if cur is not None else mod.tree
+
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.With):
+            continue
+        handles = _open_write_handles(node, mod)
+        if not handles:
+            continue
+        for inner in ast.walk(node):
+            if not (isinstance(inner, ast.Call)
+                    and call_name(inner, mod) == "json.dump"
+                    and len(inner.args) >= 2
+                    and isinstance(inner.args[1], ast.Name)
+                    and inner.args[1].id in handles):
+                continue
+            if _calls_os_replace(enclosing_scope(node), mod):
+                continue            # tmp + os.replace: the atomic pattern
+            out.append(Finding(
+                mod.rel, inner.lineno, "ROB002",
+                "json.dump into open(path, 'w') is not crash-safe (a "
+                "kill mid-write truncates the artifact); use "
+                "repro.exp.runner.atomic_write_json (tmp + os.replace)"))
+    return out
+
+
+def run_robustness_pass(mod: ModuleSource, *, exceptions: bool = True,
+                        io: bool = True) -> List[Finding]:
+    """ROB001/ROB002 over one module; scope gating (which rule applies
+    to which tree region) lives in :mod:`repro.analysis.cli`."""
+    findings: List[Finding] = []
+    if exceptions:
+        findings.extend(_check_exceptions(mod))
+    if io:
+        findings.extend(_check_atomic_writes(mod))
+    return mod.apply_pragmas(findings)

@@ -2,6 +2,9 @@
 
 Submodules:
   time_models   — Assumptions 2.2 / 3.1 / 5.1 / 5.4
+  faults        — FaultModel transformations (crash/restart, slowdown
+                  episodes, correlated bursts, heavy-tail spikes) over
+                  any fixed/sub-exponential time model
   strategies    — AggregationStrategy protocol, STRATEGIES registry, and
                   the single vectorized simulate() event engine
   batch         — simulate_batch()/TraceBatch: multi-seed × grid sweeps
@@ -20,6 +23,9 @@ from .algorithms import (Problem, Trace, msync_wallclock, run_async_sgd,
                          run_m_sync_sgd, run_malenia_sgd, run_rennala_sgd,
                          run_ringmaster_asgd, run_sync_sgd)
 from .batch import TraceBatch, simulate_batch
+from .faults import (CorrelatedBursts, CrashRestart, FaultModel,
+                     FaultyTimes, HeavyTailSpike, IdentityFault,
+                     TransientSlowdown, with_faults)
 from .complexity import (iteration_complexity, log_factor,
                          lower_bound_recursion, msync_upper_recursion,
                          t_malenia, t_optimal, t_rand_upper, t_sync,

@@ -62,6 +62,16 @@ Backends (``backend=``):
   :class:`TraceBatch`. This is what :func:`repro.exp.run_experiment`
   uses.
 
+Engine *execution* failures do not abort a sweep: every grid point runs
+under a degradation ladder (``jax_sharded`` → ``jax`` → ``vectorized`` →
+``serial``, retry-once per rung, skipping rungs that cannot run the
+point) and each downgrade is recorded in the point's
+``TraceBatch.routing`` entry (``downgrades``: engine, exception class,
+reason, fallback target) instead of raising — only the last rung's
+failure propagates. Contract errors on a forced backend (unsupported
+strategy/model, ``tol_grad_sq`` on jax) still raise up front. See
+DESIGN.md §3c.
+
 Grid semantics: ``grid`` maps parameter names to value sequences and the
 cartesian product is swept. Keys in :data:`SIM_GRID_KEYS` override the
 corresponding :func:`simulate` argument; every other key is passed to the
@@ -133,12 +143,15 @@ def load_cost_constants(path: Optional[str] = None,
 
     ``path`` defaults to the ``REPRO_COST_CONSTANTS`` environment
     variable. The JSON may be flat or ``{"constants": {...}}`` (the
-    ``--calibrate`` artifact shape); unknown keys and unreadable files
-    are ignored — routing must never fail because a calibration file
-    went stale.
+    ``--calibrate`` artifact shape); unknown keys are ignored and an
+    unreadable/invalid file falls back to the defaults with a single
+    ``UserWarning`` naming the file and the error — routing must never
+    *fail* because a calibration file went stale, but it must not
+    silently ignore one either.
     """
     import json
     import os
+    import warnings
 
     merged = dict(_DEFAULT_COST_CONSTANTS)
     if path is None:
@@ -151,8 +164,12 @@ def load_cost_constants(path: Optional[str] = None,
                 else {}
             merged.update({k: float(v) for k, v in consts.items()
                            if k in merged and float(v) > 0.0})
-        except (OSError, ValueError, TypeError):
-            pass                      # stale/bad calibration: defaults win
+        except (OSError, ValueError, TypeError) as exc:
+            # stale/bad calibration: defaults win, but say so once
+            warnings.warn(
+                f"REPRO_COST_CONSTANTS file {path!r} could not be used "
+                f"({type(exc).__name__}: {exc}); falling back to the "
+                f"default cost constants", UserWarning, stacklevel=2)
     if apply:
         COST_CONSTANTS.clear()
         COST_CONSTANTS.update(merged)
@@ -560,6 +577,67 @@ def _jax_eligible(strategy: AggregationStrategy, model, problem,
 
 
 # ---------------------------------------------------------------------------
+# the degradation ladder: engine execution failures downgrade, not raise
+# ---------------------------------------------------------------------------
+
+#: Downgrade order for engine *execution* failures (contract errors —
+#: unsupported strategy/model combos on a forced backend — still raise
+#: at validation time, before any engine runs). A failing engine is
+#: retried once, then the point falls to the next rung that can run it;
+#: every hop is recorded in the point's routing entry
+#: (``routing[g]["downgrades"]``). Only when the last rung fails does
+#: the exception propagate.
+ENGINE_LADDER = ("jax_sharded", "jax", "vectorized", "serial")
+
+
+def _ladder_below(chosen: str, strat, model, problem, K_pt: int,
+                  tol_pt) -> List[str]:
+    """Engines below ``chosen`` on the ladder able to run this point."""
+    if chosen not in ENGINE_LADDER:
+        return []
+    out = []
+    for eng in ENGINE_LADDER[ENGINE_LADDER.index(chosen) + 1:]:
+        if eng == "jax":
+            from .batch_jax import jax_supported
+            if tol_pt is not None \
+                    or not jax_supported(strat, model, problem):
+                continue
+        elif eng == "vectorized":
+            if not _vectorized_eligible(strat, model, problem, K_pt,
+                                        tol_pt):
+                continue
+        out.append(eng)
+    return out
+
+
+def _run_point_laddered(chosen: str, run_engine: Callable[[str], Any],
+                        downgrade_to: Sequence[str],
+                        route_info: Dict[str, Any]):
+    """Run one grid point with retry-once-then-downgrade semantics.
+
+    Returns ``(engine_that_ran, row)``. ``run_engine`` must be
+    stateless per call (every engine rebuilds its RNG state from the
+    seed list), so a retry reproduces the attempt exactly.
+    """
+    rungs = [chosen] + [e for e in downgrade_to if e != chosen]
+    for pos, engine in enumerate(rungs):
+        try:
+            return engine, run_engine(engine)
+        except Exception:
+            try:
+                return engine, run_engine(engine)      # retry once
+            except Exception as exc:
+                nxt = rungs[pos + 1] if pos + 1 < len(rungs) else None
+                route_info.setdefault("downgrades", []).append({
+                    "from": engine, "to": nxt,
+                    "error": type(exc).__name__,
+                    "reason": str(exc)[:300], "retried": True})
+                if nxt is None:
+                    raise
+    raise AssertionError("unreachable")    # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
 # the batched driver
 # ---------------------------------------------------------------------------
 
@@ -646,63 +724,101 @@ def simulate_batch(strategy: StrategySpec,
             chosen = backend
             route_info = {"chosen": chosen, "forced": True,
                           "engine": _engine_kind(strat) or "event-loop"}
-        if chosen == "vectorized":
-            if not _vectorized_eligible(strat, model, problem, K_pt,
-                                        tol_pt):
-                raise ValueError(
-                    "vectorized backend needs timing-only m-sync arrival "
-                    "semantics")
-            if rng_scheme == "counter" \
-                    and not isinstance(model, UniversalModel):
-                rngs = philox_rngs(seed_list)
-            else:
-                rngs = [np.random.default_rng(s) for s in seed_list]
-            row = _fast_msync_timing_batch(strat._m, model, K_pt, rngs,
-                                           rng_scheme=rng_scheme)
-        elif chosen == "jax":
-            if tol_pt is not None:
-                raise NotImplementedError(
-                    "tol_grad_sq early exit is not supported by the jax "
-                    "backend (fixed-length scan); use backend='serial'")
-            from .batch_jax import simulate_batch_jax
-            row = simulate_batch_jax(strat, model, K_pt, problem=problem,
-                                     gamma=gamma_pt, seeds=seed_list,
-                                     record_every=re_pt,
-                                     use_pallas=use_pallas, x64=x64)
-        elif chosen == "jax_sharded":
+        # contract errors on a forced/chosen backend raise up front, so
+        # the ladder below only ever sees *execution* failures
+        if chosen == "vectorized" and not _vectorized_eligible(
+                strat, model, problem, K_pt, tol_pt):
+            raise ValueError(
+                "vectorized backend needs timing-only m-sync arrival "
+                "semantics")
+        if chosen in ("jax", "jax_sharded"):
             if tol_pt is not None:
                 raise NotImplementedError(
                     "tol_grad_sq early exit is not supported by the jax "
                     "backends (fixed-length scan); use backend='serial'")
+            from .batch_jax import _check_supported
+            _check_supported(strat, model, problem)
+
+        def run_engine(engine, strat=strat, strat_kw=dict(strat_kw),
+                       K_pt=K_pt, gamma_pt=gamma_pt, re_pt=re_pt,
+                       tol_pt=tol_pt):
+            if engine == "vectorized":
+                if rng_scheme == "counter" \
+                        and not isinstance(model, UniversalModel):
+                    rngs = philox_rngs(seed_list)
+                else:
+                    rngs = [np.random.default_rng(s) for s in seed_list]
+                return _fast_msync_timing_batch(strat._m, model, K_pt,
+                                                rngs,
+                                                rng_scheme=rng_scheme)
+            if engine == "jax":
+                from .batch_jax import simulate_batch_jax
+                return simulate_batch_jax(strat, model, K_pt,
+                                          problem=problem, gamma=gamma_pt,
+                                          seeds=seed_list,
+                                          record_every=re_pt,
+                                          use_pallas=use_pallas, x64=x64)
+            return [simulate(factory(**strat_kw), model, K_pt,
+                             problem=problem, gamma=gamma_pt, seed=s,
+                             record_every=re_pt, tol_grad_sq=tol_pt)
+                    for s in seed_list]
+
+        if chosen == "jax_sharded":
             from ..launch.sweep import SweepPoint
             sharded_points.append(
                 (len(traces), SweepPoint(index=len(traces), strategy=strat,
                                          K=K_pt, gamma=gamma_pt,
-                                         record_every=re_pt)))
+                                         record_every=re_pt),
+                 run_engine, strat, K_pt, tol_pt))
             row = None             # filled by the fused sweep below
+            actual = chosen
         else:
-            row = [simulate(factory(**strat_kw), model, K_pt,
-                            problem=problem, gamma=gamma_pt, seed=s,
-                            record_every=re_pt, tol_grad_sq=tol_pt)
-                   for s in seed_list]
+            downs = _ladder_below(chosen, strat, model, problem, K_pt,
+                                  tol_pt)
+            actual, row = _run_point_laddered(chosen, run_engine, downs,
+                                              route_info)
         traces.append(row)
-        used_backends.append(chosen)
+        used_backends.append(actual)
         used_schemes.append({"serial": "stream", "jax": "jax.random",
                              "jax_sharded": "jax.random"
-                             }.get(chosen, rng_scheme))
+                             }.get(actual, rng_scheme))
         used_routing.append(route_info)
 
     if sharded_points:
         # ONE fused, shape-bucketed, shard_mapped launch for every grid
-        # point routed to the sharded sweep backend
+        # point routed to the sharded sweep backend (retry-once, then
+        # each deferred point falls down the ladder from "jax")
         from ..launch.sweep import run_sharded_sweep
-        results = run_sharded_sweep([sp for _, sp in sharded_points],
-                                    model, problem, seed_list,
-                                    use_pallas=use_pallas, x64=x64)
-        for g, _ in sharded_points:
-            row, shard_rec = results[g]
-            traces[g] = row
-            used_routing[g] = {**used_routing[g], "shard": shard_rec}
+        results = fused_exc = None
+        for _attempt in range(2):
+            try:
+                results = run_sharded_sweep(
+                    [sp for _, sp, *_ in sharded_points], model, problem,
+                    seed_list, use_pallas=use_pallas, x64=x64)
+                break
+            except Exception as exc:
+                fused_exc = exc
+        if results is not None:
+            for g, *_ in sharded_points:
+                row, shard_rec = results[g]
+                traces[g] = row
+                used_routing[g] = {**used_routing[g], "shard": shard_rec}
+        else:
+            for g, _sp, run_engine, strat, K_pt, tol_pt in sharded_points:
+                route_info = used_routing[g]
+                route_info.setdefault("downgrades", []).append({
+                    "from": "jax_sharded", "to": "jax",
+                    "error": type(fused_exc).__name__,
+                    "reason": str(fused_exc)[:300], "retried": True})
+                downs = _ladder_below("jax", strat, model, problem, K_pt,
+                                      tol_pt)
+                actual, row = _run_point_laddered("jax", run_engine,
+                                                  downs, route_info)
+                traces[g] = row
+                used_backends[g] = actual
+                used_schemes[g] = {"serial": "stream",
+                                   "jax": "jax.random"}.get(actual,
+                                                            rng_scheme)
 
     # auto can pick different backends per grid point; report faithfully
     backend_label = used_backends[0] if len(set(used_backends)) == 1 \

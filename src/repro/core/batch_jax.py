@@ -50,7 +50,14 @@ prefers ``jax_sampler_item``), and :class:`UniversalModel` /
 ``finish_times_jax`` inversion (batched ``searchsorted`` on the
 cumulative-power grid + closed-form quadratic segment solve) — every
 strategy family above accepts all three classes, so the full paper
-coverage matrix (DESIGN.md §3b) runs device-resident.
+coverage matrix (DESIGN.md §3b) runs device-resident. Fault-wrapped
+models (:class:`repro.core.faults.FaultyTimes`, DESIGN §3c) ARE
+``SubExponentialTimes`` whose samplers compose the base draw with
+fault noise on disjoint ``fold_in`` streams, so they ride this whole
+sampled-model path — including ``jax_chain_draws`` renewal rows and
+the sharded sweep — with no engine changes; an identity wrapper passes
+the base samplers through by object identity and shares their jit
+caches (bitwise no-op).
 
 The math-carrying paths evaluate a :class:`JaxProblem` oracle under
 ``jax.vmap`` over seeds — n=1000 × 32-seed sweeps execute as a single

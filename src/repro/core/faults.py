@@ -1,0 +1,518 @@
+"""Fault injection: composable transformations of ``TimeModel`` draws.
+
+The paper's robustness claims are about *adversarial computation-time
+dynamics* — crash/restart workers, transient slowdowns, correlated
+failure bursts, heavy-tail straggler spikes (cf. the arbitrary-dynamics
+framework of arXiv 2408.04929). This module makes those regimes
+first-class: a :class:`FaultModel` is a renewal-preserving transformation
+of one per-gradient duration draw, and :func:`with_faults` composes any
+number of them over a base :class:`~repro.core.time_models.FixedTimes`
+or :class:`~repro.core.time_models.SubExponentialTimes` model, producing
+a :class:`FaultyTimes` that IS a ``SubExponentialTimes`` — so every
+engine (the scalar event heap, the vectorized tensor path, the jitted
+round scans, the renewal-chain arrival scan, and the sharded sweep)
+accepts it unchanged.
+
+Contracts
+---------
+
+* **Renewal preservation.** Every fault transforms a single draw
+  ``t -> g(t, xi)`` with fresh fault noise ``xi`` per draw; transformed
+  draws stay i.i.d. across renewals. This is load-bearing: the
+  device-resident engines (``jax_chain_draws`` chain pools, the round
+  scans) assume renewal structure. Temporal dynamics live *inside* one
+  draw (e.g. :class:`TransientSlowdown`'s on/off episodes arrive on the
+  work clock of the computation being transformed).
+* **Identity is bitwise a no-op.** A :class:`FaultModel` with
+  ``is_identity=True`` consumes zero RNG, and :class:`FaultyTimes`
+  passes the base model's samplers through *by object identity* when no
+  active fault remains — wrapped runs are bitwise-identical to
+  unwrapped runs on every backend (and even share the jit program
+  caches, which key on sampler identity).
+* **Disjoint fault streams (jax).** Device-side fault noise is keyed by
+  ``fold_in(draw_key, _FAULT_TAG)`` off the same per-(seed, worker/slot)
+  key the base draw consumes, so fault draws are pure functions of the
+  seed value — sweep-independent like every counter-scheme stream — and
+  the base draw under a given key is unchanged by wrapping: a faulted
+  draw is a transformation *of the same base sample*.
+* **NumPy stream order.** The host paths draw fault noise from the
+  engine-provided generator immediately after the base draw of the same
+  call, so serial runs stay deterministic per seed. Consequence: faulted
+  models keep the ``counter`` contract but NOT ``stream`` scalar-replay
+  parity (the tensor path applies fault noise per seed after the bulk
+  base draw); the identity wrapper keeps both, bitwise.
+* **Correlation granularity.** :class:`CorrelatedBursts` shares one
+  episode draw per *row* — a full ``jax_sampler`` round, one
+  ``sample_times`` call, or one ``sample_times_tensor`` round-row. The
+  single-draw paths (``sample_time``, ``jax_sampler_item``) see the
+  exact per-worker marginal (episode x inclusion); cross-worker
+  correlation is a row-level property, so serial vs jax parity for
+  bursts is distribution-level (as all serial-vs-jax parity is).
+
+``mean_times``/``sub_exponential_R`` of the wrapper are exact for the
+mean transformations documented per fault and *conservative upper
+bounds* for ``R`` (:class:`HeavyTailSpike` is genuinely heavy-tailed:
+``R = inf``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence, Tuple, Union
+
+import numpy as np
+
+from .time_models import FixedTimes, SubExponentialTimes, _as_rng
+
+__all__ = ["FaultModel", "IdentityFault", "CrashRestart",
+           "TransientSlowdown", "CorrelatedBursts", "HeavyTailSpike",
+           "FaultyTimes", "with_faults", "FAULT_TAG"]
+
+# fold_in tag separating device-side fault-noise streams from base-draw
+# streams (see module docstring); "faul" in ASCII.
+FAULT_TAG = 0x6661756C
+
+
+class FaultModel:
+    """One renewal-preserving transformation of a duration draw.
+
+    Subclasses override the three ``transform*`` hooks plus the
+    ``mean``/``R`` maps. The base class is the identity: it touches
+    neither the draw nor any RNG, which is exactly the bitwise no-op
+    contract :class:`FaultyTimes` relies on.
+    """
+
+    name = "identity"
+    is_identity = True
+
+    def transform_rows(self, t: np.ndarray, workers: np.ndarray,
+                       rng: np.random.Generator,
+                       redraw: Callable[[np.random.Generator], np.ndarray]
+                       ) -> np.ndarray:
+        """NumPy path: transform a ``(rows, workers)`` block of draws.
+
+        One "row" is one shared episode clock tick (one engine draw
+        call / one tensor round). ``redraw(rng)`` yields a same-shaped
+        block of fresh base draws (crash/restart redraws).
+        """
+        return t
+
+    def jax_transform_rows(self, t, key, redraw):
+        """jax path: transform one ``(n,)`` round row under ``key``."""
+        return t
+
+    def jax_transform_item(self, t, key, i, redraw):
+        """jax path: transform ONE worker draw (``i`` may be traced)."""
+        return t
+
+    def transform_means(self, taus: np.ndarray) -> np.ndarray:
+        """Exact per-worker mean of the transformed draw."""
+        return taus
+
+    def transform_R(self, R: float, taus: np.ndarray) -> float:
+        """Conservative sub-exponential parameter of the transformed draw."""
+        return R
+
+
+class IdentityFault(FaultModel):
+    """The explicit no-op (useful as a sweep axis / ablation control)."""
+
+
+def _check_prob(p: float, what: str) -> float:
+    p = float(p)
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"{what} must be in [0, 1], got {p}")
+    return p
+
+
+def _check_pos(x: float, what: str) -> float:
+    x = float(x)
+    if x <= 0.0:
+        raise ValueError(f"{what} must be positive, got {x}")
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashRestart(FaultModel):
+    """Crash/restart as a renewal transformation.
+
+    With probability ``p`` a computation crashes partway through: the
+    draw becomes ``u*t + d + t2`` — progress lost after a uniform
+    fraction ``u`` of the original duration ``t``, downtime
+    ``d ~ Exp(mean_downtime)``, then one fresh redraw ``t2`` of the full
+    computation (at most one crash per draw; the truncation keeps the
+    mean map closed-form). Mean map:
+    ``tau -> tau*(1 + p/2) + p*mean_downtime``.
+    """
+
+    p: float
+    mean_downtime: float
+    name: str = dataclasses.field(default="crash", init=False)
+    is_identity = False
+
+    def __post_init__(self) -> None:
+        _check_prob(self.p, "CrashRestart.p")
+        _check_pos(self.mean_downtime, "CrashRestart.mean_downtime")
+
+    def transform_rows(self, t, workers, rng, redraw):
+        crash = rng.random(t.shape) < self.p
+        u = rng.random(t.shape)
+        down = rng.exponential(self.mean_downtime, size=t.shape)
+        t2 = np.asarray(redraw(rng), dtype=float)
+        return np.where(crash, u * t + down + t2, t)
+
+    def jax_transform_rows(self, t, key, redraw):
+        import jax
+        import jax.numpy as jnp
+        kc, ku, kd, kr = jax.random.split(key, 4)
+        shape = jnp.shape(t)
+        crash = jax.random.bernoulli(kc, self.p, shape)
+        u = jax.random.uniform(ku, shape, dtype=t.dtype)
+        down = jax.random.exponential(kd, shape,
+                                      dtype=t.dtype) * self.mean_downtime
+        return jnp.where(crash, u * t + down + redraw(kr), t)
+
+    def jax_transform_item(self, t, key, i, redraw):
+        import jax
+        import jax.numpy as jnp
+        kc, ku, kd, kr = jax.random.split(key, 4)
+        crash = jax.random.bernoulli(kc, self.p)
+        u = jax.random.uniform(ku, dtype=t.dtype)
+        down = jax.random.exponential(kd, dtype=t.dtype) \
+            * self.mean_downtime
+        return jnp.where(crash, u * t + down + redraw(kr), t)
+
+    def transform_means(self, taus):
+        return taus * (1.0 + self.p / 2.0) + self.p * self.mean_downtime
+
+    def transform_R(self, R, taus):
+        # t' <= t + d + t2 stochastically; sum of sub-exps is sub-exp
+        # with parameter bounded by the sum.
+        return 2.0 * R + self.mean_downtime
+
+
+@dataclasses.dataclass(frozen=True)
+class TransientSlowdown(FaultModel):
+    """Multiplicative slowdown episodes with Markov on/off dynamics.
+
+    Degradation episodes arrive on the *work clock* of one computation
+    (rate ``rate`` per unit of base duration — the off->on transition of
+    the on/off chain); each episode slows the worker by ``factor`` for
+    an ``Exp(mean_episode)`` stretch (the on->off transition), adding
+    ``(factor-1) * Exp(mean_episode)`` wall time. With ``N ~
+    Poisson(rate * t)`` episodes the draw becomes ``t + (factor-1) *
+    Gamma(N, mean_episode)`` — the within-draw embedding of the Markov
+    chain that keeps draws i.i.d. across renewals (see module
+    docstring). Mean map: ``tau -> tau * (1 + rate*mean_episode*(factor-1))``.
+    """
+
+    rate: float
+    mean_episode: float
+    factor: float
+    name: str = dataclasses.field(default="slowdown", init=False)
+    is_identity = False
+
+    def __post_init__(self) -> None:
+        _check_pos(self.rate, "TransientSlowdown.rate")
+        _check_pos(self.mean_episode, "TransientSlowdown.mean_episode")
+        if self.factor < 1.0:
+            raise ValueError("TransientSlowdown.factor must be >= 1")
+
+    def transform_rows(self, t, workers, rng, redraw):
+        n_ep = rng.poisson(self.rate * np.maximum(t, 0.0))
+        extra = rng.gamma(np.maximum(n_ep, 1), self.mean_episode) \
+            * (self.factor - 1.0)
+        return t + np.where(n_ep > 0, extra, 0.0)
+
+    def jax_transform_rows(self, t, key, redraw):
+        import jax
+        import jax.numpy as jnp
+        kn, kg = jax.random.split(key)
+        n_ep = jax.random.poisson(kn, self.rate * jnp.maximum(t, 0.0))
+        shape = jnp.maximum(n_ep, 1).astype(t.dtype)
+        extra = jax.random.gamma(kg, shape) * jnp.asarray(
+            self.mean_episode * (self.factor - 1.0), dtype=t.dtype)
+        return t + jnp.where(n_ep > 0, extra.astype(t.dtype), 0.0)
+
+    def jax_transform_item(self, t, key, i, redraw):
+        return self.jax_transform_rows(t, key, redraw)
+
+    def transform_means(self, taus):
+        return taus * (1.0 + self.rate * self.mean_episode
+                       * (self.factor - 1.0))
+
+    def transform_R(self, R, taus):
+        inflate = self.mean_episode * (self.factor - 1.0)
+        return R * (1.0 + self.rate * inflate) + inflate
+
+
+@dataclasses.dataclass(frozen=True)
+class CorrelatedBursts(FaultModel):
+    """Correlated failure bursts: a shared episode clock hits a subset.
+
+    Each *row* (one engine draw call — a full jax round row, one
+    ``sample_times`` call, one tensor round) shares a single episode
+    coin: with probability ``p_episode`` a burst is live, and each
+    worker in the row is independently hit with probability ``frac``,
+    receiving ``Exp(mean_extra)`` extra delay. Single-draw paths see the
+    exact marginal (``p_episode * frac``). Mean map:
+    ``tau -> tau + p_episode*frac*mean_extra``.
+    """
+
+    p_episode: float
+    frac: float
+    mean_extra: float
+    name: str = dataclasses.field(default="bursts", init=False)
+    is_identity = False
+
+    def __post_init__(self) -> None:
+        _check_prob(self.p_episode, "CorrelatedBursts.p_episode")
+        _check_prob(self.frac, "CorrelatedBursts.frac")
+        _check_pos(self.mean_extra, "CorrelatedBursts.mean_extra")
+
+    def transform_rows(self, t, workers, rng, redraw):
+        rows = t.shape[0]
+        episode = rng.random((rows, 1)) < self.p_episode
+        hit = rng.random(t.shape) < self.frac
+        extra = rng.exponential(self.mean_extra, size=t.shape)
+        return t + np.where(episode & hit, extra, 0.0)
+
+    def jax_transform_rows(self, t, key, redraw):
+        import jax
+        import jax.numpy as jnp
+        ke, kh, kx = jax.random.split(key, 3)
+        episode = jax.random.bernoulli(ke, self.p_episode)  # shared clock
+        hit = jax.random.bernoulli(kh, self.frac, jnp.shape(t))
+        extra = jax.random.exponential(kx, jnp.shape(t),
+                                       dtype=t.dtype) * self.mean_extra
+        return t + jnp.where(episode & hit, extra, 0.0)
+
+    def jax_transform_item(self, t, key, i, redraw):
+        import jax
+        import jax.numpy as jnp
+        kh, kx = jax.random.split(key)
+        hit = jax.random.bernoulli(kh, self.p_episode * self.frac)
+        extra = jax.random.exponential(kx, dtype=t.dtype) * self.mean_extra
+        return t + jnp.where(hit, extra, 0.0)
+
+    def transform_means(self, taus):
+        return taus + self.p_episode * self.frac * self.mean_extra
+
+    def transform_R(self, R, taus):
+        return R + self.mean_extra
+
+
+@dataclasses.dataclass(frozen=True)
+class HeavyTailSpike(FaultModel):
+    """Heavy-tail straggler spikes: Pareto (Lomax) extra delay.
+
+    With probability ``p`` a draw picks up ``scale * (U^{-1/alpha} - 1)``
+    extra delay — a Lomax(alpha, scale) spike. ``alpha > 1`` is required
+    so the mean exists (``tau -> tau + p*scale/(alpha-1)``); the tail is
+    genuinely polynomial, so the wrapped model is NOT sub-exponential
+    and reports ``R = inf``.
+    """
+
+    p: float
+    alpha: float
+    scale: float
+    name: str = dataclasses.field(default="spikes", init=False)
+    is_identity = False
+
+    def __post_init__(self) -> None:
+        _check_prob(self.p, "HeavyTailSpike.p")
+        _check_pos(self.scale, "HeavyTailSpike.scale")
+        if float(self.alpha) <= 1.0:
+            raise ValueError("HeavyTailSpike.alpha must be > 1 "
+                             "(finite mean)")
+
+    def transform_rows(self, t, workers, rng, redraw):
+        spiked = rng.random(t.shape) < self.p
+        u = np.maximum(rng.random(t.shape), 1e-12)
+        spike = self.scale * (u ** (-1.0 / self.alpha) - 1.0)
+        return t + np.where(spiked, spike, 0.0)
+
+    def jax_transform_rows(self, t, key, redraw):
+        import jax
+        import jax.numpy as jnp
+        ks, ku = jax.random.split(key)
+        shape = jnp.shape(t)
+        spiked = jax.random.bernoulli(ks, self.p, shape)
+        u = jax.random.uniform(ku, shape, dtype=t.dtype,
+                               minval=1e-7, maxval=1.0)
+        spike = self.scale * (u ** (-1.0 / self.alpha) - 1.0)
+        return t + jnp.where(spiked, spike, 0.0)
+
+    def jax_transform_item(self, t, key, i, redraw):
+        return self.jax_transform_rows(t, key, redraw)
+
+    def transform_means(self, taus):
+        return taus + self.p * self.scale / (self.alpha - 1.0)
+
+    def transform_R(self, R, taus):
+        return math.inf
+
+
+def _compose_jax_rows(base_rows: Callable, active: Tuple[FaultModel, ...]
+                      ) -> Callable:
+    def jax_sampler(key):
+        import jax
+        t = base_rows(key)
+        fkey = jax.random.fold_in(key, FAULT_TAG)
+        for idx, fault in enumerate(active):
+            t = fault.jax_transform_rows(
+                t, jax.random.fold_in(fkey, idx), base_rows)
+        return t
+    return jax_sampler
+
+
+def _compose_jax_item(base_item: Callable, active: Tuple[FaultModel, ...]
+                      ) -> Callable:
+    def jax_sampler_item(key, i):
+        import jax
+        t = base_item(key, i)
+        fkey = jax.random.fold_in(key, FAULT_TAG)
+        for idx, fault in enumerate(active):
+            t = fault.jax_transform_item(
+                t, jax.random.fold_in(fkey, idx), i,
+                lambda k: base_item(k, i))
+        return t
+    return jax_sampler_item
+
+
+class FaultyTimes(SubExponentialTimes):
+    """A base time model with a stack of fault transformations applied.
+
+    IS a :class:`SubExponentialTimes` — ``isinstance`` checks, the jax
+    engine support predicate, the chain builders' sampler-identity jit
+    caches and the sharded sweep all treat it as an ordinary sampled
+    model. When every fault in the stack is the identity, the base
+    samplers are passed through by object identity and every path is
+    bitwise-identical to the unwrapped model (see module docstring).
+    """
+
+    def __init__(self, base: Union[FixedTimes, SubExponentialTimes],
+                 faults: Sequence[FaultModel]) -> None:
+        faults = tuple(faults)
+        for f in faults:
+            if not isinstance(f, FaultModel):
+                raise TypeError(f"not a FaultModel: {f!r}")
+        active = tuple(f for f in faults if not f.is_identity)
+
+        if isinstance(base, FixedTimes):
+            base_taus, base_r = np.asarray(base.taus, float), 0.0
+            base_name = "fixed"
+            taus_arr = base.taus
+
+            def base_rows(workers, rng):
+                return taus_arr[np.asarray(workers, dtype=int)]
+
+            def base_jax_rows(key):
+                import jax.numpy as jnp
+                return jnp.asarray(taus_arr)
+
+            def base_jax_item(key, i):
+                import jax.numpy as jnp
+                return jnp.asarray(taus_arr)[i]
+        elif isinstance(base, SubExponentialTimes):
+            base_taus, base_r = np.asarray(base.taus, float), float(base.R)
+            base_name = base.name
+            base_rows = base.sample_times
+            base_jax_rows = base.jax_sampler
+            base_jax_item = base.jax_sampler_item
+        else:
+            raise TypeError(
+                "with_faults wraps FixedTimes / SubExponentialTimes; "
+                f"got {type(base).__name__} (universal/participation "
+                "models define dynamics, not renewal draws)")
+
+        self.base = base
+        self.faults = faults
+        self._active = active
+        self._base_rows = base_rows
+
+        taus, r = base_taus, base_r
+        for f in active:
+            r = f.transform_R(r, taus)
+            taus = f.transform_means(np.asarray(taus, dtype=float))
+
+        if active:
+            jax_rows = (_compose_jax_rows(base_jax_rows, active)
+                        if base_jax_rows is not None else None)
+            jax_item = (_compose_jax_item(base_jax_item, active)
+                        if base_jax_item is not None else None)
+            name = base_name + "+" + "+".join(f.name for f in active)
+        else:
+            jax_rows, jax_item = base_jax_rows, base_jax_item
+            name = base_name
+
+        def scalar_sampler(i: int, rng: np.random.Generator) -> float:
+            return float(self.sample_times(np.asarray([i]), rng)[0])
+
+        super().__init__(taus=taus, sampler=scalar_sampler, R=r, name=name,
+                         batch_sampler=None, jax_sampler=jax_rows,
+                         jax_sampler_item=jax_item)
+
+    def _redraw(self, workers: np.ndarray, rounds: int) -> Callable:
+        workers = np.asarray(workers, dtype=int)
+
+        def redraw(rng: np.random.Generator) -> np.ndarray:
+            tiled = np.tile(workers, rounds)
+            return np.asarray(self._base_rows(tiled, rng),
+                              dtype=float).reshape(rounds, len(workers))
+        return redraw
+
+    def sample_time(self, i: int, rng: np.random.Generator) -> float:
+        if not self._active:
+            return self.base.sample_time(i, rng)
+        return float(self.sample_times(np.asarray([i]), rng)[0])
+
+    def sample_times(self, workers: Sequence[int],
+                     rng: np.random.Generator) -> np.ndarray:
+        workers = np.asarray(workers, dtype=int)
+        t = np.asarray(self._base_rows(workers, rng), dtype=float)
+        if not self._active:
+            return t
+        rows = t[None, :]
+        redraw = self._redraw(workers, 1)
+        for fault in self._active:
+            rows = fault.transform_rows(rows, workers, rng, redraw)
+        return rows[0]
+
+    def sample_times_tensor(self, workers: Sequence[int], rounds: int,
+                            seed_keys: Sequence,
+                            rng_scheme: str = "counter") -> np.ndarray:
+        if not self._active:
+            return self.base.sample_times_tensor(workers, rounds,
+                                                 seed_keys, rng_scheme)
+        if rng_scheme not in ("counter", "stream"):
+            raise ValueError(f"unknown rng_scheme {rng_scheme!r}; "
+                             "use 'counter' or 'stream'")
+        workers = np.asarray(workers, dtype=int)
+        rngs = [_as_rng(k, rng_scheme) for k in seed_keys]
+        out = self.base.sample_times_tensor(workers, rounds, rngs,
+                                            rng_scheme)
+        redraw = self._redraw(workers, int(rounds))
+        for si, rng in enumerate(rngs):
+            rows = out[si]
+            for fault in self._active:
+                rows = fault.transform_rows(rows, workers, rng, redraw)
+            out[si] = rows
+        return out
+
+
+def with_faults(model: Union[FixedTimes, SubExponentialTimes],
+                *faults: FaultModel) -> FaultyTimes:
+    """Wrap ``model`` with a stack of fault transformations.
+
+    ``with_faults(m)`` / ``with_faults(m, IdentityFault())`` are bitwise
+    no-ops on every backend (the base samplers pass through by object
+    identity). Faults apply left to right::
+
+        model = with_faults(exponential_times(1.0, n),
+                            CrashRestart(p=0.05, mean_downtime=2.0),
+                            CorrelatedBursts(p_episode=0.1, frac=0.5,
+                                             mean_extra=3.0))
+    """
+    return FaultyTimes(model, faults)

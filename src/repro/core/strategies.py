@@ -90,6 +90,43 @@ class Trace:
             return 0.0
         return 1.0 - self.gradients_used / self.gradients_computed
 
+    # ------------------------------------------------- checkpoint payload
+    def as_dict(self) -> dict:
+        """JSON-serializable form for per-grid-point experiment
+        checkpoints. Floats survive the round trip exactly (``repr`` of
+        a double is exact), so a trace restored by :meth:`from_dict`
+        reproduces every summary statistic bit-for-bit; arrays are
+        normalized to float64 on restore either way."""
+        return {
+            "times": np.asarray(self.times, dtype=float).tolist(),
+            "values": np.asarray(self.values, dtype=float).tolist(),
+            "grad_norms": np.asarray(self.grad_norms,
+                                     dtype=float).tolist(),
+            "iterations": int(self.iterations),
+            "total_time": float(self.total_time),
+            "gradients_used": int(self.gradients_used),
+            "gradients_computed": int(self.gradients_computed),
+            "x_final": None if self.x_final is None
+            else np.asarray(self.x_final, dtype=float).tolist(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Trace":
+        """Inverse of :meth:`as_dict` (tolerates the ``"inf"``/``"nan"``
+        strings :func:`repro.exp.runner.sanitize_json` substitutes for
+        non-finite floats)."""
+        def arr(v):
+            return np.asarray([float(x) for x in v], dtype=float)
+
+        return cls(times=arr(d["times"]), values=arr(d["values"]),
+                   grad_norms=arr(d["grad_norms"]),
+                   iterations=int(d["iterations"]),
+                   total_time=float(d["total_time"]),
+                   gradients_used=int(d["gradients_used"]),
+                   gradients_computed=int(d["gradients_computed"]),
+                   x_final=None if d.get("x_final") is None
+                   else arr(d["x_final"]))
+
 
 @dataclasses.dataclass
 class Problem:

@@ -250,6 +250,16 @@ class TimeModel:
     def sub_exponential_R(self) -> Optional[float]:
         return None
 
+    def faulted(self, *faults) -> "SubExponentialTimes":
+        """Wrap this model with fault transformations (``repro.core.faults``).
+
+        ``model.faulted(CrashRestart(p=0.05, mean_downtime=2.0))`` is
+        :func:`repro.core.faults.with_faults` as a method; with no
+        active faults the wrapper is bitwise a no-op on every backend.
+        """
+        from .faults import FaultyTimes
+        return FaultyTimes(self, faults)
+
 
 @dataclasses.dataclass
 class FixedTimes(TimeModel):

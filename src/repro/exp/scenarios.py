@@ -25,7 +25,19 @@ chi2                  chi²_{k_i}                              3.1 (§D.1)
 universal_fig3        sin-powers grid (Figure 3)              5.1
 universal_fig4        offset sin-powers grid (Figure 4)       5.1
 partial_participation rotating ≤ p·n dead workers             5.4
+crash_restart         Exp(lam) + crash/restart renewals       fault layer
+crash_fixed           tau1·sqrt(i) + crash/restart renewals   fault layer
+transient_slowdown    mu_i + Exp(lam) + Markov slow episodes  fault layer
+correlated_bursts     Exp(lam) + shared-clock burst subsets   fault layer
+heavy_tail_spikes     Exp(lam) + Lomax straggler spikes       fault layer
+faulty_mix            Exp(lam) + crash + bursts + spikes      fault layer
 ===================== ======================================= ============
+
+The ``fault layer`` scenarios wrap a base regime with
+:mod:`repro.core.faults` transformations (DESIGN.md §3c): identical
+engine coverage to their base scenario — the wrapper is itself a
+``SubExponentialTimes`` — with fault draws on disjoint, sweep-independent
+streams.
 """
 
 from __future__ import annotations
@@ -34,6 +46,9 @@ from typing import Callable, Dict
 
 import numpy as np
 
+from repro.core.faults import (CorrelatedBursts, CrashRestart,
+                               HeavyTailSpike, TransientSlowdown,
+                               with_faults)
 from repro.core.time_models import (FixedTimes, PartialParticipationModel,
                                     chi2_times, exponential_times,
                                     gamma_times, powers_figure3,
@@ -128,3 +143,70 @@ def partial_participation(n: int, v: float = 1.0, p: float = 0.2,
                           period: float = 40.0, t_max: float = 4000.0):
     return PartialParticipationModel(n=n, v=v, p=p, period=period,
                                      t_max=t_max)
+
+
+# ------------------------------------------------- fault regimes (DESIGN §3c)
+@register_scenario("crash_restart")
+def crash_restart(n: int, lam: float = 1.0, p: float = 0.05,
+                  mean_downtime: float = 2.0):
+    """Exp(lam) workers that crash with prob ``p`` per draw (downtime +
+    redraw, at most one crash per renewal)."""
+    return with_faults(exponential_times(lam, n),
+                       CrashRestart(p=p, mean_downtime=mean_downtime))
+
+
+@register_scenario("crash_fixed")
+def crash_fixed(n: int, tau1: float = 1.0, p: float = 0.05,
+                mean_downtime: float = 2.0):
+    """Deterministic sqrt-law workers turned stochastic by crash/restart
+    — the smallest perturbation of the paper's Figure 5 setup."""
+    return with_faults(FixedTimes.sqrt_law(n, tau1),
+                       CrashRestart(p=p, mean_downtime=mean_downtime))
+
+
+@register_scenario("transient_slowdown")
+def transient_slowdown(n: int, lam: float = 1.0, rate: float = 0.2,
+                       mean_episode: float = 1.0, factor: float = 4.0):
+    """Shifted-exponential workers with Markov on/off degradation
+    episodes arriving on the work clock (x``factor`` while degraded)."""
+    return with_faults(
+        shifted_exponential_times(np.sqrt(np.arange(1, n + 1)),
+                                  np.full(n, lam)),
+        TransientSlowdown(rate=rate, mean_episode=mean_episode,
+                          factor=factor))
+
+
+@register_scenario("correlated_bursts")
+def correlated_bursts(n: int, lam: float = 1.0, p_episode: float = 0.1,
+                      frac: float = 0.5, mean_extra: float = 4.0):
+    """Exp(lam) workers hit by correlated failure bursts: a shared
+    episode clock fires with prob ``p_episode`` per round and delays a
+    random ``frac`` subset."""
+    return with_faults(exponential_times(lam, n),
+                       CorrelatedBursts(p_episode=p_episode, frac=frac,
+                                        mean_extra=mean_extra))
+
+
+@register_scenario("heavy_tail_spikes")
+def heavy_tail_spikes(n: int, lam: float = 1.0, p: float = 0.05,
+                      alpha: float = 1.5, scale: float = 5.0):
+    """Exp(lam) workers with Lomax(alpha, scale) straggler spikes — the
+    wrapped model is genuinely heavy-tailed (R = inf)."""
+    return with_faults(exponential_times(lam, n),
+                       HeavyTailSpike(p=p, alpha=alpha, scale=scale))
+
+
+@register_scenario("faulty_mix")
+def faulty_mix(n: int, lam: float = 1.0, p_crash: float = 0.03,
+               mean_downtime: float = 2.0, p_episode: float = 0.05,
+               frac: float = 0.5, mean_extra: float = 4.0,
+               p_spike: float = 0.02, alpha: float = 1.5,
+               scale: float = 5.0):
+    """All three failure modes stacked on Exp(lam) workers — the
+    adversarial composite regime for the fault-frontier benchmark."""
+    return with_faults(
+        exponential_times(lam, n),
+        CrashRestart(p=p_crash, mean_downtime=mean_downtime),
+        CorrelatedBursts(p_episode=p_episode, frac=frac,
+                         mean_extra=mean_extra),
+        HeavyTailSpike(p=p_spike, alpha=alpha, scale=scale))

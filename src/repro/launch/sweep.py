@@ -172,8 +172,9 @@ def run_sharded_sweep(points: Sequence[SweepPoint], model, problem,
         kind = shardable_kind(p.strategy, model, problem)
         buckets.setdefault(_bucket_key(kind, p, math), []).append(p)
 
-    out: Dict[int, Tuple[List[Any], Dict[str, Any]]] = {}
-    for bkey, bpoints in buckets.items():
+    def _run_bucket(bkey, bpoints
+                    ) -> Dict[int, Tuple[List[Any], Dict[str, Any]]]:
+        out: Dict[int, Tuple[List[Any], Dict[str, Any]]] = {}
         base_rec = {"bucket": "/".join(str(b) for b in bkey),
                     "devices": D, "points_in_bucket": len(bpoints),
                     "units": len(bpoints) * S}
@@ -185,7 +186,7 @@ def run_sharded_sweep(points: Sequence[SweepPoint], model, problem,
                 seeds=seeds, record_every=p.record_every,
                 use_pallas=use_pallas)
             out[p.index] = (traces, {**base_rec, "fallback": True})
-            continue
+            return out
 
         # flatten point-major so each point's seeds are one column slice
         unit_seeds = [int(s) for p in bpoints for s in seeds]
@@ -232,4 +233,32 @@ def run_sharded_sweep(points: Sequence[SweepPoint], model, problem,
                     K, S, K, p.record_every, problem)
                 out[p.index] = (traces, {**base_rec, "padded_units": pad,
                                          **meta})
+        return out
+
+    # Per-bucket degradation (DESIGN §3c): a failing sharded bucket is
+    # retried once, then its points run the plain per-point jax engine
+    # with the downgrade recorded in the per-point shard meta. Only if
+    # the per-point engine also fails does the exception propagate (the
+    # simulate_batch fused ladder takes over from there).
+    out: Dict[int, Tuple[List[Any], Dict[str, Any]]] = {}
+    for bkey, bpoints in buckets.items():
+        try:
+            out.update(_run_bucket(bkey, bpoints))
+        except Exception:
+            try:
+                out.update(_run_bucket(bkey, bpoints))
+            except Exception as exc:
+                down = {"from": "jax_sharded:bucket", "to": "jax",
+                        "error": type(exc).__name__,
+                        "reason": str(exc)[:300], "retried": True}
+                for p in bpoints:
+                    traces = bj.simulate_batch_jax(
+                        p.strategy, model, p.K, problem=problem,
+                        gamma=p.gamma, seeds=seeds,
+                        record_every=p.record_every,
+                        use_pallas=use_pallas)
+                    out[p.index] = (traces, {
+                        "bucket": "/".join(str(b) for b in bkey),
+                        "devices": D, "fallback": True,
+                        "downgrades": [down]})
     return out

@@ -484,7 +484,7 @@ def test_live_design_tables_cover_all_registrations():
     assert matrix is not None and scen is not None
     assert set(matrix) == {"sync", "msync", "auto_m", "async", "rennala",
                            "malenia", "ringmaster", "deadline", "dropout"}
-    assert len(scen) == 12
+    assert len(scen) == 18          # 12 base regimes + 6 §3c fault regimes
 
 
 def test_deleting_live_matrix_row_fails_crosscheck(tmp_path):
