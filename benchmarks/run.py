@@ -28,6 +28,9 @@ Modules:
   fault_frontier     strategy race across the §3c fault regimes
                      (crash/slowdown/bursts/spikes/mix) vs fault-free;
                      writes BENCH_fault_frontier.json
+  atlas              head-to-head time-complexity atlas: sync family vs
+                     async rivals (Ringleader, optimal ASGD, ...) across
+                     six heterogeneity regimes; writes BENCH_atlas.json
   order_stats_speed  Pallas top-m kernel vs lax.top_k vs iterative
                      extraction at n in {1e3, 1e5}
 
@@ -43,8 +46,8 @@ import inspect
 import sys
 import time
 
-from . import (ablation_m_sweep, fault_frontier, fig5_quadratic, fig8_grid,
-               malenia_het, order_stats_speed, sec6_async_needed,
+from . import (ablation_m_sweep, atlas, fault_frontier, fig5_quadratic,
+               fig8_grid, malenia_het, order_stats_speed, sec6_async_needed,
                sec6_heterogeneous, sec53_gap, secj_R_estimation,
                simbatch_speed, sweep_scaling, table_mstar, thm23_logfactor,
                thm32_random, thm55_participation)
@@ -63,6 +66,7 @@ MODULES = [
     ("thm55_participation", thm55_participation),
     ("sec6_heterogeneous", sec6_heterogeneous),
     ("fault_frontier", fault_frontier),
+    ("atlas", atlas),
     ("simbatch_speed", simbatch_speed),
     ("order_stats_speed", order_stats_speed),
     ("sweep_scaling", sweep_scaling),

@@ -1,0 +1,71 @@
+"""Shared timeout+retry runner for JSON-emitting worker subprocesses.
+
+Two lanes spawn Python workers and parse their last stdout line as JSON:
+the ``sweep_scaling`` benchmark (one worker per forced XLA device
+count) and the 4-device sharded-sweep test lane. Both used to hand-roll
+``subprocess.run`` — and the test lane had NO deadline, so a hung XLA
+compile stalled CI forever and a transient compile-cache miss flaked it.
+
+:func:`run_json_worker` is the one shared spelling: a wall-clock
+deadline per attempt, ``attempts`` tries (compile-cache warmup makes a
+second attempt much cheaper — the dominant flake mode), and a final
+:class:`RuntimeError` that carries the tail of the worker's
+stdout/stderr as the diagnostic instead of a bare ``TimeoutExpired``.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+from typing import Dict, List, Optional
+
+__all__ = ["run_json_worker", "DEFAULT_TIMEOUT_S", "DEFAULT_ATTEMPTS"]
+
+#: per-attempt wall-clock ceiling; a hung XLA compile would otherwise
+#: stall the whole lane forever
+DEFAULT_TIMEOUT_S = 600
+
+#: total tries per worker (first failure is usually compile-cache cold)
+DEFAULT_ATTEMPTS = 2
+
+
+def _tail(text: Optional[str], limit: int = 2000) -> str:
+    return (text or "")[-limit:]
+
+
+def run_json_worker(argv: List[str], *, label: str,
+                    env: Optional[Dict[str, str]] = None,
+                    cwd: Optional[str] = None,
+                    timeout_s: float = DEFAULT_TIMEOUT_S,
+                    attempts: int = DEFAULT_ATTEMPTS) -> dict:
+    """Run ``argv``; parse the LAST stdout line as JSON.
+
+    Retries on timeout, nonzero exit, or unparseable output (each
+    attempt gets a fresh ``timeout_s`` deadline). Raises
+    ``RuntimeError`` naming ``label`` with the last attempt's
+    stdout/stderr tails once ``attempts`` are exhausted.
+    """
+    last_err = None
+    for attempt in range(1, attempts + 1):
+        try:
+            proc = subprocess.run(argv, capture_output=True, text=True,
+                                  env=env, cwd=cwd, timeout=timeout_s)
+        except subprocess.TimeoutExpired as exc:
+            last_err = (f"timed out after {timeout_s}s "
+                        f"(attempt {attempt}):\n{_tail(exc.stdout)}\n"
+                        f"{_tail(exc.stderr)}")
+            continue
+        if proc.returncode != 0:
+            last_err = (f"exit {proc.returncode} (attempt {attempt}):\n"
+                        f"{_tail(proc.stdout)}\n{_tail(proc.stderr)}")
+            continue
+        lines = proc.stdout.strip().splitlines()
+        try:
+            return json.loads(lines[-1])
+        except (IndexError, ValueError):
+            last_err = (f"no JSON on last stdout line "
+                        f"(attempt {attempt}):\n{_tail(proc.stdout)}\n"
+                        f"{_tail(proc.stderr)}")
+            continue
+    raise RuntimeError(
+        f"{label} failed {attempts}x; last: {last_err}")

@@ -49,7 +49,6 @@ from __future__ import annotations
 
 import json
 import os
-import subprocess
 import sys
 import time
 
@@ -126,46 +125,29 @@ def _worker(devices: int) -> dict:
     }
 
 
-#: per-worker-launch wall-clock ceiling; a hung XLA compile would
-#: otherwise stall the whole benchmark lane forever
+#: per-worker-launch wall-clock ceiling (re-exported for the baseline
+#: meta; the shared runner owns the retry policy)
 SPAWN_TIMEOUT_S = 600
 
 
 def _spawn(devices: int) -> dict:
-    """Run ``--worker devices`` in a subprocess with the XLA flag set.
+    """Run ``--worker devices`` in a subprocess with the XLA flag set,
+    through the shared :func:`benchmarks.subproc.run_json_worker`
+    timeout+retry runner (compile-cache warmup makes the second attempt
+    much cheaper)."""
+    from .subproc import run_json_worker
 
-    Each launch gets a :data:`SPAWN_TIMEOUT_S` deadline and one retry
-    (compile-cache warmup makes a second attempt much cheaper); the
-    final failure carries the worker's stdout/stderr tail as the
-    diagnostic.
-    """
     env = dict(os.environ)
     flag = f"--xla_force_host_platform_device_count={devices}"
     env["XLA_FLAGS"] = f"{env.get('XLA_FLAGS', '')} {flag}".strip()
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (_SRC, env.get("PYTHONPATH")) if p)
-    last_err = None
-    for attempt in (1, 2):
-        try:
-            proc = subprocess.run(
-                [sys.executable, "-m", "benchmarks.sweep_scaling",
-                 "--worker", str(devices)],
-                capture_output=True, text=True, env=env,
-                timeout=SPAWN_TIMEOUT_S,
-                cwd=os.path.dirname(os.path.dirname(
-                    os.path.abspath(__file__))))
-        except subprocess.TimeoutExpired as exc:
-            last_err = (f"timed out after {SPAWN_TIMEOUT_S}s "
-                        f"(attempt {attempt}):\n{exc.stdout or ''}\n"
-                        f"{exc.stderr or ''}")
-            continue
-        if proc.returncode != 0:
-            last_err = (f"exit {proc.returncode} (attempt {attempt}):\n"
-                        f"{proc.stdout}\n{proc.stderr}")
-            continue
-        return json.loads(proc.stdout.strip().splitlines()[-1])
-    raise RuntimeError(
-        f"sweep_scaling worker d={devices} failed twice; last: {last_err}")
+    return run_json_worker(
+        [sys.executable, "-m", "benchmarks.sweep_scaling",
+         "--worker", str(devices)],
+        label=f"sweep_scaling worker d={devices}", env=env,
+        timeout_s=SPAWN_TIMEOUT_S,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def run(fast: bool = True):

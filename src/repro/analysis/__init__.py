@@ -8,7 +8,8 @@ table and rationale):
 * :mod:`repro.analysis.purity` — jit/scan purity of traced functions
   (JIT001–JIT005);
 * :mod:`repro.analysis.registry` — ``STRATEGIES`` / ``SCENARIOS`` /
-  time-model / DESIGN.md §3b coverage-matrix lockstep (REG001–REG005);
+  time-model / DESIGN.md §3b coverage-matrix / parity-matrix COVERAGE
+  lockstep (REG001–REG006);
 * :mod:`repro.analysis.robustness` — swallowed exceptions and
   non-atomic artifact writes (ROB001–ROB002).
 
@@ -23,8 +24,8 @@ from .cli import analyze, main
 from .findings import RULES, Finding, filter_suppressed, parse_pragmas
 from .passes import ModuleSource, load_module
 from .purity import run_purity_pass, traced_functions
-from .registry import (collect_registered, parse_design_tables,
-                       run_registry_pass)
+from .registry import (collect_registered, parse_coverage_table,
+                       parse_design_tables, run_registry_pass)
 from .rng import run_rng_pass
 from .robustness import run_robustness_pass
 
@@ -33,5 +34,5 @@ __all__ = [
     "filter_suppressed", "ModuleSource", "load_module",
     "run_rng_pass", "run_purity_pass", "traced_functions",
     "run_registry_pass", "collect_registered", "parse_design_tables",
-    "run_robustness_pass",
+    "parse_coverage_table", "run_robustness_pass",
 ]

@@ -50,6 +50,9 @@ RULES: Dict[str, str] = {
               "is not registered in SCENARIOS",
     "REG005": "SCENARIOS factory references a time-model factory that "
               "does not exist in repro.core.time_models",
+    "REG006": "STRATEGIES entry and the parity-matrix COVERAGE table "
+              "(tests/test_strategy_matrix.py) drifted apart — every "
+              "registration needs an engine-coverage row and vice versa",
     "ROB001": "bare except / `except Exception: pass` in engine or "
               "launch code silently swallows failures the degradation "
               "ladder should record",

@@ -1,4 +1,4 @@
-"""Registry/coverage cross-check pass: REG001 – REG005.
+"""Registry/coverage cross-check pass: REG001 – REG006.
 
 Statically (no imports executed) collects:
 
@@ -12,13 +12,20 @@ Statically (no imports executed) collects:
   methods) in ``core/time_models.py``;
 * the DESIGN.md §3b *coverage matrix* (markdown table whose first header
   cell starts with ``strategy``) and *scenario table* (first header cell
-  ``scenario``), both searched inside the §3b section.
+  ``scenario``), both searched inside the §3b section;
+* the parity-matrix test's ``COVERAGE`` dict literal in
+  ``tests/test_strategy_matrix.py`` (REG006) — the engine-parity
+  declaration every registered strategy must carry.
 
 and reports drift in either direction. Matrix rows may group
 strategies with ``/`` (``sync/msync``) and carry parenthesized
 qualifiers — ``deadline (serial — by design)`` parses as ``deadline``.
-Registry findings are structural, not line-local: they have no pragma
-escape — fix the matrix or the registry.
+REG006 adds the registry ↔ COVERAGE legs (both directions); together
+with REG001/REG002's registry ↔ DESIGN-matrix legs that closes the
+triangle, so the code, the parity tests and the docs cannot drift
+apart pairwise. Registry findings are
+structural, not line-local: they have no pragma escape — fix the
+matrix or the registry.
 """
 
 from __future__ import annotations
@@ -32,7 +39,7 @@ from .findings import Finding
 from .passes import load_module
 
 __all__ = ["run_registry_pass", "collect_registered",
-           "parse_design_tables"]
+           "parse_design_tables", "parse_coverage_table"]
 
 _SECTION_RE = re.compile(r"^##\s+§3b\b", re.MULTILINE)
 _NEXT_SECTION_RE = re.compile(r"^##\s+(?!#)", re.MULTILINE)
@@ -120,6 +127,28 @@ def parse_design_tables(design_path: Path):
     return matrix, scen
 
 
+def parse_coverage_table(path: Path) -> Optional[Dict[str, int]]:
+    """``{name: lineno}`` from the parity-matrix test's ``COVERAGE``
+    dict literal (string keys only). ``None`` when the module defines no
+    such literal — the caller emits a structural REG006 instead of
+    per-name noise."""
+    mod = load_module(path)
+    for node in mod.tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == "COVERAGE"
+                   for t in node.targets):
+            continue
+        if not isinstance(node.value, ast.Dict):
+            return None
+        out: Dict[str, int] = {}
+        for key in node.value.keys:
+            if isinstance(key, ast.Constant) and isinstance(key.value, str):
+                out[key.value] = key.lineno
+        return out
+    return None
+
+
 def _time_model_names(path: Path) -> Tuple[Set[str], Dict[str, Set[str]]]:
     """Top-level def/class names + per-class attribute names."""
     mod = load_module(path)
@@ -158,7 +187,9 @@ def run_registry_pass(root: Path, *,
                       strategies_path: Optional[Path] = None,
                       scenarios_path: Optional[Path] = None,
                       time_models_path: Optional[Path] = None,
-                      design_path: Optional[Path] = None) -> List[Finding]:
+                      design_path: Optional[Path] = None,
+                      matrix_test_path: Optional[Path] = None
+                      ) -> List[Finding]:
     root = Path(root)
     strategies_path = strategies_path or (
         root / "src/repro/core/strategies.py")
@@ -166,6 +197,8 @@ def run_registry_pass(root: Path, *,
     time_models_path = time_models_path or (
         root / "src/repro/core/time_models.py")
     design_path = design_path or (root / "DESIGN.md")
+    matrix_test_path = matrix_test_path or (
+        root / "tests/test_strategy_matrix.py")
     findings: List[Finding] = []
 
     missing = [p for p in (strategies_path, scenarios_path,
@@ -220,6 +253,39 @@ def run_registry_pass(root: Path, *,
                 rel_design, lineno, "REG004",
                 f"scenario-table row names scenario {name!r} which is "
                 f"not registered in SCENARIOS"))
+
+    # REG006: the parity-matrix COVERAGE table closes the triangle —
+    # registry <-> COVERAGE and COVERAGE <-> DESIGN matrix, both ways
+    rel_matrix = str(matrix_test_path)
+    if not matrix_test_path.exists():
+        findings.append(Finding(
+            rel_matrix, 1, "REG006",
+            "parity-matrix test (COVERAGE engine table) missing — every "
+            "registered strategy must declare its engine parity there"))
+        coverage: Dict[str, int] = {}
+    else:
+        parsed = parse_coverage_table(matrix_test_path)
+        if parsed is None:
+            findings.append(Finding(
+                rel_matrix, 1, "REG006",
+                "no COVERAGE dict literal of string keys found in the "
+                "parity-matrix test"))
+            coverage = {}
+        else:
+            coverage = parsed
+    if coverage:
+        for name, lineno in sorted(strategies.items()):
+            if name not in coverage:
+                findings.append(Finding(
+                    rel_strat, lineno, "REG006",
+                    f"strategy {name!r} registered here but absent from "
+                    f"the parity-matrix COVERAGE table"))
+        for name, lineno in sorted(coverage.items()):
+            if name not in strategies:
+                findings.append(Finding(
+                    rel_matrix, lineno, "REG006",
+                    f"COVERAGE row names strategy {name!r} which is not "
+                    f"registered in STRATEGIES"))
 
     # REG005: every time_models name the scenario factories touch exists
     top, class_attrs = _time_model_names(time_models_path)

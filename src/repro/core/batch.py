@@ -229,11 +229,12 @@ def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
       ``>= K * n`` for Malenia), except timing-only m-sync, which runs
       the round-vectorized fast path at ``np_elem`` per S*K*n element.
     * vectorized — ``vec_elem`` per element (m-sync timing only).
-    * jax round scans (m-sync / Rennala / Malenia) — ``jax_elem`` per
-      scanned element plus one ``jit_compile`` for the closure-compiled
-      programs (the FixedTimes timing m-sync program is module-cached:
-      no compile term).
-    * jax arrival scan (Async / Ringmaster) — ``pool_elem`` per
+    * jax round scans (m-sync / Rennala / Malenia / Ringleader) —
+      ``jax_elem`` per scanned element plus one ``jit_compile`` for the
+      closure-compiled programs (the FixedTimes timing m-sync program
+      is module-cached: no compile term). Ringleader prices its single
+      global chain tensor plus the round scan at ``2 * work``.
+    * jax arrival scan (Async / Ringmaster / OptimalASGD) — ``pool_elem`` per
       renewal-chain pool element (the same pool the engine would draw,
       via :func:`repro.core.batch_jax.arrival_scan_work`) plus
       ``scan_step`` per window arrival when a scan is needed
@@ -266,27 +267,27 @@ def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
             return work * C["np_elem"]
         if kind == "async":
             events = float(K)
-        elif kind == "ringmaster":
+        elif kind in ("ringmaster", "optimal_asgd"):
             md = int(getattr(strategy, "max_delay", 1))
             events = K * (1.0 + float(np.sqrt(n / (md + 1.0))))
         elif kind == "rennala":
             events = float(K) * max(int(getattr(strategy, "batch", 1)), 1)
-        else:                       # malenia: every worker >= 1 per round
+        else:           # malenia/ringleader: every worker >= 1 per round
             events = float(K) * n
         return S * events * C["heap_event"]
     if backend not in ("jax", "jax_sharded"):
         raise ValueError(f"no cost model for backend {backend!r}")
     shard = 1.0
     if backend == "jax_sharded" and kind in ("msync", "async",
-                                             "ringmaster"):
+                                             "ringmaster", "optimal_asgd"):
         # rennala/malenia have no sharded program (the sweep falls back
         # to the per-point jax engine), so only these kinds divide
         D = _device_count() if devices is None else int(devices)
         shard = float(max(min(D, S), 1))
     accel = C["accel_speedup"] if accelerator else 1.0
-    if kind in ("async", "ringmaster"):
+    if kind in ("async", "ringmaster", "optimal_asgd"):
         from .batch_jax import arrival_scan_work
-        ring = kind == "ringmaster"
+        ring = kind in ("ringmaster", "optimal_asgd")
         md = int(getattr(strategy, "max_delay", 0)) if ring else 0
         pool, window = arrival_scan_work(model, n, K, ringmaster=ring,
                                          max_delay=md)
@@ -298,6 +299,8 @@ def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
         elems = work * max(int(getattr(strategy, "batch", 1)), 1)
     elif kind == "malenia":
         elems = work * 2.0 * max(float(getattr(strategy, "S", 1.0)), 1.0)
+    elif kind == "ringleader":      # one global chain, round scan over it
+        elems = work * 2.0
     else:
         elems = work
     cost = elems * C["jax_elem"] / accel / shard
@@ -505,7 +508,8 @@ def _route_fastest(strat: AggregationStrategy, model, problem, K_pt: int,
         if tol_pt is None and K_pt > 0 and jax_supported(strat, model,
                                                          problem):
             devices = _device_count()
-            if (devices > 1 and kind in ("msync", "async", "ringmaster")
+            if (devices > 1 and kind in ("msync", "async", "ringmaster",
+                                         "optimal_asgd")
                     and info["work"] / devices >= JAX_MIN_WORK):
                 accel = _accelerator_present()
                 est = {"jax": estimate_backend_seconds(
@@ -549,7 +553,8 @@ def _route_fastest(strat: AggregationStrategy, model, problem, K_pt: int,
            "jax": estimate_backend_seconds("jax", strat, model, S, K_pt, n,
                                            accelerator=accel)}
     devices = _device_count()
-    if (devices > 1 and kind in ("msync", "async", "ringmaster")
+    if (devices > 1 and kind in ("msync", "async", "ringmaster",
+                                 "optimal_asgd")
             and info["work"] / devices >= JAX_MIN_WORK):
         # sharded sweep: only with real devices to spread over AND
         # enough per-device work to clear the same probe floor

@@ -40,7 +40,19 @@ family:
   benchmark/cross-check reference only), whose O(S·n) argmin per arrival
   and K serialized iterations made async the slowest device path.
   Per-worker start-iterate snapshots make the delayed-gradient math path
-  exact.
+  exact. **OptimalASGD** (the Maranjyan bounded-staleness rule with the
+  ``n``-scaled delay threshold and delay-adaptive stepsize) is the same
+  recursion with its own ``max_delay`` and the adaptive multiplier — no
+  new program, just routing.
+* **Ringleader** — a round-indexed ``lax.scan`` over ONE global renewal
+  chain per worker: Ringleader never idles and never discards, so each
+  worker's arrival times are a pure renewal process from ``t = 0`` and
+  the whole run consumes a single prefix-stable ``(S, n, L)`` chain
+  tensor. Round ``k`` ends at ``T_k = max_i`` (worker ``i``'s first
+  chain entry past ``T_{k-1}``) — the waste-free "everyone contributed"
+  predicate — and the serial engine's version bookkeeping bounds
+  staleness by one round, so the math path carries only
+  ``x^{k-1}``/``x^k`` plus the previous round's triggering worker.
 
 Time models: :class:`FixedTimes` (no RNG), any
 :class:`~repro.core.time_models.SubExponentialTimes` carrying a
@@ -82,7 +94,8 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from .strategies import (AggregationStrategy, Async, Malenia, MSync,
-                         Rennala, Ringmaster, Trace)
+                         OptimalASGD, Rennala, Ringleader, Ringmaster,
+                         Trace)
 from .time_models import FixedTimes, SubExponentialTimes, UniversalModel
 
 __all__ = ["JaxProblem", "quadratic_worst_case_jax", "simulate_batch_jax",
@@ -179,6 +192,10 @@ def _classify(strategy: AggregationStrategy) -> Optional[str]:
         return "async"
     if type(strategy) is Ringmaster:
         return "ringmaster"
+    if type(strategy) is OptimalASGD:
+        return "optimal_asgd"
+    if type(strategy) is Ringleader:
+        return "ringleader"
     return None
 
 
@@ -199,7 +216,8 @@ def _check_supported(strategy: AggregationStrategy, model, problem) -> str:
     if kind is None:
         raise NotImplementedError(
             f"jax backend supports the unmodified m-sync family, Rennala, "
-            f"Malenia (homogeneous oracle) and Async/Ringmaster, not "
+            f"Malenia (homogeneous oracle), Async/Ringmaster and "
+            f"Ringleader/OptimalASGD, not "
             f"{strategy.name!r}; use backend='serial'")
     if not _model_supported(model):
         raise NotImplementedError(
@@ -888,6 +906,149 @@ def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
         f"simulate_batch_jax or use backend='serial'")
 
 
+def _ringleader_grad_fn(problem, n, L):
+    """Ringleader math update: ``(1/n) sum_i (1/B_i) sum_{j<B_i} g_ij``
+    — the Malenia count-compacted slot loop with one twist: slot 0 (each
+    worker's FIRST in-round arrival) evaluates at the previous iterate
+    ``x^{k-1}`` (``x^k`` for the worker that triggered the previous
+    round's step — it alone restarted at the fresh iterate), all later
+    slots at ``x^k``. That two-point rule is exact, not an
+    approximation: the serial engine restarts every worker at the
+    current iterate on every (always-accepted) arrival, and every worker
+    delivers at least once per round, so staleness never exceeds one
+    round."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    widx = jnp.arange(n)
+
+    def upd(x_prev, x_cur, trig_prev, B, round_keys):
+        slot_keys = jax.vmap(lambda k: jax.random.split(k, L))(round_keys)
+        w = 1.0 / (jnp.maximum(B, 1).astype(x_cur.dtype) * n)  # (S, n)
+        Bmax = jnp.max(B)
+        first_pt = jnp.where(
+            (widx[None, :] == trig_prev[:, None])[..., None],
+            x_cur[:, None, :], x_prev[:, None, :])             # (S, n, d)
+        later_pt = jnp.broadcast_to(x_cur[:, None, :], first_pt.shape)
+
+        def cond(c):
+            return c[0] < Bmax
+
+        def body(c):
+            j, acc = c
+            kcol = slot_keys[:, j]                             # (S, 2)
+            gk = jax.vmap(lambda k: jax.random.split(k, n))(kcol)
+            pts = jnp.where(j == 0, first_pt, later_pt)
+            g = jax.vmap(jax.vmap(problem.stoch_grad, (0, 0)),
+                         (0, 0))(pts, gk)                      # (S, n, d)
+            wj = jnp.where(j < B, w, 0.0)
+            return j + 1, acc + (g * wj[..., None]).sum(axis=1)
+
+        _, out = lax.while_loop(cond, body,
+                                (jnp.zeros((), jnp.int32),
+                                 jnp.zeros_like(x_cur)))
+        return out
+
+    return upd
+
+
+def _ringleader_run(model, problem, n, S, K, gamma, seeds, chain_len=None):
+    """Ringleader as a round-indexed ``lax.scan`` over ONE global
+    renewal chain per worker (see module doc): workers never idle and
+    never discard, so their arrival times are pure renewal processes
+    from ``t = 0`` and the whole run consumes a single prefix-stable
+    ``(S, n, L)`` chain tensor from :func:`_chain_builder` — no
+    per-round redraw. Round ``k`` ends at ``T_k = max_i`` (worker
+    ``i``'s first chain entry past ``T_{k-1}``); worker ``i``
+    contributes the ``B_i >= 1`` entries in ``(T_{k-1}, T_k]`` and the
+    pointer update is pure counting (``newp = #{entries <= T_k}``).
+    Ties at the round end break by worker index (the backend's
+    documented contract). A pointer reaching ``L`` means the chain
+    tensor may hide arrivals inside the round — the run is flagged and
+    retried with doubled chains (prefix stability keeps completed
+    rounds bitwise identical across retries), then raises."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    math = problem is not None
+    if chain_len:
+        L0 = int(chain_len)
+    else:
+        # expected global arrivals per round: every worker delivers ~
+        # rate_i / min(rate) times while the slowest delivers once
+        if isinstance(model, UniversalModel):
+            span = float(model.grid[-1] - model.grid[0]) or 1.0
+            rates = np.maximum(
+                np.asarray(model.cum[:, -1], dtype=float) / span, 1e-9)
+        else:
+            taus = np.asarray(model.mean_times(), dtype=float)
+            rates = 1.0 / np.maximum(taus, 1e-12)
+        per_round = float(rates.sum() / max(rates.min(), 1e-12))
+        fluct = (1.0 if isinstance(model, (FixedTimes, UniversalModel))
+                 else 1.0 + float(np.log(max(n, 1))))
+        L0 = _chain_plan(model, n, int(np.ceil(K * per_round * fluct)))
+    keys0, x_init = _keys_and_x(problem, S, n, seeds)
+
+    def attempt(L):
+        chains = _chain_builder(model, S, n, L)
+        upd_fn = _ringleader_grad_fn(problem, n, L) if math else None
+
+        def run(keys):
+            sub0 = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
+            ch = chains(sub0[:, 1])                # (S, n, L) absolute
+
+            def step(carry, _):
+                p, comp, x_prev, x_cur, trig, keys, bad = carry
+                sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
+                keys = sub[:, 0]
+                # entry p_i is worker i's first arrival past T_{k-1}
+                nxt = jnp.take_along_axis(
+                    ch, jnp.minimum(p, L - 1)[..., None], axis=2)[..., 0]
+                T = nxt.max(axis=1)
+                trig_new = nxt.argmax(axis=1).astype(jnp.int32)
+                newp = (ch <= T[:, None, None]).sum(axis=-1,
+                                                    dtype=jnp.int32)
+                B = newp - p
+                bad = bad | (newp >= L).any(axis=1)
+                comp = comp + B.sum(axis=1, dtype=jnp.int32)
+                if math:
+                    g = upd_fn(x_prev, x_cur, trig, B, sub[:, 1])
+                    x_new = x_cur - gamma * g
+                    val = jax.vmap(problem.f)(x_new)
+                    gn = jax.vmap(
+                        lambda xx: jnp.sum(problem.grad(xx) ** 2))(x_new)
+                else:
+                    x_new = x_cur
+                    val = gn = jnp.zeros(S)
+                return (newp, comp, x_cur, x_new, trig_new, keys, bad), \
+                    (T, val, gn)
+
+            # trig = -1: round 0 has no previous trigger and x_prev ==
+            # x_cur == x0, so the first-slot rule is vacuous
+            init = (jnp.zeros((S, n), jnp.int32), jnp.zeros(S, jnp.int32),
+                    x_init, x_init, jnp.full(S, -1, jnp.int32),
+                    sub0[:, 0], jnp.zeros(S, bool))
+            (_, comp, _, x, _, _, bad), (T, val, gn) = lax.scan(
+                step, init, None, length=K)
+            return comp, x, T, val, gn, bad
+
+        return jax.block_until_ready(jax.jit(run)(keys0))
+
+    L = L0
+    for _ in range(4):
+        comp, x, T, val, gn, bad = attempt(L)
+        if not bool(np.any(np.asarray(bad))):
+            return comp, x, T, val, gn, comp   # waste-free: used == comp
+        L *= 2                                 # outran the chains: retry
+    raise RuntimeError(
+        f"ringleader jax engine outran its {L // 2}-entry renewal chains "
+        f"even after doubling retries (extreme speed heterogeneity?); "
+        f"pass a larger async_chain to simulate_batch_jax or use "
+        f"backend='serial'")
+
+
 # --------------------------------------------------------------------------
 # Async / Ringmaster: the renewal-chain arrival-scan engine
 # --------------------------------------------------------------------------
@@ -1522,17 +1683,21 @@ def simulate_batch_jax(strategy: AggregationStrategy,
         comp, x, T, val, gn, used = _malenia_run(
             model, problem, float(strategy.S), n, S, K, gamma, seeds,
             chain_len=malenia_chain)
+    elif kind == "ringleader":
+        comp, x, T, val, gn, used = _ringleader_run(
+            model, problem, n, S, K, gamma, seeds, chain_len=async_chain)
     else:
         used = K          # every server step consumes exactly one gradient
-        md = int(strategy.max_delay) if kind == "ringmaster" else K + 1
+        md = (int(strategy.max_delay)
+              if kind in ("ringmaster", "optimal_asgd") else K + 1)
         adaptive = bool(getattr(strategy, "delay_adaptive", False))
         if async_engine == "while":               # PR 4 reference engine
             comp, x, T, val, gn = _arrival_while_run(
                 model, problem, md, adaptive, n, S, K, gamma, seeds)
         elif async_engine == "scan":
             comp, x, T, val, gn = _chain_scan_run(
-                model, problem, kind == "ringmaster", md, adaptive,
-                n, S, K, gamma, seeds, chain_len=async_chain)
+                model, problem, kind in ("ringmaster", "optimal_asgd"),
+                md, adaptive, n, S, K, gamma, seeds, chain_len=async_chain)
         else:
             raise ValueError(f"unknown async_engine {async_engine!r}; "
                              "use 'scan' or 'while'")

@@ -57,6 +57,8 @@ __all__ = [
     "Rennala",
     "Malenia",
     "Ringmaster",
+    "Ringleader",
+    "OptimalASGD",
     "DeadlineSync",
     "Dropout",
     "STRATEGIES",
@@ -448,6 +450,66 @@ class Ringmaster(AggregationStrategy):
     def on_arrival(self, ev: Arrival, st: SimState) -> Decision:
         return Decision.STEP if ev.delay <= self.max_delay \
             else Decision.DISCARD
+
+
+@register_strategy("ringleader")
+class Ringleader(AggregationStrategy):
+    """Ringleader ASGD (modeled after arXiv 2509.22860): fully
+    asynchronous and waste-free — no arrival is ever discarded. Every
+    delivery joins its worker's buffer (evaluated at the snapshot the
+    worker started from) and the server steps as soon as every worker
+    has delivered at least once since the last step, averaging the
+    per-worker means ``(1/n) sum_i mean_j g_ij``. Workers restart
+    immediately on delivery, so staleness is bounded by one round
+    (delay <= 1) and ``gradients_used == gradients_computed``."""
+
+    name = "ringleader"
+    per_worker = True
+    needs_snapshots = True
+
+    def on_arrival(self, ev: Arrival, st: SimState) -> Decision:
+        B = st.counts.copy()
+        B[ev.worker] += 1
+        return Decision.STEP if B.min() >= 1 else Decision.ACCEPT
+
+    def combine(self, acc, st) -> np.ndarray:
+        B = np.maximum(st.counts, 1)
+        return sum(acc.per_worker[i] / B[i] for i in range(st.n)) / st.n
+
+
+@register_strategy("optimal_asgd")
+class OptimalASGD(AggregationStrategy):
+    """Optimal ASGD (the Maranjyan dissertation line, arXiv 2601.02523):
+    bounded-staleness Async SGD with the delay threshold resolved from
+    the worker count at bind time (``max_delay = ceil(delay_c * n)`` —
+    steady-state async delays concentrate near ``n``, so an n-scaled
+    threshold accepts the bulk and truncates only straggler tails) and
+    the delay-adaptive stepsize ``1 / (1 + delay/n)``."""
+
+    name = "optimal_asgd"
+    needs_snapshots = True
+    tol_on_record = True
+    delay_adaptive = True
+
+    def __init__(self, max_delay: Optional[int] = None,
+                 delay_c: float = 1.0) -> None:
+        if delay_c <= 0:
+            raise ValueError("delay_c must be positive")
+        self.delay_c = float(delay_c)
+        self._md_user = None if max_delay is None else int(max_delay)
+        self.max_delay = self._md_user if self._md_user is not None else 1
+
+    def bind(self, n: int) -> None:
+        self._n = n
+        self.max_delay = (self._md_user if self._md_user is not None
+                          else max(1, int(np.ceil(self.delay_c * n))))
+
+    def on_arrival(self, ev: Arrival, st: SimState) -> Decision:
+        return Decision.STEP if ev.delay <= self.max_delay \
+            else Decision.DISCARD
+
+    def stepsize(self, k: int, delay: int) -> float:
+        return 1.0 / (1.0 + delay / max(self._n, 1))
 
 
 # ---------------------------------------------------------------------------

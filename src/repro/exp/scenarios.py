@@ -18,7 +18,9 @@ fixed_linear          tau_i = tau1·i                          2.2 (Thm 2.3)
 fixed_power           tau_i = tau1·i^alpha                    2.2 (eq. 10)
 truncnorm             N(mu_i, sigma²) truncated to [0, ∞)     3.1
 exponential           Exp(lam), i.i.d. workers                3.1 (§3)
+exp_het               Exp(mean tau1·sqrt(i)) per worker       3.1 (§D.1)
 shifted_exp           mu_i + Exp(lam_i)                       3.1 (§D.1)
+fixed_bimodal         tau_i = tau1, one straggler tau1·R      2.2 (atlas)
 gamma                 Gamma(mean tau_i, common var)           3.1 (§K.3)
 uniform               Unif(tau_i − w, tau_i + w)              3.1 (§K.3/4)
 chi2                  chi²_{k_i}                              3.1 (§D.1)
@@ -94,6 +96,17 @@ def fixed_power(n: int, alpha: float = 1.2, tau1: float = 1.0):
     return FixedTimes.power_law(n, alpha, tau1)
 
 
+@register_scenario("fixed_bimodal")
+def fixed_bimodal(n: int, tau1: float = 1.0, straggler: float = 25.0):
+    """``n - 1`` identical fast workers plus ONE deterministic straggler
+    ``straggler`` times slower — the textbook regime where waiting for
+    everyone is catastrophic and discard-free async methods shine
+    (time-complexity atlas)."""
+    taus = np.full(n, tau1)
+    taus[-1] = tau1 * straggler
+    return FixedTimes(taus)
+
+
 # ------------------------------------------------------ sub-exponential (3.1)
 @register_scenario("truncnorm")
 def truncnorm(n: int, sigma: float = 0.5):
@@ -103,6 +116,18 @@ def truncnorm(n: int, sigma: float = 0.5):
 @register_scenario("exponential")
 def exponential(n: int, lam: float = 1.0):
     return exponential_times(lam, n)
+
+
+@register_scenario("exp_het")
+def exp_het(n: int, tau1: float = 1.0):
+    """Heterogeneous-RATE exponential workers: worker ``i`` is
+    Exp with mean ``tau1 * sqrt(i)`` (zero shift). The memoryless
+    heterogeneous regime the time-complexity atlas probes for the
+    paper's "async may be necessary" boundary — same sqrt speed ladder
+    as ``fixed_sqrt``/``shifted_exp`` but with all the mass in the
+    random part."""
+    means = tau1 * np.sqrt(np.arange(1, n + 1))
+    return shifted_exponential_times(np.zeros(n), 1.0 / means)
 
 
 @register_scenario("shifted_exp")

@@ -61,7 +61,7 @@ __all__ = ["SweepPoint", "sweep_device_count", "is_coordinator",
 
 #: jax engine families with a sharded program (everything else falls
 #: back to the per-point unsharded jax engine inside the sweep)
-SHARDED_KINDS = ("msync", "async", "ringmaster")
+SHARDED_KINDS = ("msync", "async", "ringmaster", "optimal_asgd")
 
 
 @dataclasses.dataclass
@@ -126,9 +126,9 @@ def _bucket_key(kind: Optional[str], point: SweepPoint, math: bool):
         if math:
             return ("msync-math", int(point.K), int(point.strategy._m))
         return ("msync-timing", int(point.K))
-    if kind in ("async", "ringmaster"):
-        md = int(point.strategy.max_delay) if kind == "ringmaster" \
-            else int(point.K) + 1
+    if kind in ("async", "ringmaster", "optimal_asgd"):
+        md = int(point.strategy.max_delay) \
+            if kind in ("ringmaster", "optimal_asgd") else int(point.K) + 1
         adaptive = bool(getattr(point.strategy, "delay_adaptive", False))
         return ("arrival", kind, int(point.K), md, adaptive,
                 float(point.gamma) if math else 0.0)
@@ -219,9 +219,9 @@ def run_sharded_sweep(points: Sequence[SweepPoint], model, problem,
         else:                                       # arrival scan
             _, kind, K, md, adaptive, gamma = bkey
             comp, x, T, val, gn = bj._chain_scan_run(
-                model, problem, kind == "ringmaster", md, adaptive, n,
-                len(unit_seeds), K, gamma, unit_seeds, mesh=mesh,
-                meta=meta)
+                model, problem, kind in ("ringmaster", "optimal_asgd"),
+                md, adaptive, n, len(unit_seeds), K, gamma, unit_seeds,
+                mesh=mesh, meta=meta)
             comp, T = np.asarray(comp), np.asarray(T)
             for i, p in enumerate(bpoints):
                 c = slice(i * S, (i + 1) * S)

@@ -358,6 +358,13 @@ def exponential_times(lam, n):
     return n
 """
 
+_MINI_MATRIX = """
+COVERAGE = {
+    "msync": ("serial",),
+    "malenia": ("serial", "jax"),
+}
+"""
+
 _MINI_DESIGN = """# design
 
 ## §3b Engine coverage
@@ -387,11 +394,13 @@ def mini_repo(tmp_path):
         "scenarios": tmp_path / "scenarios.py",
         "time_models": tmp_path / "time_models.py",
         "design": tmp_path / "DESIGN.md",
+        "matrix": tmp_path / "test_strategy_matrix.py",
     }
     paths["strategies"].write_text(_MINI_STRATEGIES)
     paths["scenarios"].write_text(_MINI_SCENARIOS)
     paths["time_models"].write_text(_MINI_TIME_MODELS)
     paths["design"].write_text(_MINI_DESIGN)
+    paths["matrix"].write_text(_MINI_MATRIX)
     return paths
 
 
@@ -401,7 +410,8 @@ def _run_mini(paths):
         strategies_path=paths["strategies"],
         scenarios_path=paths["scenarios"],
         time_models_path=paths["time_models"],
-        design_path=paths["design"])
+        design_path=paths["design"],
+        matrix_test_path=paths["matrix"])
 
 
 def test_registry_mini_repo_clean(mini_repo):
@@ -423,8 +433,10 @@ def test_reg002_matrix_row_without_registration(mini_repo):
     mini_repo["strategies"].write_text(
         strat.replace('@register_strategy("malenia")\n', ""))
     findings = _run_mini(mini_repo)
-    assert _rules(findings) == ["REG002"]
-    assert "malenia" in findings[0].message
+    # the dropped registration orphans BOTH tables that still name it:
+    # the DESIGN matrix row (REG002) and the parity COVERAGE row (REG006)
+    assert _rules(findings) == ["REG002", "REG006"]
+    assert all("malenia" in f.message for f in findings)
 
 
 def test_reg003_scenario_missing_from_table(mini_repo):
@@ -465,6 +477,43 @@ def test_reg005_import_of_missing_name(mini_repo):
     assert "gamma_times" in findings[0].message
 
 
+def test_reg006_registration_without_coverage_row(mini_repo):
+    """ISSUE 9: a STRATEGIES entry with no parity-matrix COVERAGE row is
+    REG006 drift (pointing at the registration line)."""
+    matrix = mini_repo["matrix"].read_text()
+    mini_repo["matrix"].write_text(
+        matrix.replace('    "malenia": ("serial", "jax"),\n', ""))
+    findings = _run_mini(mini_repo)
+    assert _rules(findings) == ["REG006"]
+    assert "malenia" in findings[0].message
+    assert findings[0].path == str(mini_repo["strategies"])
+
+
+def test_reg006_coverage_row_without_registration(mini_repo):
+    matrix = mini_repo["matrix"].read_text()
+    mini_repo["matrix"].write_text(matrix.replace(
+        '"malenia": ("serial", "jax"),',
+        '"malenia": ("serial", "jax"),\n    "ghost": ("serial",),'))
+    findings = _run_mini(mini_repo)
+    assert _rules(findings) == ["REG006"]
+    assert "ghost" in findings[0].message
+    assert findings[0].path == str(mini_repo["matrix"])
+
+
+def test_reg006_missing_matrix_test_is_structural(mini_repo):
+    mini_repo["matrix"].unlink()
+    findings = _run_mini(mini_repo)
+    assert _rules(findings) == ["REG006"]
+    assert "missing" in findings[0].message
+
+
+def test_reg006_no_coverage_literal_is_structural(mini_repo):
+    mini_repo["matrix"].write_text("COVERAGE = build_coverage()\n")
+    findings = _run_mini(mini_repo)
+    assert _rules(findings) == ["REG006"]
+    assert "dict literal" in findings[0].message
+
+
 def test_missing_matrix_table_is_structural_finding(mini_repo):
     mini_repo["design"].write_text("# design\n\n## §3b Engines\n\nprose\n")
     rules = _rules(_run_mini(mini_repo))
@@ -483,8 +532,32 @@ def test_live_design_tables_cover_all_registrations():
     matrix, scen = parse_design_tables(ROOT / "DESIGN.md")
     assert matrix is not None and scen is not None
     assert set(matrix) == {"sync", "msync", "auto_m", "async", "rennala",
-                           "malenia", "ringmaster", "deadline", "dropout"}
-    assert len(scen) == 18          # 12 base regimes + 6 §3c fault regimes
+                           "malenia", "ringmaster", "ringleader",
+                           "optimal_asgd", "deadline", "dropout"}
+    assert len(scen) == 20          # 14 base regimes + 6 §3c fault regimes
+
+
+def test_live_coverage_table_matches_design_matrix():
+    """The parity COVERAGE table and the DESIGN §3b matrix name exactly
+    the same strategies (the REG006 + REG001/REG002 triangle, spelled
+    out directly)."""
+    from repro.analysis import parse_coverage_table
+    matrix, _ = parse_design_tables(ROOT / "DESIGN.md")
+    coverage = parse_coverage_table(ROOT / "tests/test_strategy_matrix.py")
+    assert coverage is not None
+    assert set(coverage) == set(matrix)
+
+
+def test_deleting_live_coverage_row_fails_crosscheck(tmp_path):
+    """ISSUE 9 acceptance: dropping a COVERAGE row from the live parity
+    test breaks the REG006 cross-check."""
+    src = (ROOT / "tests/test_strategy_matrix.py").read_text()
+    mutated = tmp_path / "test_strategy_matrix.py"
+    mutated.write_text(src.replace(
+        '    "ringleader": ("serial", "jax"),\n', ""))
+    findings = run_registry_pass(ROOT, matrix_test_path=mutated)
+    assert any(f.rule == "REG006" and "ringleader" in f.message
+               for f in findings)
 
 
 def test_deleting_live_matrix_row_fails_crosscheck(tmp_path):

@@ -1,0 +1,109 @@
+"""Property tests for the two engine-load-bearing RNG/sort contracts.
+
+Real ``hypothesis`` in CI; the deterministic conftest stand-in in the
+container (same ``@given``/``strategies`` subset either way):
+
+* :func:`repro.core.time_models.jax_chain_draws` — **prefix stability**:
+  row ``(s, j)`` is a pure function of ``(seed key, slot j)`` via
+  ``fold_in``, so growing ``L`` appends rows and never reshuffles
+  existing ones. The arrival-scan and ringleader engines' chain-doubling
+  retries rely on this to keep already-completed work bitwise identical
+  across retries.
+* :func:`repro.kernels.order_stats.smallest_k` — **tie contract**: the
+  ``k`` smallest per row in ascending order with ties broken by flat
+  index (stable), bitwise equal between the host (NumPy stable argsort)
+  and device (``jnp.argsort(stable=True)``) paths. The async pool merge
+  orders simultaneous arrivals by (worker, arrival index) through
+  exactly this property.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.time_models import exponential_times, jax_chain_draws
+from repro.kernels.order_stats import smallest_k
+
+
+def _chain_keys(seeds):
+    return jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+
+
+# ------------------------------------------------------- jax_chain_draws
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 12), st.integers(1, 12),
+       st.lists(st.integers(0, 2 ** 20), min_size=1, max_size=4))
+def test_chain_draws_prefix_stable(n, L1, extra, seeds):
+    """Growing L only appends rows: the shorter chain is a bitwise
+    prefix of the longer one, per seed and per worker."""
+    sampler = exponential_times(1.0, n).jax_sampler
+    keys = _chain_keys(seeds)
+    short = np.asarray(jax_chain_draws(keys, L1, sampler))
+    long = np.asarray(jax_chain_draws(keys, L1 + extra, sampler))
+    assert short.shape == (len(seeds), L1, n)
+    np.testing.assert_array_equal(short, long[:, :L1])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 10),
+       st.lists(st.integers(0, 2 ** 20), min_size=2, max_size=4),
+       st.integers(0, 3))
+def test_chain_draws_sweep_independent(n, L, seeds, pick):
+    """Row (s, j) depends only on (seed key, j): a seed's chain in a
+    multi-seed sweep equals its singleton-sweep chain bitwise, and
+    equals the per-slot fold_in spelling of the contract."""
+    pick = pick % len(seeds)
+    sampler = exponential_times(1.0, n).jax_sampler
+    batch = np.asarray(jax_chain_draws(_chain_keys(seeds), L, sampler))
+    solo = np.asarray(jax_chain_draws(_chain_keys([seeds[pick]]), L,
+                                      sampler))
+    np.testing.assert_array_equal(batch[pick], solo[0])
+    key = jax.random.PRNGKey(int(seeds[pick]))
+    for j in (0, L - 1):
+        row = np.asarray(sampler(jax.random.fold_in(key, j)))
+        np.testing.assert_array_equal(batch[pick, j], row)
+
+
+# ------------------------------------------------------------ smallest_k
+def _tie_heavy_rows(flat, rows):
+    """Reshape a drawn flat list into a (rows, cols) float array; the
+    tiny sampled_from support set forces heavy ties."""
+    cols = len(flat) // rows
+    return np.asarray(flat[:rows * cols], dtype=np.float64).reshape(
+        rows, cols)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from([0.0, 0.5, 1.0, 1.0, 2.0]),
+                min_size=4, max_size=24),
+       st.integers(1, 4), st.integers(1, 24))
+def test_smallest_k_tie_contract(flat, rows, k):
+    """values ascending, indices = NumPy stable argsort prefix (ties by
+    flat index), and values == x[indices] — on tie-heavy rows."""
+    rows = max(1, min(rows, len(flat) // 2))
+    x = _tie_heavy_rows(flat, rows)
+    k = max(1, min(k, x.shape[1]))
+    vals, idx = smallest_k(jnp.asarray(x), k)
+    vals, idx = np.asarray(vals), np.asarray(idx)
+    ref_idx = np.argsort(x, axis=-1, kind="stable")[:, :k]
+    np.testing.assert_array_equal(idx, ref_idx)
+    np.testing.assert_array_equal(vals,
+                                  np.take_along_axis(x, ref_idx, axis=-1))
+    assert (np.diff(vals, axis=-1) >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(0.0, 4.0), min_size=4, max_size=24),
+       st.integers(1, 24), st.booleans())
+def test_smallest_k_host_device_agree(flat, k, host_first):
+    """The host (NumPy) and device (jnp stable argsort) paths are
+    bitwise interchangeable — same values AND same tie-broken indices."""
+    x = _tie_heavy_rows(flat, 2)
+    k = max(1, min(k, x.shape[1]))
+    xj = jnp.asarray(x)
+    order = [True, False] if host_first else [False, True]
+    (v1, i1), (v2, i2) = (smallest_k(xj, k, prefer_host=h) for h in order)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))

@@ -1,0 +1,172 @@
+"""Auto-enumerated cross-engine parity matrix (ISSUE 9 satellite).
+
+Every entry of :data:`repro.core.strategies.STRATEGIES` must declare its
+engine coverage in :data:`COVERAGE` below — the module-level check makes
+pytest COLLECTION fail the moment someone registers a strategy without
+deciding its parity story, so a missing engine surfaces before review,
+not during it. The parametrized tests then *enforce* each declared cell:
+
+* ``serial`` — ``simulate_batch(seeds=[s], rng_scheme="stream")`` is
+  bitwise the scalar ``simulate(seed=s)`` (timing fields exact,
+  including RNG-stream parity on random models).
+* ``vectorized`` — the round-vectorized engine under
+  ``rng_scheme="stream"`` is bitwise the scalar fast path (timing-only
+  unmodified m-sync, the only vectorized program).
+* ``jax`` — the device engine matches the serial event engine on
+  generic-position deterministic models under ``x64=True``: timing to
+  1e-9, gradient counts exactly, and the (noiseless-oracle) math path
+  iterates to 1e-9.
+
+The coverage table is ALSO machine-read: repcheck rule REG006
+(:mod:`repro.analysis`) cross-checks it against the registry and the
+DESIGN §3b matrix in both directions, so this file, the code and the
+docs cannot drift apart silently.
+"""
+
+import importlib
+
+import numpy as np
+import pytest
+
+from repro.core import (FixedTimes, quadratic_worst_case, simulate,
+                        simulate_batch, uniform_times)
+from repro.core.strategies import STRATEGIES
+
+#: strategy name -> engines with asserted parity ("serial" is the
+#: event-heap oracle; every registered strategy must run there).
+#: REG006 parses this literal — keep it a plain dict of string keys.
+COVERAGE = {
+    "sync": ("serial", "vectorized", "jax"),
+    "msync": ("serial", "vectorized", "jax"),
+    "auto_m": ("serial", "vectorized", "jax"),
+    "rennala": ("serial", "jax"),
+    "malenia": ("serial", "jax"),
+    "async": ("serial", "jax"),
+    "ringmaster": ("serial", "jax"),
+    "ringleader": ("serial", "jax"),
+    "optimal_asgd": ("serial", "jax"),
+    "deadline": ("serial",),
+    "dropout": ("serial",),
+}
+
+
+def _check_coverage(registered, coverage):
+    """The collection gate: every registration needs a coverage row and
+    every row a registration. Raises AssertionError (not a test skip) so
+    an uncovered strategy breaks collection of this whole module."""
+    unlisted = set(registered) - set(coverage)
+    assert not unlisted, (
+        f"strategies registered without an engine-coverage row in "
+        f"tests/test_strategy_matrix.py COVERAGE: {sorted(unlisted)} — "
+        f"declare their serial/vectorized/jax parity story")
+    stale = set(coverage) - set(registered)
+    assert not stale, (
+        f"COVERAGE rows without a registered strategy: {sorted(stale)}")
+
+
+_check_coverage(STRATEGIES, COVERAGE)
+
+_JAX_NAMES = sorted(n for n, eng in COVERAGE.items() if "jax" in eng)
+_VEC_NAMES = sorted(n for n, eng in COVERAGE.items()
+                    if "vectorized" in eng)
+
+
+def _generic_fixed(n, lo=0.5, hi=3.0, seed=42):
+    rng = np.random.default_rng(seed)
+    return FixedTimes(rng.uniform(lo, hi, n))
+
+
+# --------------------------------------------------------- serial (oracle)
+@pytest.mark.parametrize("name", sorted(COVERAGE))
+@pytest.mark.parametrize("model_fn", [
+    lambda: _generic_fixed(6, seed=3),
+    lambda: uniform_times(np.sqrt(np.arange(1, 7)), 0.3),
+], ids=["fixed", "uniform"])
+def test_serial_stream_bitwise_vs_scalar(name, model_fn):
+    """simulate_batch(seeds=[s], rng_scheme="stream") is bitwise the
+    scalar engine for every registered strategy — timing, counts and
+    RNG streams (random model included)."""
+    model = model_fn()
+    for s in (0, 9):
+        tb = simulate_batch(name, model, K=12, seeds=[s],
+                            rng_scheme="stream")
+        sc = simulate(STRATEGIES[name](), model, K=12, seed=s)
+        tr = tb.traces[0][0]
+        assert tr.total_time == sc.total_time
+        assert tr.gradients_used == sc.gradients_used
+        assert tr.gradients_computed == sc.gradients_computed
+        assert tr.iterations == sc.iterations
+
+
+# ------------------------------------------------------------- vectorized
+@pytest.mark.parametrize("name", _VEC_NAMES)
+def test_vectorized_stream_bitwise(name):
+    model = uniform_times(np.sqrt(np.arange(1, 9)), 0.4)
+    tb_v = simulate_batch(name, model, K=15, seeds=[0, 4],
+                          backend="vectorized", rng_scheme="stream")
+    assert tb_v.backend == "vectorized"
+    for s, tr in zip([0, 4], tb_v.traces[0]):
+        sc = simulate(STRATEGIES[name](), model, K=15, seed=s)
+        assert tr.total_time == sc.total_time
+        assert tr.gradients_used == sc.gradients_used
+        assert tr.gradients_computed == sc.gradients_computed
+
+
+# ------------------------------------------------------------ jax (timing)
+@pytest.mark.parametrize("name", _JAX_NAMES)
+def test_jax_timing_parity_1e9(name):
+    """Device engine vs serial event engine on a generic-position
+    deterministic model under x64: wall clock to 1e-9 relative,
+    gradient counts exactly."""
+    model = _generic_fixed(8, seed=11)
+    tb_j = simulate_batch(name, model, K=14, seeds=2, backend="jax",
+                          x64=True)
+    tb_s = simulate_batch(name, model, K=14, seeds=2, backend="serial")
+    np.testing.assert_allclose(tb_j.total_time, tb_s.total_time,
+                               rtol=1e-9)
+    np.testing.assert_array_equal(tb_j.stat("gradients_used"),
+                                  tb_s.stat("gradients_used"))
+    np.testing.assert_array_equal(tb_j.stat("gradients_computed"),
+                                  tb_s.stat("gradients_computed"))
+
+
+# -------------------------------------------------------------- jax (math)
+@pytest.mark.parametrize("name", _JAX_NAMES)
+def test_jax_math_parity_1e9(name):
+    """Noiseless-oracle (p=1) math path: jax iterates reproduce the
+    serial engine's recorded values and gradient norms to 1e-9 under
+    x64 on a generic-position model."""
+    from repro.core.batch_jax import quadratic_worst_case_jax
+    model = _generic_fixed(8, seed=11)
+    prob_np = quadratic_worst_case(d=16, p=1.0)
+    prob_jx = quadratic_worst_case_jax(d=16, p=1.0)
+    tb_s = simulate_batch(name, model, K=12, problem=prob_np, gamma=0.3,
+                          seeds=2, record_every=4, backend="serial")
+    tb_j = simulate_batch(name, model, K=12, problem=prob_jx, gamma=0.3,
+                          seeds=2, record_every=4, backend="jax",
+                          x64=True)
+    a, b = tb_s.traces[0][0], tb_j.traces[0][0]
+    np.testing.assert_allclose(a.times, b.times, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(a.values, b.values, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(a.grad_norms, b.grad_norms, rtol=1e-9,
+                               atol=1e-12)
+
+
+# ------------------------------------------------------- test-of-the-test
+def test_uncovered_registration_fails_collection():
+    """ISSUE 9 acceptance: registering a strategy without a COVERAGE row
+    must break this module at import (collection) time — demonstrated
+    both on the gate function and on a real module reload."""
+    with pytest.raises(AssertionError, match="without an engine-coverage"):
+        _check_coverage(set(COVERAGE) | {"brand_new_strategy"}, COVERAGE)
+    with pytest.raises(AssertionError, match="without a registered"):
+        _check_coverage(set(COVERAGE) - {"async"}, COVERAGE)
+    import test_strategy_matrix as self_mod
+    STRATEGIES["__uncovered_dummy__"] = object
+    try:
+        with pytest.raises(AssertionError,
+                           match="__uncovered_dummy__"):
+            importlib.reload(self_mod)
+    finally:
+        del STRATEGIES["__uncovered_dummy__"]
+        importlib.reload(self_mod)

@@ -15,7 +15,6 @@ device-count-agnostic, only the mesh size changes.
 
 import json
 import os
-import subprocess
 import sys
 import textwrap
 
@@ -333,16 +332,20 @@ _SUB_CODE = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow_subprocess
 def test_four_device_subprocess_lane():
+    """Runs through the shared benchmarks.subproc timeout+retry runner:
+    a hung XLA compile now fails the lane at the deadline instead of
+    stalling CI, and the cold-compile flake mode gets one warm retry."""
+    from benchmarks.subproc import run_json_worker
+
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=4",
                PYTHONPATH="src")
-    proc = subprocess.run([sys.executable, "-c", _SUB_CODE],
-                          capture_output=True, text=True, env=env,
+    out = run_json_worker([sys.executable, "-c", _SUB_CODE],
+                          label="4-device sharded-sweep lane", env=env,
                           cwd=os.path.dirname(os.path.dirname(
                               os.path.abspath(__file__))))
-    assert proc.returncode == 0, proc.stderr[-2000:]
-    out = json.loads(proc.stdout.strip().splitlines()[-1])
     assert out["devices"] == 4
     assert out["uneven_bitwise"] is True
     assert out["uneven_padded"] == 1          # 15 units -> 16 = 4 x 4
