@@ -38,6 +38,10 @@ REGIMES = [
     ("fixed", "fixed_sqrt", {}),
     ("bimodal", "fixed_bimodal", {}),
     ("exp_het", "exp_het", {}),
+    # the skewed-rate regime the ragged chain layout exists for: mean
+    # rates span n^alpha, so per-worker chain budgets differ by the
+    # same factor (benchmarks/chain_layout.py measures the layout win)
+    ("powerlaw", "exp_powerlaw", {}),
     # alpha=2.5 keeps the tail genuinely polynomial (R = inf) while the
     # wait-for-everyone strategies (Malenia, Ringleader) stay runnable
     # at smoke scale — alpha=1.5 spikes make single rounds cost

@@ -1,0 +1,145 @@
+"""Chain-layout lane: rectangular vs ragged vs windowed renewal pools.
+
+The regime this lane exists for is the power-law speed ladder
+(``exp_powerlaw``: worker ``i`` is Exp with mean ``i^alpha``): mean
+rates span ``n^alpha``, so the rectangular layout — every worker sized
+to the FASTEST worker's expected share of the arrival window — pays
+``n * max(L_i)`` pool elements where the ragged layout
+(:func:`repro.core.batch_jax._chain_plan_ragged`) pays ``sum(L_i) =
+O(arrivals)``. The lane measures three things on that grid:
+
+* **rect vs ragged pool** — deterministic element counts from the two
+  planners at the acceptance shape, gated one-sided at >= 3x (the ISSUE
+  acceptance criterion; observed ~15x at n=256, alpha=1.2) plus the
+  warm wall-clock ratio of the two engine modes as a conservative
+  floor;
+* **windowed vs cold-restart draws** — a deliberately starved uniform
+  chain budget forces the engine through its carried-state window
+  retries; the windowed engine draws only extensions
+  (``sum(drawn_slots)``) where a cold restart would re-draw the whole
+  grown pool every retry (``sum(cumulative totals)``). Both counts are
+  deterministic at fixed seeds, gated two-sided.
+
+Results MERGE into ``BENCH_simbatch.json`` (the lane runs after
+``simbatch_speed`` in CI): ratio lanes join the one-sided
+``speedup_vs_serial`` section, the deterministic element counts form
+the two-sided ``chain_layout`` section, and the lane's shape constants
+join ``meta``. The committed baseline in ``benchmarks/baselines/``
+gates all of it via ``benchmarks/perf_gate.py``.
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import make_strategy
+from repro.exp import make_scenario
+from repro.exp.runner import atomic_write_json
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_simbatch.json")
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(fast: bool = True):
+    import repro.core.batch_jax as bj
+
+    n, alpha = (256, 1.2) if fast else (1024, 1.2)
+    K = 800 if fast else 3000
+    S = 8
+    seeds = list(range(S))
+    model = make_scenario("exp_powerlaw", n, alpha=alpha)
+    strat = make_strategy("async")
+
+    # ---------------- deterministic planner accounting (exact, gated)
+    L_rect = bj._chain_plan(model, n, K)
+    rect_elems = L_rect * n
+    ragged_elems = int(bj._chain_plan_ragged(model, n, K).sum())
+    pool_ratio = rect_elems / ragged_elems
+
+    # ---------------------------- warm wall-clock: rect vs ragged mode
+    def engine(layout):
+        return bj.simulate_batch_jax(strat, model, K, seeds=seeds,
+                                     async_layout=layout)
+
+    engine("rect"), engine("ragged")                    # jit warmup
+    t_rect = min(_timed(lambda: engine("rect")) for _ in range(3))
+    t_ragged = min(_timed(lambda: engine("ragged")) for _ in range(3))
+    wall_ratio = t_rect / t_ragged
+
+    # -------------- windowed carried-state retries vs a cold restart
+    # starve a smaller shape so the engine must window (uniform budgets
+    # double per retry); the windowed engine draws only the extension
+    # each time — a cold restart would redraw the whole grown pool
+    nw, Kw, chain0 = 64, 400, 24
+    wmodel = make_scenario("exp_powerlaw", nw, alpha=alpha)
+    meta = {}
+    bj._chain_scan_run(wmodel, None, False, Kw + 1, False, nw, S, Kw,
+                       0.0, seeds, chain_len=chain0, meta=meta)
+    drawn = meta["drawn_slots"]                  # per-window extensions
+    windowed_elems = int(sum(drawn))
+    cold_restart_elems = int(sum(np.cumsum(drawn)))
+    windows = meta["windows"]
+
+    rows = [
+        (f"chain_layout/n={n}/alpha={alpha}/rect_pool_elems", rect_elems,
+         f"L={L_rect} per worker x n={n} (K={K} arrivals)"),
+        (f"chain_layout/n={n}/alpha={alpha}/ragged_pool_elems",
+         ragged_elems, f"sum of per-worker budgets, O(K)"),
+        ("chain_layout/ragged_vs_rect_pool", pool_ratio,
+         "acceptance: >= 3x fewer pool elements on the power-law grid"),
+        (f"chain_layout/n={n}/alpha={alpha}/rect_wall_s", t_rect,
+         f"S={S} warm"),
+        (f"chain_layout/n={n}/alpha={alpha}/ragged_wall_s", t_ragged,
+         f"speedup={wall_ratio:.1f}x (warm)"),
+        (f"chain_layout/windowed/n={nw}/drawn_elems", windowed_elems,
+         f"{windows} windows, extensions only: {drawn}"),
+        (f"chain_layout/windowed/n={nw}/cold_restart_elems",
+         cold_restart_elems,
+         f"what redrawing the grown pool each retry would cost "
+         f"({cold_restart_elems / max(windowed_elems, 1):.2f}x)"),
+    ]
+    assert pool_ratio >= 3.0, (
+        f"ragged layout only {pool_ratio:.1f}x over the rectangular "
+        f"pool on the power-law regime (need >= 3x)")
+    assert windows >= 2, (
+        f"chain_len={chain0} no longer starves the windowed engine at "
+        f"n={nw}, K={Kw} — the retry lane measured nothing")
+    assert cold_restart_elems > windowed_elems, \
+        "windowed engine drew as much as a cold restart would"
+
+    # merge into the simbatch artifact (CI runs this lane right after
+    # simbatch_speed; standalone runs create the file with just ours)
+    art = {}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as fh:
+            art = json.load(fh)
+    art.setdefault("meta", {}).update(
+        chain_n=n, chain_alpha=alpha, chain_K=K, chain_windowed_n=nw)
+    art.setdefault("speedup_vs_serial", {}).update(
+        chain_ragged_vs_rect_pool=pool_ratio,
+        chain_ragged_vs_rect_wall=wall_ratio)
+    art["chain_layout"] = {
+        "rect_pool_elems": float(rect_elems),
+        "ragged_pool_elems": float(ragged_elems),
+        "windowed_drawn_elems": float(windowed_elems),
+        "windowed_cold_restart_elems": float(cold_restart_elems),
+        "windowed_windows": float(windows),
+    }
+    atomic_write_json(BENCH_JSON, art)
+    return rows
+
+
+def main():
+    for name, val, derived in run():
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,7 +50,8 @@ therefore seeded *conservatively* — speedup entries are chosen so the
 ``simbatch_speed.py`` itself (jax 7.15 → floor 5x, counter 5.72 →
 floor 4x, async keyed 1.86 → floor 1.3x, arrival-scan chain 4.29 →
 floor 3x, routed-vs-alternative 1.43 → floor 1x, sharded-sweep dN
-3.571 → floor 2.5x), while simulated-output
+3.571 → floor 2.5x, chain-layout ragged pool 4.286 → floor 3x and
+ragged wall 1.5 → floor 1.05x), while simulated-output
 entries are exact simulator results (machine-independent, tight drift
 detectors — the fig8 grid is deterministic end to end). To tighten the
 speedup floors, regenerate the baseline ON THE RUNNER CLASS IT GATES

@@ -22,6 +22,9 @@ Modules:
   thm55_participation  Theorem 5.5 window under the rotating adversary
   simbatch_speed     simulate_batch jax >= 5x / counter >= 4x acceptance
                      smokes; writes the BENCH_simbatch.json perf baseline
+  chain_layout       rectangular vs ragged vs windowed renewal pools on
+                     the power-law regime (ragged >= 3x fewer elements);
+                     merges its lanes into BENCH_simbatch.json
   sweep_scaling      backend="jax_sharded" vs unsharded sweep speedup at
                      forced device counts (subprocess per XLA_FLAGS
                      setting); writes the BENCH_sweep.json perf baseline
@@ -46,11 +49,12 @@ import inspect
 import sys
 import time
 
-from . import (ablation_m_sweep, atlas, fault_frontier, fig5_quadratic,
-               fig8_grid, malenia_het, order_stats_speed, sec6_async_needed,
-               sec6_heterogeneous, sec53_gap, secj_R_estimation,
-               simbatch_speed, sweep_scaling, table_mstar, thm23_logfactor,
-               thm32_random, thm55_participation)
+from . import (ablation_m_sweep, atlas, chain_layout, fault_frontier,
+               fig5_quadratic, fig8_grid, malenia_het, order_stats_speed,
+               sec6_async_needed, sec6_heterogeneous, sec53_gap,
+               secj_R_estimation, simbatch_speed, sweep_scaling,
+               table_mstar, thm23_logfactor, thm32_random,
+               thm55_participation)
 
 MODULES = [
     ("fig5_quadratic", fig5_quadratic),
@@ -68,6 +72,7 @@ MODULES = [
     ("fault_frontier", fault_frontier),
     ("atlas", atlas),
     ("simbatch_speed", simbatch_speed),
+    ("chain_layout", chain_layout),
     ("order_stats_speed", order_stats_speed),
     ("sweep_scaling", sweep_scaling),
 ]

@@ -257,7 +257,9 @@ def calibrate(out: str = CALIB_JSON_DEFAULT):
     ``vec_elem``, warm jit-cached FixedTimes m-sync → ``jax_elem``,
     cold-minus-warm closure-compiled m-sync → ``jit_compile``, warm
     timing-only Async arrival scan → ``pool_elem``, warm Ringmaster
-    minus its pool term → ``scan_step``. ``accel_speedup`` is left to
+    minus its pool term → ``scan_step``, warm Rennala renewal-round
+    scan → ``round_elem`` (prices the rennala/malenia/ringleader
+    family). ``accel_speedup`` is left to
     the default — there is nothing to measure on a CPU-only host, and
     :func:`load_cost_constants` fills any key the artifact omits.
 
@@ -321,11 +323,22 @@ def calibrate(out: str = CALIB_JSON_DEFAULT):
     scan_step = max((t_ring - S * pool_r * pool_elem)
                     / (window * (S / 32.0)), 1e-8)
 
+    # warm rennala renewal-round scan → round_elem: the whole
+    # rennala/malenia/ringleader family prices per scanned pool element
+    # (elems = S*K*n*batch for rennala), and the warm AOT-cached call is
+    # pure compute, so the inversion is direct
+    B_cal = 8
+    renn = ("rennala", {"batch": B_cal})
+    simulate_batch(renn, rmodel, K=K, seeds=S, backend="jax")
+    t_renn = min(_timed(lambda: simulate_batch(
+        renn, rmodel, K=K, seeds=S, backend="jax")) for _ in range(3))
+    round_elem = t_renn / (work * B_cal)
+
     constants = {
         "np_elem": np_elem, "heap_event": heap_event,
         "vec_elem": vec_elem, "jax_elem": jax_elem,
         "jit_compile": jit_compile, "pool_elem": pool_elem,
-        "scan_step": scan_step,
+        "scan_step": scan_step, "round_elem": round_elem,
     }
     from repro.exp.runner import atomic_write_json
     atomic_write_json(out, {"meta": {"n": n, "S": S, "K": K, "m": m,

@@ -9,7 +9,7 @@ table and rationale):
   (JIT001–JIT005);
 * :mod:`repro.analysis.registry` — ``STRATEGIES`` / ``SCENARIOS`` /
   time-model / DESIGN.md §3b coverage-matrix / parity-matrix COVERAGE
-  lockstep (REG001–REG006);
+  lockstep (REG001–REG007);
 * :mod:`repro.analysis.robustness` — swallowed exceptions and
   non-atomic artifact writes (ROB001–ROB002).
 
@@ -24,8 +24,9 @@ from .cli import analyze, main
 from .findings import RULES, Finding, filter_suppressed, parse_pragmas
 from .passes import ModuleSource, load_module
 from .purity import run_purity_pass, traced_functions
-from .registry import (collect_registered, parse_coverage_table,
-                       parse_design_tables, run_registry_pass)
+from .registry import (collect_registered, collect_sharded_kinds,
+                       parse_coverage_table, parse_design_tables,
+                       parse_sharded_table, run_registry_pass)
 from .rng import run_rng_pass
 from .robustness import run_robustness_pass
 
@@ -34,5 +35,6 @@ __all__ = [
     "filter_suppressed", "ModuleSource", "load_module",
     "run_rng_pass", "run_purity_pass", "traced_functions",
     "run_registry_pass", "collect_registered", "parse_design_tables",
-    "parse_coverage_table", "run_robustness_pass",
+    "parse_coverage_table", "parse_sharded_table",
+    "collect_sharded_kinds", "run_robustness_pass",
 ]

@@ -53,6 +53,9 @@ RULES: Dict[str, str] = {
     "REG006": "STRATEGIES entry and the parity-matrix COVERAGE table "
               "(tests/test_strategy_matrix.py) drifted apart — every "
               "registration needs an engine-coverage row and vice versa",
+    "REG007": "SHARDED_KINDS (launch/sweep.py) and the DESIGN.md §3b "
+              "sharded backend table drifted apart — every natively "
+              "sharded engine kind needs a table row and vice versa",
     "ROB001": "bare except / `except Exception: pass` in engine or "
               "launch code silently swallows failures the degradation "
               "ladder should record",

@@ -1,4 +1,4 @@
-"""Registry/coverage cross-check pass: REG001 – REG006.
+"""Registry/coverage cross-check pass: REG001 – REG007.
 
 Statically (no imports executed) collects:
 
@@ -16,6 +16,12 @@ Statically (no imports executed) collects:
 * the parity-matrix test's ``COVERAGE`` dict literal in
   ``tests/test_strategy_matrix.py`` (REG006) — the engine-parity
   declaration every registered strategy must carry.
+
+* the DESIGN.md §3b *sharded backend table* (first header cell
+  ``sharded kind``) against the ``SHARDED_KINDS`` tuple literal in
+  ``launch/sweep.py`` (REG007) — the engine families the
+  ``jax_sharded`` backend routes natively must be documented, and the
+  doc must not promise kinds the router does not shard;
 
 and reports drift in either direction. Matrix rows may group
 strategies with ``/`` (``sync/msync``) and carry parenthesized
@@ -39,7 +45,8 @@ from .findings import Finding
 from .passes import load_module
 
 __all__ = ["run_registry_pass", "collect_registered",
-           "parse_design_tables", "parse_coverage_table"]
+           "parse_design_tables", "parse_coverage_table",
+           "parse_sharded_table", "collect_sharded_kinds"]
 
 _SECTION_RE = re.compile(r"^##\s+§3b\b", re.MULTILINE)
 _NEXT_SECTION_RE = re.compile(r"^##\s+(?!#)", re.MULTILINE)
@@ -127,6 +134,49 @@ def parse_design_tables(design_path: Path):
     return matrix, scen
 
 
+def parse_sharded_table(design_path: Path) -> Optional[Dict[str, int]]:
+    """``{kind: lineno}`` from the §3b sharded backend table (first
+    header cell starting with ``sharded``); ``None`` when §3b or the
+    table is missing so the caller can emit one structural finding."""
+    text = design_path.read_text()
+    m = _SECTION_RE.search(text)
+    if not m:
+        return None
+    start = m.end()
+    nxt = _NEXT_SECTION_RE.search(text, start)
+    section = text[start:nxt.start()] if nxt else text[start:]
+    base_line = text[:start].count("\n") + 1
+    for table in _tables_in(section, base_line):
+        if table[0][1][0].lower().startswith("sharded"):
+            out: Dict[str, int] = {}
+            for lineno, cells in table[1:]:
+                for tok in _row_strategies(cells[0]):
+                    out[tok] = lineno
+            return out
+    return None
+
+
+def collect_sharded_kinds(sweep_path: Path) -> Optional[Dict[str, int]]:
+    """``{kind: lineno}`` from the ``SHARDED_KINDS`` tuple/list literal
+    of string constants in ``launch/sweep.py`` (static — no import).
+    ``None`` when no such literal assignment exists."""
+    mod = load_module(sweep_path)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Name) and t.id == "SHARDED_KINDS"
+                   for t in node.targets):
+            continue
+        if not isinstance(node.value, (ast.Tuple, ast.List)):
+            return None
+        out: Dict[str, int] = {}
+        for elt in node.value.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out[elt.value] = elt.lineno
+        return out
+    return None
+
+
 def parse_coverage_table(path: Path) -> Optional[Dict[str, int]]:
     """``{name: lineno}`` from the parity-matrix test's ``COVERAGE``
     dict literal (string keys only). ``None`` when the module defines no
@@ -188,11 +238,13 @@ def run_registry_pass(root: Path, *,
                       scenarios_path: Optional[Path] = None,
                       time_models_path: Optional[Path] = None,
                       design_path: Optional[Path] = None,
-                      matrix_test_path: Optional[Path] = None
+                      matrix_test_path: Optional[Path] = None,
+                      sweep_path: Optional[Path] = None
                       ) -> List[Finding]:
     root = Path(root)
     strategies_path = strategies_path or (
         root / "src/repro/core/strategies.py")
+    sweep_path = sweep_path or (root / "src/repro/launch/sweep.py")
     scenarios_path = scenarios_path or (root / "src/repro/exp/scenarios.py")
     time_models_path = time_models_path or (
         root / "src/repro/core/time_models.py")
@@ -286,6 +338,44 @@ def run_registry_pass(root: Path, *,
                     rel_matrix, lineno, "REG006",
                     f"COVERAGE row names strategy {name!r} which is not "
                     f"registered in STRATEGIES"))
+
+    # REG007: SHARDED_KINDS <-> DESIGN §3b sharded backend table, both
+    # ways — what the jax_sharded router natively runs is documented,
+    # and the doc promises nothing the router would fall back on
+    rel_sweep = str(sweep_path)
+    if not sweep_path.exists():
+        findings.append(Finding(
+            rel_sweep, 1, "REG007",
+            "launch/sweep.py missing — cannot cross-check SHARDED_KINDS "
+            "against the DESIGN.md sharded backend table"))
+    else:
+        kinds = collect_sharded_kinds(sweep_path)
+        sharded_table = parse_sharded_table(design_path)
+        if kinds is None:
+            findings.append(Finding(
+                rel_sweep, 1, "REG007",
+                "no SHARDED_KINDS tuple literal of string constants "
+                "found in launch/sweep.py"))
+        elif sharded_table is None:
+            findings.append(Finding(
+                rel_design, 1, "REG007",
+                "DESIGN.md §3b sharded backend table (table with "
+                "'sharded kind' header) not found"))
+        else:
+            for name, lineno in sorted(kinds.items()):
+                if name not in sharded_table:
+                    findings.append(Finding(
+                        rel_sweep, lineno, "REG007",
+                        f"engine kind {name!r} is in SHARDED_KINDS but "
+                        f"absent from the DESIGN.md §3b sharded backend "
+                        f"table"))
+            for name, lineno in sorted(sharded_table.items()):
+                if name not in kinds:
+                    findings.append(Finding(
+                        rel_design, lineno, "REG007",
+                        f"sharded-backend-table row names kind {name!r} "
+                        f"which is not in SHARDED_KINDS — the jax_sharded "
+                        f"router would silently fall back on it"))
 
     # REG005: every time_models name the scenario factories touch exists
     top, class_attrs = _time_model_names(time_models_path)

@@ -119,7 +119,9 @@ _DEFAULT_COST_CONSTANTS = {
     "heap_event": 2.6e-6,    # serial event-loop seconds per heap pop
     "np_elem": 1.1e-7,       # serial m-sync fast path, per S*K*n element
     "vec_elem": 2.0e-8,      # vectorized counter engine, per element
-    "jax_elem": 1.6e-8,      # jitted round-scan, per element (warm)
+    "jax_elem": 1.6e-8,      # jitted m-sync round scan, per element (warm)
+    "round_elem": 1.6e-8,    # renewal round scans (rennala/malenia/
+                             # ringleader), per pool element (warm)
     "pool_elem": 4.0e-8,     # arrival-scan chain draw + merge, per pool elem
     "scan_step": 3.2e-6,     # arrival-scan step at S=32 (scales ~S/32)
     "jit_compile": 0.6,      # closure-compiled program, per call
@@ -144,10 +146,12 @@ def load_cost_constants(path: Optional[str] = None,
     ``path`` defaults to the ``REPRO_COST_CONSTANTS`` environment
     variable. The JSON may be flat or ``{"constants": {...}}`` (the
     ``--calibrate`` artifact shape); unknown keys are ignored and an
-    unreadable/invalid file falls back to the defaults with a single
-    ``UserWarning`` naming the file and the error — routing must never
-    *fail* because a calibration file went stale, but it must not
-    silently ignore one either.
+    unreadable/invalid file (including valid JSON whose top level is
+    not an object) falls back to the defaults with a ``UserWarning``
+    naming the file and the error, emitted ONCE per path per process —
+    routing must never *fail* because a calibration file went stale,
+    but it must not silently ignore one either, and a sweep that calls
+    the router thousands of times must not drown the log in repeats.
     """
     import json
     import os
@@ -160,20 +164,32 @@ def load_cost_constants(path: Optional[str] = None,
         try:
             with open(path) as fh:
                 data = json.load(fh)
-            consts = data.get("constants", data) if isinstance(data, dict) \
-                else {}
+            consts = data.get("constants", data) \
+                if isinstance(data, dict) else data
+            if not isinstance(consts, dict):
+                raise ValueError(
+                    f"cost-constants JSON must be an object (or "
+                    f"{{'constants': {{...}}}}), got "
+                    f"{type(consts).__name__}")
             merged.update({k: float(v) for k, v in consts.items()
                            if k in merged and float(v) > 0.0})
         except (OSError, ValueError, TypeError) as exc:
             # stale/bad calibration: defaults win, but say so once
-            warnings.warn(
-                f"REPRO_COST_CONSTANTS file {path!r} could not be used "
-                f"({type(exc).__name__}: {exc}); falling back to the "
-                f"default cost constants", UserWarning, stacklevel=2)
+            if path not in _COST_WARNED_PATHS:
+                _COST_WARNED_PATHS.add(path)
+                warnings.warn(
+                    f"REPRO_COST_CONSTANTS file {path!r} could not be used "
+                    f"({type(exc).__name__}: {exc}); falling back to the "
+                    f"default cost constants", UserWarning, stacklevel=2)
     if apply:
         COST_CONSTANTS.clear()
         COST_CONSTANTS.update(merged)
     return merged
+
+
+#: paths already warned about by :func:`load_cost_constants` (one
+#: warning per bad file per process, however often the router reloads)
+_COST_WARNED_PATHS: set = set()
 
 
 if os.environ.get("REPRO_COST_CONSTANTS"):
@@ -278,12 +294,11 @@ def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
     if backend not in ("jax", "jax_sharded"):
         raise ValueError(f"no cost model for backend {backend!r}")
     shard = 1.0
-    if backend == "jax_sharded" and kind in ("msync", "async",
-                                             "ringmaster", "optimal_asgd"):
-        # rennala/malenia have no sharded program (the sweep falls back
-        # to the per-point jax engine), so only these kinds divide
-        D = _device_count() if devices is None else int(devices)
-        shard = float(max(min(D, S), 1))
+    if backend == "jax_sharded":
+        from ..launch.sweep import SHARDED_KINDS
+        if kind in SHARDED_KINDS:
+            D = _device_count() if devices is None else int(devices)
+            shard = float(max(min(D, S), 1))
     accel = C["accel_speedup"] if accelerator else 1.0
     if kind in ("async", "ringmaster", "optimal_asgd"):
         from .batch_jax import arrival_scan_work
@@ -303,7 +318,8 @@ def estimate_backend_seconds(backend: str, strategy: "AggregationStrategy",
         elems = work * 2.0
     else:
         elems = work
-    cost = elems * C["jax_elem"] / accel / shard
+    elem_c = C["jax_elem"] if kind == "msync" else C["round_elem"]
+    cost = elems * elem_c / accel / shard
     fixed_timing_cached = kind == "msync" and isinstance(model, FixedTimes)
     if backend == "jax_sharded" or not fixed_timing_cached:
         cost += C["jit_compile"]    # closure-/AOT-compiled per call
@@ -508,8 +524,8 @@ def _route_fastest(strat: AggregationStrategy, model, problem, K_pt: int,
         if tol_pt is None and K_pt > 0 and jax_supported(strat, model,
                                                          problem):
             devices = _device_count()
-            if (devices > 1 and kind in ("msync", "async", "ringmaster",
-                                         "optimal_asgd")
+            from ..launch.sweep import SHARDED_KINDS
+            if (devices > 1 and kind in SHARDED_KINDS
                     and info["work"] / devices >= JAX_MIN_WORK):
                 accel = _accelerator_present()
                 est = {"jax": estimate_backend_seconds(
@@ -553,8 +569,8 @@ def _route_fastest(strat: AggregationStrategy, model, problem, K_pt: int,
            "jax": estimate_backend_seconds("jax", strat, model, S, K_pt, n,
                                            accelerator=accel)}
     devices = _device_count()
-    if (devices > 1 and kind in ("msync", "async", "ringmaster",
-                                 "optimal_asgd")
+    from ..launch.sweep import SHARDED_KINDS
+    if (devices > 1 and kind in SHARDED_KINDS
             and info["work"] / devices >= JAX_MIN_WORK):
         # sharded sweep: only with real devices to spread over AND
         # enough per-device work to clear the same probe floor

@@ -614,7 +614,8 @@ def sharded_msync_run(model, problem, n, S, K, seeds, m_list, gamma_list,
     return out
 
 
-def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
+def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds,
+                 mesh=None, meta=None):
     """Rennala as a renewal-batched ``lax.scan``: per round, each worker's
     fresh arrivals form a renewal chain, the round ends at the ``B``-th
     smallest chain entry, every worker's next pending computation is its
@@ -623,68 +624,104 @@ def _rennala_run(model, problem, B, n, S, K, gamma, use_pallas, seeds):
     within-round arrival index). For ``B`` beyond the iterative-kernel
     range the pool selection runs the counting-bisection path of
     :func:`~repro.kernels.order_stats.mth_smallest` — no ``top_k``
-    lowering inside the scan."""
+    lowering inside the scan.
+
+    With a ``mesh`` the per-unit program is ``shard_map``ped over the
+    1-D ``data`` axis and AOT-compiled into :data:`_SWEEP_PROGS` (the
+    :func:`sharded_msync_run` treatment): every unit row is a pure
+    function of its own ``PRNGKey``, so sharded outputs are bitwise the
+    unsharded ``backend="jax"`` outputs. ``meta`` (if given) receives
+    ``cache_hit``/``compile_s``/``exec_s``."""
+    import time
+
     import jax
     import jax.numpy as jnp
     from jax import lax
+    from jax.sharding import PartitionSpec
 
     from ..kernels.order_stats import mth_smallest
 
     math = problem is not None
     keys0, x_init = _keys_and_x(problem, S, n, seeds)
-    finish_all = _finish_factory(model, S, n)
-    chain_fn = _chain_factory(model, S, n)
-    if math:
-        grad_mean = _grad_mean_fn(problem, B)
 
-    widx = jnp.arange(n)
-    flat_idx = jnp.arange(n * B)
+    def unit_prog(keys, x0):
+        U = keys.shape[0]                     # local block under shard_map
+        finish_all = _finish_factory(model, U, n)
+        chain_fn = _chain_factory(model, U, n)
+        grad_mean = _grad_mean_fn(problem, B) if math else None
+        widx = jnp.arange(n)
+        flat_idx = jnp.arange(n * B)
 
-    def step(carry, k):
-        ft, ver, comp, x, keys = carry
-        sub = jax.vmap(lambda kk: jax.random.split(kk, 4))(keys)
-        keys = sub[:, 0]
-        stale = ver < k
-        # first fresh arrival: a stale pending pops at ft and restarts
-        base = jnp.where(stale, finish_all(sub[:, 1], ft), ft)
-        chain = chain_fn(sub[:, 2], base, B)      # (S, n, B+1)
-        pool = chain[..., :B].reshape(S, n * B)
-        T = mth_smallest(pool, B, use_pallas=use_pallas)
-        lt = pool < T[:, None]
-        eq = pool == T[:, None]
-        quota = (B - lt.sum(axis=1))[:, None]
-        acc = lt | (eq & ((jnp.cumsum(eq, axis=1) - 1) < quota))
-        cnt = acc.reshape(S, n, B).sum(axis=2)    # accepted per worker
-        popped = stale & (ft < T[:, None])        # discarded stale pops
-        comp = comp + B + popped.sum(axis=1, dtype=jnp.int32)
-        # the B-th (stepping) arrival: last accepted entry at exactly T;
-        # its worker restarts at the new iterate (version k + 1)
-        stepper = jnp.argmax(jnp.where(acc & eq, flat_idx[None, :], -1),
-                             axis=1) // B
-        live = (~stale) | popped                  # chain materialized
-        nxt = jnp.take_along_axis(chain, cnt[..., None], axis=2)[..., 0]
-        ft = jnp.where(live, nxt, ft)
-        ver = jnp.where(live, k, ver)
-        ver = jnp.where(widx[None, :] == stepper[:, None], k + 1, ver)
-        if math:
-            x = x - gamma * grad_mean(x, sub[:, 3])
-            val = jax.vmap(problem.f)(x)
-            gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
-        else:
-            val = gn = jnp.zeros(S)
-        return (ft, ver, comp, x, keys), (T, val, gn)
+        def step(carry, k):
+            ft, ver, comp, x, keys = carry
+            sub = jax.vmap(lambda kk: jax.random.split(kk, 4))(keys)
+            keys = sub[:, 0]
+            stale = ver < k
+            # first fresh arrival: a stale pending pops at ft and restarts
+            base = jnp.where(stale, finish_all(sub[:, 1], ft), ft)
+            chain = chain_fn(sub[:, 2], base, B)      # (U, n, B+1)
+            pool = chain[..., :B].reshape(U, n * B)
+            T = mth_smallest(pool, B, use_pallas=use_pallas)
+            lt = pool < T[:, None]
+            eq = pool == T[:, None]
+            quota = (B - lt.sum(axis=1))[:, None]
+            acc = lt | (eq & ((jnp.cumsum(eq, axis=1) - 1) < quota))
+            cnt = acc.reshape(U, n, B).sum(axis=2)    # accepted per worker
+            popped = stale & (ft < T[:, None])        # discarded stale pops
+            comp = comp + B + popped.sum(axis=1, dtype=jnp.int32)
+            # the B-th (stepping) arrival: last accepted entry at exactly
+            # T; its worker restarts at the new iterate (version k + 1)
+            stepper = jnp.argmax(jnp.where(acc & eq, flat_idx[None, :], -1),
+                                 axis=1) // B
+            live = (~stale) | popped                  # chain materialized
+            nxt = jnp.take_along_axis(chain, cnt[..., None], axis=2)[..., 0]
+            ft = jnp.where(live, nxt, ft)
+            ver = jnp.where(live, k, ver)
+            ver = jnp.where(widx[None, :] == stepper[:, None], k + 1, ver)
+            if math:
+                x = x - gamma * grad_mean(x, sub[:, 3])
+                val = jax.vmap(problem.f)(x)
+                gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
+            else:
+                val = gn = jnp.zeros(U)
+            return (ft, ver, comp, x, keys), (T, val, gn)
 
-    @jax.jit
-    def run(keys):
         sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
-        init = (finish_all(sub[:, 1], jnp.zeros((S, n))),
-                jnp.zeros((S, n), jnp.int32),
-                jnp.zeros(S, jnp.int32), x_init, sub[:, 0])
+        init = (finish_all(sub[:, 1], jnp.zeros((U, n))),
+                jnp.zeros((U, n), jnp.int32),
+                jnp.zeros(U, jnp.int32), x0, sub[:, 0])
         (_, _, comp, x, _), (T, val, gn) = lax.scan(
             step, init, jnp.arange(K, dtype=jnp.int32))
         return comp, x, T, val, gn
 
-    return jax.block_until_ready(run(keys0))
+    if mesh is None:
+        return jax.block_until_ready(jax.jit(unit_prog)(keys0, x_init))
+
+    from jax.experimental.shard_map import shard_map
+    P = PartitionSpec
+    wrapped = shard_map(
+        unit_prog, mesh=mesh,
+        in_specs=(P("data"), P("data")),
+        out_specs=(P("data"), P("data"), P(None, "data"), P(None, "data"),
+                   P(None, "data")),
+        check_rep=False)
+    key = ("rennala", math, B, n, S, K, float(gamma), bool(use_pallas),
+           bool(jax.config.jax_enable_x64), _mesh_cache_key(mesh),
+           _ById(model), _ById(problem))
+    hit = key in _SWEEP_PROGS
+    args = (keys0, x_init)
+    compile_s = 0.0
+    if not hit:
+        t0 = time.perf_counter()
+        compiled = jax.jit(wrapped).lower(*args).compile()
+        compile_s = time.perf_counter() - t0
+        _prog_cache_put(_SWEEP_PROGS, key, compiled)
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(_SWEEP_PROGS[key](*args))
+    if meta is not None:
+        meta.update(cache_hit=hit, compile_s=round(compile_s, 4),
+                    exec_s=round(time.perf_counter() - t0, 4))
+    return out
 
 
 def _malenia_grad_fn(problem, n, L):
@@ -730,7 +767,7 @@ def _malenia_grad_fn(problem, n, L):
 
 
 def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
-                 chain_len=None):
+                 chain_len=None, mesh=None, meta=None):
     """Malenia as the Rennala renewal scan generalized to the per-worker
     count predicate (see module doc): per round, each worker's fresh
     arrivals form an ``L``-slot renewal chain, and the round ends at the
@@ -750,10 +787,19 @@ def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
     heavy-tailed slow draw) are flagged, and the engine retries with
     doubled chains a few times before raising — never silently
     mis-batched.
+
+    With a ``mesh`` the per-unit program is ``shard_map``ped over the
+    1-D ``data`` axis and AOT-compiled into :data:`_SWEEP_PROGS` (every
+    unit row is a pure function of its own key — sharded outputs are
+    bitwise the unsharded ones); ``meta`` (if given) receives
+    ``cache_hit``/``compile_s``/``exec_s``.
     """
+    import time
+
     import jax
     import jax.numpy as jnp
     from jax import lax
+    from jax.sharding import PartitionSpec
 
     math = problem is not None
     ceilS = int(_math.ceil(S_target))
@@ -769,10 +815,6 @@ def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
         raise ValueError(f"chain_len={L} cannot certify harmonic mean "
                          f"S={S_target} (need >= {ceilS})")
     keys0, x_init = _keys_and_x(problem, S, n, seeds)
-    finish_all = _finish_factory(model, S, n)
-    chain_fn = _chain_factory(model, S, n)
-
-    widx = jnp.arange(n)
 
     def P_of_counts(B):
         ok1 = jnp.all(B >= 1, axis=-1)
@@ -786,113 +828,146 @@ def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
         upd_fn = _malenia_grad_fn(problem, n, L) if math else None
         tie_iters = int(np.ceil(np.log2(n * L + 2))) + 2
 
-        def step(carry, k):
-            ft, ver, comp, used, x, keys, bad = carry
-            sub = jax.vmap(lambda kk: jax.random.split(kk, 4))(keys)
-            keys = sub[:, 0]
-            stale = ver < k
-            base = jnp.where(stale, finish_all(sub[:, 1], ft), ft)
-            ch = chain_fn(sub[:, 2], base, L)     # (S, n, L+1)
-            cand = ch[..., :L]
+        def unit_prog(keys, x0):
+            U = keys.shape[0]                 # local block under shard_map
+            finish_all = _finish_factory(model, U, n)
+            chain_fn = _chain_factory(model, U, n)
+            widx = jnp.arange(n)
 
-            def Pt(T):
-                return P_of_counts(
-                    (cand <= T[:, None, None]).sum(axis=-1))
+            def step(carry, k):
+                ft, ver, comp, used, x, keys, bad = carry
+                sub = jax.vmap(lambda kk: jax.random.split(kk, 4))(keys)
+                keys = sub[:, 0]
+                stale = ver < k
+                base = jnp.where(stale, finish_all(sub[:, 1], ft), ft)
+                ch = chain_fn(sub[:, 2], base, L)     # (U, n, L+1)
+                cand = ch[..., :L]
 
-            # bisection invariants: no arrival at or before t_lo (B = 0,
-            # false); every worker has >= ceil(S) arrivals by t_hi (true)
-            t_lo = base.min(axis=1) - 1.0
-            t_hi = cand[..., ceilS - 1].max(axis=1)
+                def Pt(T):
+                    return P_of_counts(
+                        (cand <= T[:, None, None]).sum(axis=-1))
 
-            def bisect(_, lh):
-                lo, hi = lh
-                mid = 0.5 * (lo + hi)
-                ok = Pt(mid)
-                return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
+                # bisection invariants: no arrival at or before t_lo (B = 0,
+                # false); every worker has >= ceil(S) arrivals by t_hi (true)
+                t_lo = base.min(axis=1) - 1.0
+                t_hi = cand[..., ceilS - 1].max(axis=1)
 
-            lo, _ = lax.fori_loop(0, _MAL_BISECT_ITERS, bisect,
-                                  (t_lo, t_hi))
+                def bisect(_, lh):
+                    lo, hi = lh
+                    mid = 0.5 * (lo + hi)
+                    ok = Pt(mid)
+                    return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi)
 
-            # snap onto the exact triggering arrival: smallest pool
-            # entry above lo; sub-threshold entries can survive a wide
-            # interval, so advance past them (bounded; non-convergence
-            # flags the run)
-            def cond(c):
-                _, _, done, it = c
-                return jnp.any(~done) & (it < _MAL_SNAP_ITERS)
+                lo, _ = lax.fori_loop(0, _MAL_BISECT_ITERS, bisect,
+                                      (t_lo, t_hi))
 
-            def snap(c):
-                lo, T, done, it = c
-                cnd = jnp.where(cand > lo[:, None, None], cand,
-                                jnp.inf).min(axis=(1, 2))
-                ok = Pt(cnd)
-                T = jnp.where(done, T, cnd)
-                lo = jnp.where(done | ok, lo, cnd)
-                return lo, T, done | ok, it + 1
+                # snap onto the exact triggering arrival: smallest pool
+                # entry above lo; sub-threshold entries can survive a wide
+                # interval, so advance past them (bounded; non-convergence
+                # flags the run)
+                def cond(c):
+                    _, _, done, it = c
+                    return jnp.any(~done) & (it < _MAL_SNAP_ITERS)
 
-            _, T, done, _ = lax.while_loop(
-                cond, snap, (lo, jnp.zeros(S), jnp.zeros(S, bool),
-                             jnp.zeros((), jnp.int32)))
-            bad_k = ~done
+                def snap(c):
+                    lo, T, done, it = c
+                    cnd = jnp.where(cand > lo[:, None, None], cand,
+                                    jnp.inf).min(axis=(1, 2))
+                    ok = Pt(cnd)
+                    T = jnp.where(done, T, cnd)
+                    lo = jnp.where(done | ok, lo, cnd)
+                    return lo, T, done | ok, it + 1
 
-            # per-worker counts at T, consuming boundary ties one
-            # arrival at a time in worker-major order until the
-            # predicate first holds
-            Tb = T[:, None, None]
-            lt = (cand < Tb).sum(axis=-1)         # (S, n)
-            tie = (cand == Tb).sum(axis=-1)
-            prev = jnp.cumsum(tie, axis=1) - tie
+                _, T, done, _ = lax.while_loop(
+                    cond, snap, (lo, jnp.zeros(U), jnp.zeros(U, bool),
+                                 jnp.zeros((), jnp.int32)))
+                bad_k = ~done
 
-            def consumed(tc):
-                return jnp.clip(tc[:, None] - prev, 0, tie)
+                # per-worker counts at T, consuming boundary ties one
+                # arrival at a time in worker-major order until the
+                # predicate first holds
+                Tb = T[:, None, None]
+                lt = (cand < Tb).sum(axis=-1)         # (U, n)
+                tie = (cand == Tb).sum(axis=-1)
+                prev = jnp.cumsum(tie, axis=1) - tie
 
-            def cbisect(_, lh):                   # minimal tc, P true
-                lo_c, hi_c = lh
-                mid = (lo_c + hi_c) // 2
-                ok = P_of_counts(lt + consumed(mid))
-                return (jnp.where(ok, lo_c, mid),
-                        jnp.where(ok, mid, hi_c))
+                def consumed(tc):
+                    return jnp.clip(tc[:, None] - prev, 0, tie)
 
-            _, tc = lax.fori_loop(0, tie_iters, cbisect,
-                                  (jnp.zeros(S, jnp.int32),
-                                   tie.sum(axis=1).astype(jnp.int32)))
-            cons = consumed(tc)
-            B = lt + cons                         # accepted per worker
-            stepper = jnp.max(jnp.where(cons > 0, widx[None, :], -1),
-                              axis=1)
+                def cbisect(_, lh):                   # minimal tc, P true
+                    lo_c, hi_c = lh
+                    mid = (lo_c + hi_c) // 2
+                    ok = P_of_counts(lt + consumed(mid))
+                    return (jnp.where(ok, lo_c, mid),
+                            jnp.where(ok, mid, hi_c))
 
-            popped = stale & (ft < T[:, None])    # discarded stale pops
-            comp = (comp + B.sum(axis=1, dtype=jnp.int32)
-                    + popped.sum(axis=1, dtype=jnp.int32))
-            used = used + B.sum(axis=1, dtype=jnp.int32)
-            # chain exhausted: an (L+1)-th arrival before the round end
-            bad = bad | bad_k | (ch[..., L] <= T[:, None]).any(axis=1)
+                # U, not S: under shard_map the local block is smaller
+                # than the global unit count (S would break the carry)
+                _, tc = lax.fori_loop(0, tie_iters, cbisect,
+                                      (jnp.zeros(U, jnp.int32),
+                                       tie.sum(axis=1).astype(jnp.int32)))
+                cons = consumed(tc)
+                B = lt + cons                         # accepted per worker
+                stepper = jnp.max(jnp.where(cons > 0, widx[None, :], -1),
+                                  axis=1)
 
-            live = (~stale) | popped              # chain materialized
-            nxt = jnp.take_along_axis(ch, B[..., None], axis=2)[..., 0]
-            ft = jnp.where(live, nxt, ft)
-            ver = jnp.where(live, k, ver)
-            ver = jnp.where(widx[None, :] == stepper[:, None], k + 1, ver)
-            if math:
-                x = x - gamma * upd_fn(x, B, sub[:, 3])
-                val = jax.vmap(problem.f)(x)
-                gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
-            else:
-                val = gn = jnp.zeros(S)
-            return (ft, ver, comp, used, x, keys, bad), (T, val, gn)
+                popped = stale & (ft < T[:, None])    # discarded stale pops
+                comp = (comp + B.sum(axis=1, dtype=jnp.int32)
+                        + popped.sum(axis=1, dtype=jnp.int32))
+                used = used + B.sum(axis=1, dtype=jnp.int32)
+                # chain exhausted: an (L+1)-th arrival before the round end
+                bad = bad | bad_k | (ch[..., L] <= T[:, None]).any(axis=1)
 
-        @jax.jit
-        def run(keys):
+                live = (~stale) | popped              # chain materialized
+                nxt = jnp.take_along_axis(ch, B[..., None], axis=2)[..., 0]
+                ft = jnp.where(live, nxt, ft)
+                ver = jnp.where(live, k, ver)
+                ver = jnp.where(widx[None, :] == stepper[:, None], k + 1, ver)
+                if math:
+                    x = x - gamma * upd_fn(x, B, sub[:, 3])
+                    val = jax.vmap(problem.f)(x)
+                    gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
+                else:
+                    val = gn = jnp.zeros(U)
+                return (ft, ver, comp, used, x, keys, bad), (T, val, gn)
+
             sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
-            init = (finish_all(sub[:, 1], jnp.zeros((S, n))),
-                    jnp.zeros((S, n), jnp.int32), jnp.zeros(S, jnp.int32),
-                    jnp.zeros(S, jnp.int32), x_init, sub[:, 0],
-                    jnp.zeros(S, bool))
+            init = (finish_all(sub[:, 1], jnp.zeros((U, n))),
+                    jnp.zeros((U, n), jnp.int32), jnp.zeros(U, jnp.int32),
+                    jnp.zeros(U, jnp.int32), x0, sub[:, 0],
+                    jnp.zeros(U, bool))
             (_, _, comp, used, x, _, bad), (T, val, gn) = lax.scan(
                 step, init, jnp.arange(K, dtype=jnp.int32))
             return comp, used, x, T, val, gn, bad
 
-        return jax.block_until_ready(run(keys0))
+        if mesh is None:
+            return jax.block_until_ready(jax.jit(unit_prog)(keys0, x_init))
+
+        from jax.experimental.shard_map import shard_map
+        P = PartitionSpec
+        wrapped = shard_map(
+            unit_prog, mesh=mesh,
+            in_specs=(P("data"), P("data")),
+            out_specs=(P("data"), P("data"), P("data"), P(None, "data"),
+                       P(None, "data"), P(None, "data"), P("data")),
+            check_rep=False)
+        key = ("malenia", math, float(S_target), L, n, S, K, float(gamma),
+               bool(jax.config.jax_enable_x64), _mesh_cache_key(mesh),
+               _ById(model), _ById(problem))
+        hit = key in _SWEEP_PROGS
+        args = (keys0, x_init)
+        compile_s = 0.0
+        if not hit:
+            t0 = time.perf_counter()
+            compiled = jax.jit(wrapped).lower(*args).compile()
+            compile_s = time.perf_counter() - t0
+            _prog_cache_put(_SWEEP_PROGS, key, compiled)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(_SWEEP_PROGS[key](*args))
+        if meta is not None:
+            meta.update(cache_hit=hit, compile_s=round(compile_s, 4),
+                        exec_s=round(time.perf_counter() - t0, 4))
+        return out
 
     for _ in range(4):
         comp, used, x, T, val, gn, bad = attempt(L)
@@ -906,7 +981,7 @@ def _malenia_run(model, problem, S_target, n, S, K, gamma, seeds,
         f"simulate_batch_jax or use backend='serial'")
 
 
-def _ringleader_grad_fn(problem, n, L):
+def _ringleader_grad_fn(problem, n):
     """Ringleader math update: ``(1/n) sum_i (1/B_i) sum_{j<B_i} g_ij``
     — the Malenia count-compacted slot loop with one twist: slot 0 (each
     worker's FIRST in-round arrival) evaluates at the previous iterate
@@ -916,7 +991,9 @@ def _ringleader_grad_fn(problem, n, L):
     approximation: the serial engine restarts every worker at the
     current iterate on every (always-accepted) arrival, and every worker
     delivers at least once per round, so staleness never exceeds one
-    round."""
+    round. Slot ``j``'s key is ``fold_in(round_key, j)`` — independent
+    of any chain budget, so window growth and chunk re-runs leave
+    completed rounds' draws bitwise unchanged."""
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -924,7 +1001,6 @@ def _ringleader_grad_fn(problem, n, L):
     widx = jnp.arange(n)
 
     def upd(x_prev, x_cur, trig_prev, B, round_keys):
-        slot_keys = jax.vmap(lambda k: jax.random.split(k, L))(round_keys)
         w = 1.0 / (jnp.maximum(B, 1).astype(x_cur.dtype) * n)  # (S, n)
         Bmax = jnp.max(B)
         first_pt = jnp.where(
@@ -937,7 +1013,8 @@ def _ringleader_grad_fn(problem, n, L):
 
         def body(c):
             j, acc = c
-            kcol = slot_keys[:, j]                             # (S, 2)
+            kcol = jax.vmap(
+                lambda k: jax.random.fold_in(k, j))(round_keys)  # (S, 2)
             gk = jax.vmap(lambda k: jax.random.split(k, n))(kcol)
             pts = jnp.where(j == 0, first_pt, later_pt)
             g = jax.vmap(jax.vmap(problem.stoch_grad, (0, 0)),
@@ -953,65 +1030,127 @@ def _ringleader_grad_fn(problem, n, L):
     return upd
 
 
-def _ringleader_run(model, problem, n, S, K, gamma, seeds, chain_len=None):
-    """Ringleader as a round-indexed ``lax.scan`` over ONE global
-    renewal chain per worker (see module doc): workers never idle and
-    never discard, so their arrival times are pure renewal processes
-    from ``t = 0`` and the whole run consumes a single prefix-stable
-    ``(S, n, L)`` chain tensor from :func:`_chain_builder` — no
-    per-round redraw. Round ``k`` ends at ``T_k = max_i`` (worker
-    ``i``'s first chain entry past ``T_{k-1}``); worker ``i``
-    contributes the ``B_i >= 1`` entries in ``(T_{k-1}, T_k]`` and the
-    pointer update is pure counting (``newp = #{entries <= T_k}``).
-    Ties at the round end break by worker index (the backend's
-    documented contract). A pointer reaching ``L`` means the chain
-    tensor may hide arrivals inside the round — the run is flagged and
-    retried with doubled chains (prefix stability keeps completed
-    rounds bitwise identical across retries), then raises."""
+def _ringleader_run(model, problem, n, S, K, gamma, seeds, chain_len=None,
+                    mesh=None, meta=None):
+    """Ringleader as a chunked round scan over ONE ragged global renewal
+    chain per worker (see module doc): workers never idle and never
+    discard, so their arrival times are pure renewal processes from
+    ``t = 0`` and the whole run consumes a single prefix-stable
+    worker-major flat pool from :func:`_chain_builder` with per-worker
+    budgets from :func:`_chain_plan_ragged` — no per-round redraw, no
+    rectangular ``n x max(L_i)`` tax under skewed rates. Round ``k``
+    ends at ``T_k = max_i`` (worker ``i``'s first chain entry past
+    ``T_{k-1}``); worker ``i`` contributes the ``B_i >= 1`` entries in
+    ``(T_{k-1}, T_k]`` and the pointer update is pure counting
+    (``newp = #{entries <= T_k}`` — a layout-independent per-worker
+    count). Ties at the round end break by worker index (the backend's
+    documented contract).
+
+    The ``K`` rounds run in chunks of at most 64; the scan carry
+    ``(p, comp, x_prev, x_cur, trig, keys)`` is saved at every chunk
+    boundary. A pointer reaching its budget means the pool may hide
+    arrivals inside the round: the failed chunk's outputs are
+    discarded, the budgets double, :func:`_chain_builder` draws ONLY
+    the extension slots (anchored, prefix-stable), and the SAME chunk
+    re-runs from the saved carry — completed chunks are never re-drawn
+    or re-scanned, and the re-run's completed rounds are bitwise
+    unchanged (round keys are carried, slot keys are
+    ``fold_in(round_key, j)``). With a ``mesh`` the chunk program is
+    ``shard_map``ped over the seed rows; ``meta`` (if given) collects
+    chain/window/chunk accounting and program-cache hits."""
+    import time
+
     import jax
     import jax.numpy as jnp
     from jax import lax
+    from jax.sharding import PartitionSpec
+
+    from .time_models import ragged_layout
 
     math = problem is not None
     if chain_len:
-        L0 = int(chain_len)
+        budgets = np.full(n, int(chain_len), np.int64)
     else:
         # expected global arrivals per round: every worker delivers ~
         # rate_i / min(rate) times while the slowest delivers once
-        if isinstance(model, UniversalModel):
-            span = float(model.grid[-1] - model.grid[0]) or 1.0
-            rates = np.maximum(
-                np.asarray(model.cum[:, -1], dtype=float) / span, 1e-9)
-        else:
-            taus = np.asarray(model.mean_times(), dtype=float)
-            rates = 1.0 / np.maximum(taus, 1e-12)
+        rates = _model_rates(model)
         per_round = float(rates.sum() / max(rates.min(), 1e-12))
         fluct = (1.0 if isinstance(model, (FixedTimes, UniversalModel))
                  else 1.0 + float(np.log(max(n, 1))))
-        L0 = _chain_plan(model, n, int(np.ceil(K * per_round * fluct)))
+        budgets = _chain_plan_ragged(
+            model, n, int(np.ceil(K * per_round * fluct)))
     keys0, x_init = _keys_and_x(problem, S, n, seeds)
+    sub0 = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys0)
+    round_root, chain_root = sub0[:, 0], sub0[:, 1]
+    upd_fn = _ringleader_grad_fn(problem, n) if math else None
+    dt = _engine_dtype()
 
-    def attempt(L):
-        chains = _chain_builder(model, S, n, L)
-        upd_fn = _ringleader_grad_fn(problem, n, L) if math else None
+    # windowed ragged chain state (host): canonical per-worker pool
+    # segments, drawn slot counts, carried last-absolute-time anchors
+    drawn = np.zeros(n, np.int64)
+    segs = [np.zeros((S, 0)) for _ in range(n)]
+    anchors = jnp.zeros((S, n), dt)
+    if meta is not None:
+        meta.setdefault("chain_s", 0.0)
+        meta.update(windows=0, drawn_slots=[], chunk_runs=0)
 
-        def run(keys):
-            sub0 = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
-            ch = chains(sub0[:, 1])                # (S, n, L) absolute
+    def draw_to(budgets_new):
+        nonlocal drawn, anchors
+        ext = budgets_new - drawn
+        builder = _chain_builder(model, S, n, ext, starts=drawn, mesh=mesh)
+        t0 = time.perf_counter()
+        flat_ext, anchors = builder(chain_root, anchors)
+        flat_ext = jax.block_until_ready(flat_ext)
+        if meta is not None:
+            meta["chain_s"] = round(
+                meta["chain_s"] + time.perf_counter() - t0, 4)
+            meta["windows"] += 1
+            meta["drawn_slots"].append(int(ext.sum()))
+        ext_np = np.asarray(flat_ext)
+        eoff, _, _, _ = ragged_layout(ext, drawn)
+        for i in range(n):
+            segs[i] = np.concatenate(
+                [segs[i], ext_np[:, eoff[i]:eoff[i] + ext[i]]], axis=1)
+        drawn = budgets_new.copy()
+        return jnp.asarray(np.concatenate(segs, axis=1))
+
+    def chunk_prog(buds, Kc):
+        offs, widx_flat, _, _ = ragged_layout(buds)
+        offs_c = offs.astype(np.int32)
+        buds_c = buds.astype(np.int32)
+        widx_c = widx_flat.astype(np.int32)
+
+        key = ("ringleader", math, n, S, K, Kc, float(gamma),
+               buds.tobytes(), bool(jax.config.jax_enable_x64),
+               None if mesh is None else _mesh_cache_key(mesh),
+               _ById(model), _ById(problem))
+        hit = key in _SWEEP_PROGS
+        if meta is not None:
+            meta["cache_hit"] = hit
+        if hit:
+            return _SWEEP_PROGS[key]
+
+        def unit_prog(ch_flat, p, comp, x_prev, x_cur, trig, keys):
+            U = keys.shape[0]                 # local block under shard_map
+            offs_d = jnp.asarray(offs_c)
+            buds_d = jnp.asarray(buds_c)
+            widx_d = jnp.asarray(widx_c)
 
             def step(carry, _):
                 p, comp, x_prev, x_cur, trig, keys, bad = carry
                 sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
                 keys = sub[:, 0]
-                # entry p_i is worker i's first arrival past T_{k-1}
-                nxt = jnp.take_along_axis(
-                    ch, jnp.minimum(p, L - 1)[..., None], axis=2)[..., 0]
+                # flat slot offs_i + p_i is worker i's first arrival
+                # past T_{k-1} (p_i is a layout-independent count)
+                gidx = offs_d[None, :] + jnp.minimum(p, buds_d[None, :] - 1)
+                nxt = jnp.take_along_axis(ch_flat, gidx, axis=1)   # (U, n)
                 T = nxt.max(axis=1)
                 trig_new = nxt.argmax(axis=1).astype(jnp.int32)
-                newp = (ch <= T[:, None, None]).sum(axis=-1,
-                                                    dtype=jnp.int32)
+                le = (ch_flat <= T[:, None]).astype(jnp.int32)
+                newp = jax.vmap(lambda m: jax.ops.segment_sum(
+                    m, widx_d, num_segments=n))(le)                # (U, n)
                 B = newp - p
-                bad = bad | (newp >= L).any(axis=1)
+                bad = bad | (newp >= buds_d[None, :]).any(axis=1)
                 comp = comp + B.sum(axis=1, dtype=jnp.int32)
                 if math:
                     g = upd_fn(x_prev, x_cur, trig, B, sub[:, 1])
@@ -1021,32 +1160,67 @@ def _ringleader_run(model, problem, n, S, K, gamma, seeds, chain_len=None):
                         lambda xx: jnp.sum(problem.grad(xx) ** 2))(x_new)
                 else:
                     x_new = x_cur
-                    val = gn = jnp.zeros(S)
+                    val = gn = jnp.zeros(U)
                 return (newp, comp, x_cur, x_new, trig_new, keys, bad), \
                     (T, val, gn)
 
-            # trig = -1: round 0 has no previous trigger and x_prev ==
-            # x_cur == x0, so the first-slot rule is vacuous
-            init = (jnp.zeros((S, n), jnp.int32), jnp.zeros(S, jnp.int32),
-                    x_init, x_init, jnp.full(S, -1, jnp.int32),
-                    sub0[:, 0], jnp.zeros(S, bool))
-            (_, comp, _, x, _, _, bad), (T, val, gn) = lax.scan(
-                step, init, None, length=K)
-            return comp, x, T, val, gn, bad
+            init = (p, comp, x_prev, x_cur, trig, keys,
+                    jnp.zeros(U, bool))
+            (p, comp, x_prev, x_cur, trig, keys, bad), (T, val, gn) = \
+                lax.scan(step, init, None, length=Kc)
+            return p, comp, x_prev, x_cur, trig, keys, bad, T, val, gn
 
-        return jax.block_until_ready(jax.jit(run)(keys0))
+        if mesh is None:
+            return _prog_cache_put(_SWEEP_PROGS, key, jax.jit(unit_prog))
+        from jax.experimental.shard_map import shard_map
+        P = PartitionSpec
+        wrapped = shard_map(
+            unit_prog, mesh=mesh,
+            in_specs=(P("data"),) * 7,
+            out_specs=(P("data"),) * 7 + (P(None, "data"),) * 3,
+            check_rep=False)
+        return _prog_cache_put(_SWEEP_PROGS, key, jax.jit(wrapped))
 
-    L = L0
-    for _ in range(4):
-        comp, x, T, val, gn, bad = attempt(L)
-        if not bool(np.any(np.asarray(bad))):
-            return comp, x, T, val, gn, comp   # waste-free: used == comp
-        L *= 2                                 # outran the chains: retry
-    raise RuntimeError(
-        f"ringleader jax engine outran its {L // 2}-entry renewal chains "
-        f"even after doubling retries (extreme speed heterogeneity?); "
-        f"pass a larger async_chain to simulate_batch_jax or use "
-        f"backend='serial'")
+    ch_flat = draw_to(budgets)
+    Kc = min(K, 64)
+    T_all = np.zeros((K, S))
+    vals = np.zeros((K, S))
+    gns = np.zeros((K, S))
+    # trig = -1: round 0 has no previous trigger and x_prev == x_cur ==
+    # x0, so the first-slot rule is vacuous
+    carry = (jnp.zeros((S, n), jnp.int32), jnp.zeros(S, jnp.int32),
+             x_init, x_init, jnp.full(S, -1, jnp.int32), round_root)
+    done = 0
+    grows = 0
+    while done < K:
+        kc = min(Kc, K - done)
+        out = jax.block_until_ready(chunk_prog(drawn, kc)(ch_flat, *carry))
+        if meta is not None:
+            meta["chunk_runs"] += 1
+        p, comp, x_prev, x_cur, trig, rkeys, bad, T, val, gn = out
+        if bool(np.any(np.asarray(bad))):
+            # pool may hide arrivals inside this chunk: discard its
+            # outputs, double the budgets, draw ONLY the extension and
+            # re-run the SAME chunk from the saved chunk-start carry
+            if grows >= 4:
+                raise RuntimeError(
+                    f"ringleader jax engine outran its per-worker renewal "
+                    f"chains (max {int(drawn.max())} slots) even after "
+                    f"doubling windows (extreme speed heterogeneity?); "
+                    f"pass a larger async_chain to simulate_batch_jax or "
+                    f"use backend='serial'")
+            grows += 1
+            ch_flat = draw_to(drawn * 2)
+            continue
+        T_all[done:done + kc] = np.asarray(T)
+        if math:
+            vals[done:done + kc] = np.asarray(val)
+            gns[done:done + kc] = np.asarray(gn)
+        carry = (p, comp, x_prev, x_cur, trig, rkeys)
+        done += kc
+    comp_np = np.asarray(carry[1])
+    x = carry[3]
+    return comp_np, x, T_all, vals, gns, comp_np  # waste-free: used == comp
 
 
 # --------------------------------------------------------------------------
@@ -1077,25 +1251,51 @@ _CHAIN_SLACK = 8.0
 _CHAIN_RETRIES = 5
 
 
-def _chain_plan(model, n: int, arrivals: int) -> int:
-    """Initial per-worker chain length ``L`` for a window of ``arrivals``
-    global pops: expected max per-worker share of the window from the
-    model's mean rates, a fluctuation cushion, capped at ``arrivals + 1``
-    (one worker can own at most the whole window; the ``+ 1`` entry is
-    the exhaustion sentinel). The arrival-scan engine doubles ``L`` and
-    retries if a drawn chain is outrun anyway."""
+def _model_rates(model) -> np.ndarray:
+    """Per-worker mean arrival rates (host), the sizing input for both
+    chain plans: inverse mean times for fixed/sampled models, mean
+    cumulative power for universal models."""
     if isinstance(model, UniversalModel):
         span = float(model.grid[-1] - model.grid[0]) or 1.0
-        rates = np.maximum(np.asarray(model.cum[:, -1], dtype=float) / span,
-                           1e-9)
-    else:
-        taus = np.asarray(model.mean_times(), dtype=float)
-        rates = 1.0 / np.maximum(taus, 1e-12)
+        return np.maximum(np.asarray(model.cum[:, -1], dtype=float) / span,
+                          1e-9)
+    taus = np.asarray(model.mean_times(), dtype=float)
+    return 1.0 / np.maximum(taus, 1e-12)
+
+
+def _chain_plan(model, n: int, arrivals: int) -> int:
+    """Rectangular per-worker chain length ``L`` for a window of
+    ``arrivals`` global pops: expected max per-worker share of the
+    window from the model's mean rates, a fluctuation cushion, capped at
+    ``arrivals + 1`` (one worker can own at most the whole window). This
+    sizes every worker to the *fastest* worker's share — the
+    ``layout="rect"`` mode and the baseline the ragged plan is gated
+    against; the engine itself defaults to :func:`_chain_plan_ragged`."""
+    rates = _model_rates(model)
     share = float(rates.max() / max(rates.sum(), 1e-12))
     exp_max = arrivals * share
     L = int(np.ceil(_CHAIN_GROWTH * exp_max
                     + 4.0 * np.sqrt(max(exp_max, 1.0)) + _CHAIN_SLACK))
     return max(min(L, arrivals + 1), int(np.ceil(arrivals / n)) + 1, 4)
+
+
+def _chain_plan_ragged(model, n: int, arrivals: int) -> np.ndarray:
+    """Per-worker slot budgets ``L_i`` for a window of ``arrivals``
+    global pops: each worker gets its own expected share
+    ``arrivals * rate_i / sum(rates)`` with the same growth factor,
+    sqrt fluctuation cushion and additive slack as the rectangular
+    plan. Under skewed rates the flat pool ``sum(L_i)`` stays
+    ``O(arrivals)`` where the rectangle pays ``n * max(L_i)``; at
+    uniform rates every budget equals the rectangular share. Budgets
+    are clamped to ``[4, arrivals + 1]`` per worker; the windowed
+    engine doubles them (drawing only the extension) when a chain is
+    outrun anyway."""
+    rates = _model_rates(model)
+    share = rates / max(float(rates.sum()), 1e-12)
+    exp = arrivals * share
+    L = np.ceil(_CHAIN_GROWTH * exp + 4.0 * np.sqrt(np.maximum(exp, 1.0))
+                + _CHAIN_SLACK).astype(np.int64)
+    return np.maximum(np.minimum(L, arrivals + 1), 4)
 
 
 def _ring_pop_budget(n: int, K: int, max_delay: int) -> int:
@@ -1112,12 +1312,12 @@ def arrival_scan_work(model, n: int, K: int, ringmaster: bool = False,
                       max_delay: int = 0) -> "tuple[int, int]":
     """``(pool_elements, window_arrivals)`` the arrival-scan engine would
     process for this shape — the same sizing the engine itself uses
-    (:func:`_chain_plan` chains, :func:`_ring_pop_budget` window). The
-    cost-model router in :mod:`repro.core.batch` consumes this; pure
-    host arithmetic, no jax import."""
+    (:func:`_chain_plan_ragged` budgets, :func:`_ring_pop_budget`
+    window). The cost-model router in :mod:`repro.core.batch` consumes
+    this; pure host arithmetic, no jax import."""
     budget = _ring_pop_budget(n, K, max_delay) if ringmaster else 0
-    L = _chain_plan(model, n, K + budget)
-    return n * L, min(K + budget, n * L)
+    total = int(_chain_plan_ragged(model, n, K + budget).sum())
+    return total, min(K + budget, total)
 
 
 def _shard_wrap(fn, mesh, in_specs, out_specs):
@@ -1147,84 +1347,152 @@ def _mesh_rows(S: int, mesh) -> int:
     return S // D
 
 
-def _chain_builder(model, S: int, n: int, L: int, mesh=None):
-    """``chains(chain_keys) -> (S, n, L)`` absolute arrival times of each
-    worker's renewal chain from ``t = 0`` (entry ``j`` = the worker's
-    ``j+1``-th arrival). Sampled models draw prefix-stable
-    :func:`~repro.core.time_models.jax_chain_draws` duration rows and
-    cumsum; FixedTimes is the closed form ``(j+1) * tau``; universal
-    models iterate the deterministic ``finish_times_jax`` inversion.
-    Timing-relevant programs are jit-cached across calls (keyed by the
-    model's sampler identity / the model itself, the static shape, the
-    x64 mode and the mesh), so same-shape sweeps compile once. With a
-    ``mesh`` the program is ``shard_map``ped over the seed/unit axis —
-    every chain row is a pure function of its own key, so the sharded
+def _chain_builder(model, S: int, n: int, budgets, starts=None, mesh=None):
+    """``chains(chain_keys, anchors) -> (flat, anchors_out)`` — ragged
+    per-worker renewal chains over ONE worker-major flat buffer.
+
+    ``budgets[i]`` slots are drawn for worker ``i`` starting at global
+    slot ``starts[i]`` (0 for a fresh window); ``flat`` is ``(S,
+    sum(budgets))`` ABSOLUTE arrival times laid out by
+    :func:`~repro.core.time_models.ragged_layout`, and ``anchors_out``
+    is each worker's last absolute time — the carry a window extension
+    feeds back as ``anchors`` so accumulation continues the exact float
+    recurrence (sequential adds, bitwise split-invariant; ``jnp.cumsum``
+    would not be). Slot ``(i, g)``'s duration is the fold-in keyed
+    :func:`~repro.core.time_models.jax_chain_draws_ragged` contract
+    draw, so growing budgets or extending windows appends slots and
+    leaves certified prefixes bitwise unchanged. FixedTimes is the
+    closed form ``(g + 1) * tau`` (no RNG); universal models iterate
+    the deterministic ``finish_times_jax`` inversion from ``anchors``.
+    Programs are jit-cached (keyed by sampler/model identity, the
+    budget/start layout bytes, x64 and the mesh); with a ``mesh`` the
+    program is ``shard_map``ped over the seed/unit axis — every chain
+    row is a pure function of its own key and anchor row, so sharded
     rows are bitwise the unsharded rows."""
     import jax
     import jax.numpy as jnp
     from jax import lax
     from jax.sharding import PartitionSpec as P
 
-    from .time_models import jax_chain_draws
+    from .time_models import ragged_layout
+
+    b = np.asarray(budgets, dtype=np.int64)
+    s0 = (np.zeros(n, np.int64) if starts is None
+          else np.asarray(starts, dtype=np.int64))
+    offsets, widx, gslot, total = ragged_layout(b, s0)
+    jmin = int(s0.min()) if n else 0
+    jmax = int((s0 + b).max()) if n else 0
+    steps = max(jmax - jmin, 0)
 
     x64 = bool(jax.config.jax_enable_x64)
     rows = _mesh_rows(S, mesh)
     mk = None if mesh is None else _mesh_cache_key(mesh)
+    layout_key = (b.tobytes(), s0.tobytes())
+    dt = _engine_dtype()
+
     if isinstance(model, FixedTimes):
-        key = ("fixed", S, n, L, x64, mk)
+        key = ("fixed", S, n, layout_key, x64, mk)
         if key not in _CHAIN_PROGS:
-            def fixed_chain(taus, chain_keys):      # keys unused: no RNG
-                steps = taus[None, :, None] * jnp.arange(1, L + 1)
-                return jnp.broadcast_to(steps, (rows, n, L))
+            gs = jnp.asarray(gslot)
+            wi = jnp.asarray(widx)
+            bd = jnp.asarray(b)
+            sd = jnp.asarray(s0)
+
+            def fixed_chain(taus, chain_keys, anchors):  # keys/anchors: no RNG
+                flat = jnp.broadcast_to(taus[wi] * (gs + 1), (rows, total))
+                out_anchor = jnp.broadcast_to(taus * (sd + bd).astype(taus.dtype),
+                                              (rows, n))
+                return flat, out_anchor
 
             _prog_cache_put(_CHAIN_PROGS, key,
                             _shard_wrap(fixed_chain, mesh,
-                                        (P(), P("data")), P("data")))
+                                        (P(), P("data"), P("data")),
+                                        (P("data"), P("data"))))
         prog = _CHAIN_PROGS[key]
         taus = model.taus
-        return lambda chain_keys: prog(jnp.asarray(taus), chain_keys)
-    if isinstance(model, UniversalModel):
-        key = (model, S, n, L, x64, mk)             # identity-hashed
-        if key not in _CHAIN_PROGS:
-            def universal_chain(chain_keys):        # keys unused: no RNG
-                def body(c, _):
-                    nxt = model.finish_times_jax(c)
-                    return nxt, nxt
+        return lambda chain_keys, anchors: prog(jnp.asarray(taus, dt),
+                                                chain_keys, anchors)
 
-                _, out = lax.scan(body, jnp.zeros((rows, n)), None,
-                                  length=L)
-                return jnp.moveaxis(out, 0, -1)     # (rows, n, L)
+    # in-budget mask and flat destination per global slot (host consts);
+    # out-of-budget entries scatter to index `total` and drop
+    jg = np.arange(jmin, jmax, dtype=np.int64)[:, None]
+    rel = jg - s0[None, :]
+    in_b = (rel >= 0) & (rel < b[None, :])
+    dest_np = np.where(in_b, offsets[None, :] + rel, total).astype(np.int32)
+
+    if isinstance(model, UniversalModel):
+        key = (model, S, n, layout_key, x64, mk)    # identity-hashed
+        if key not in _CHAIN_PROGS:
+            mask = jnp.asarray(in_b)
+            dest = jnp.asarray(dest_np)
+
+            def universal_chain(chain_keys, anchors):    # keys unused
+                def body(carry, inp):
+                    c, buf = carry
+                    m, d = inp
+                    nxt = model.finish_times_jax(c)
+                    c = jnp.where(m[None, :], nxt, c)
+                    buf = buf.at[:, d].set(c, mode="drop")
+                    return (c, buf), None
+
+                buf0 = jnp.zeros((rows, total), dt)
+                (c, buf), _ = lax.scan(body, (anchors, buf0), (mask, dest))
+                return buf, c
 
             _prog_cache_put(_CHAIN_PROGS, key,
                             _shard_wrap(universal_chain, mesh,
-                                        (P("data"),), P("data")))
+                                        (P("data"), P("data")),
+                                        (P("data"), P("data"))))
         return _CHAIN_PROGS[key]
+
     sampler = model.jax_sampler
-    key = (sampler, S, n, L, x64, mk)
+    key = (sampler, S, n, layout_key, x64, mk)
     if key not in _CHAIN_PROGS:
-        def sampled_chain(chain_keys):
-            d = jax_chain_draws(chain_keys, L, sampler)     # (rows, L, n)
-            return jnp.cumsum(jnp.moveaxis(d, 1, 2), axis=-1)
+        mask = jnp.asarray(in_b)
+        dest = jnp.asarray(dest_np)
+        jgd = jnp.arange(jmin, jmax)
+
+        def sampled_chain(chain_keys, anchors):
+            def per_seed(ck, anchor):
+                def body(carry, inp):
+                    tot, buf = carry
+                    j, m, d = inp
+                    row = sampler(jax.random.fold_in(ck, j))
+                    tot = jnp.where(m, tot + row, tot)
+                    buf = buf.at[d].set(tot, mode="drop")
+                    return (tot, buf), None
+
+                buf0 = jnp.zeros((total,), dt)
+                (tot, buf), _ = lax.scan(body, (anchor, buf0),
+                                         (jgd, mask, dest))
+                return buf, tot
+
+            return jax.vmap(per_seed)(chain_keys, anchors)
 
         _prog_cache_put(_CHAIN_PROGS, key,
                         _shard_wrap(sampled_chain, mesh,
-                                    (P("data"),), P("data")))
+                                    (P("data"), P("data")),
+                                    (P("data"), P("data"))))
     return _CHAIN_PROGS[key]
 
 
-def _ring_timing_prog(S: int, n: int, K: int, max_delay: int, mesh=None):
-    """Cached timing-only Ringmaster arrival scan: O(1) per-arrival work
-    (version gather, delay test, version scatter) over the pre-merged
-    window. Returns ``(k_final, computed, accept)``; wall-clock times
-    stay host-side (the merged order already carries them). With a
-    ``mesh`` the scan is ``shard_map``ped over the seed/unit columns —
-    the recursion is column-independent, so sharding is bitwise-free."""
+def _ring_timing_prog(S: int, n: int, K: int, max_delay: int, A: int,
+                      mesh=None):
+    """Cached timing-only Ringmaster arrival-scan *window*: O(1)
+    per-arrival work (version gather, delay test, version scatter) over
+    ``A`` pre-merged arrivals, gated by a per-(arrival, seed) ``valid``
+    mask and resumed from a carried ``(k, ver, comp)`` state — window
+    extensions scan only newly certified arrivals, never the certified
+    prefix. Returns ``(k, ver, comp, accept)``; wall-clock times stay
+    host-side (the merged order already carries them). With a ``mesh``
+    the scan is ``shard_map``ped over the seed/unit columns — the
+    recursion is column-independent, so sharding is bitwise-free."""
     import jax
     import jax.numpy as jnp
     from jax import lax
     from jax.sharding import PartitionSpec as P
 
-    key = (S, n, K, max_delay, bool(jax.config.jax_enable_x64),
+    key = (S, n, K, max_delay, A, bool(jax.config.jax_enable_x64),
            None if mesh is None else _mesh_cache_key(mesh))
     if key in _SCAN_PROGS:
         return _SCAN_PROGS[key]
@@ -1232,36 +1500,41 @@ def _ring_timing_prog(S: int, n: int, K: int, max_delay: int, mesh=None):
     R = _mesh_rows(S, mesh)
     rows = jnp.arange(R)
 
-    def run(w_seq):                                 # (A, R) worker ids
-        def body(carry, w):
+    def run(w_seq, valid, k0, ver0, comp0):         # (A, R) x2, carry-in
+        def body(carry, inp):
             k, ver, comp = carry
+            w, v = inp
             vw = ver[rows, w]
-            active = k < K
-            acc = active & ((k - vw) <= max_delay)
+            live = v & (k < K)
+            acc = live & ((k - vw) <= max_delay)
             k = k + acc
-            ver = ver.at[rows, w].set(jnp.where(active, k, vw))
-            comp = comp + active
+            ver = ver.at[rows, w].set(jnp.where(live, k, vw))
+            comp = comp + live
             return (k, ver, comp), acc
 
-        init = (jnp.zeros(R, jnp.int32), jnp.zeros((R, n), jnp.int32),
-                jnp.zeros(R, jnp.int32))
-        (kf, _, comp), acc = lax.scan(body, init, w_seq)
-        return kf, comp, acc                        # acc: (A, R)
+        (kf, ver, comp), acc = lax.scan(body, (k0, ver0, comp0),
+                                        (w_seq, valid))
+        return kf, ver, comp, acc                   # acc: (A, R)
 
     return _prog_cache_put(
         _SCAN_PROGS, key,
-        _shard_wrap(run, mesh, (P(None, "data"),),
-                    (P("data"), P("data"), P(None, "data"))))
+        _shard_wrap(run, mesh,
+                    (P(None, "data"), P(None, "data"), P("data"),
+                     P("data"), P("data")),
+                    (P("data"), P("data"), P("data"), P(None, "data"))))
 
 
 def _arrival_math_prog(problem, gamma, delay_adaptive, S, n, K, max_delay,
                        mesh=None):
-    """Math-path arrival scan (Async and Ringmaster): per arrival, one
-    oracle draw at the popped worker's start-iterate snapshot, a masked
-    step, and version/snapshot scatters. Gradient keys are
-    ``fold_in(seed key, global arrival index)`` — prefix-stable, so
-    chain-doubling retries leave already-certified seeds bitwise
-    unchanged. Closes over the oracle: compiles per call, like
+    """Math-path arrival-scan *window* (Async and Ringmaster): per
+    arrival, one oracle draw at the popped worker's start-iterate
+    snapshot, a masked step, and version/snapshot scatters — gated by a
+    per-(arrival, seed) ``valid`` mask and resumed from a carried
+    ``(k, ver, comp, x, xs)`` state, so window extensions scan only the
+    newly certified arrivals. Gradient keys are ``fold_in(seed key,
+    global arrival index)`` (the ``pos`` input) — prefix-stable, so
+    extensions and chain growth leave already-certified arrivals
+    bitwise unchanged. Closes over the oracle: compiles per call, like
     :func:`_general_run`. With a ``mesh`` the seed/unit axis is
     ``shard_map``ped (every column's recursion is independent)."""
     import jax
@@ -1272,14 +1545,14 @@ def _arrival_math_prog(problem, gamma, delay_adaptive, S, n, K, max_delay,
     R = _mesh_rows(S, mesh)
     rows = jnp.arange(R)
 
-    def run(w_seq, gkey_root, x_init, xs_init):     # (A, R), (R, 2), ...
+    def run(w_seq, valid, pos, gkey_root, k0, ver0, comp0, x0, xs0):
         def body(carry, inp):
             k, ver, comp, x, xs = carry
-            w, a = inp
+            w, v, a = inp
             gk = jax.vmap(lambda kk: jax.random.fold_in(kk, a))(gkey_root)
             vw = ver[rows, w]
-            active = k < K
-            acc = active & ((k - vw) <= max_delay)
+            live = v & (k < K)
+            acc = live & ((k - vw) <= max_delay)
             g = jax.vmap(problem.stoch_grad)(xs[rows, w], gk)
             mult = (1.0 / (1.0 + (k - vw).astype(g.dtype) / n)
                     if delay_adaptive else jnp.ones(R, g.dtype))
@@ -1287,53 +1560,64 @@ def _arrival_math_prog(problem, gamma, delay_adaptive, S, n, K, max_delay,
             val = jax.vmap(problem.f)(x)
             gn = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(x)
             k = k + acc
-            ver = ver.at[rows, w].set(jnp.where(active, k, vw))
+            ver = ver.at[rows, w].set(jnp.where(live, k, vw))
             xs = xs.at[rows, w].set(
-                jnp.where(active[:, None], x, xs[rows, w]))
-            comp = comp + active
+                jnp.where(live[:, None], x, xs[rows, w]))
+            comp = comp + live
             return (k, ver, comp, x, xs), (acc, val, gn)
 
-        A = w_seq.shape[0]
-        init = (jnp.zeros(R, jnp.int32), jnp.zeros((R, n), jnp.int32),
-                jnp.zeros(R, jnp.int32), x_init, xs_init)
-        (kf, _, comp, x, _), (acc, val, gn) = lax.scan(
-            body, init, (w_seq, jnp.arange(A, dtype=jnp.int32)))
-        return kf, comp, x, acc, val, gn
+        (kf, ver, comp, x, xs), (acc, val, gn) = lax.scan(
+            body, (k0, ver0, comp0, x0, xs0), (w_seq, valid, pos))
+        return kf, ver, comp, x, xs, acc, val, gn
 
     return _shard_wrap(
         run, mesh,
-        (P(None, "data"), P("data"), P("data"), P("data")),
-        (P("data"), P("data"), P("data"), P(None, "data"),
-         P(None, "data"), P(None, "data")))
+        (P(None, "data"), P(None, "data"), P(None), P("data"), P("data"),
+         P("data"), P("data"), P("data"), P("data")),
+        (P("data"), P("data"), P("data"), P("data"), P("data"),
+         P(None, "data"), P(None, "data"), P(None, "data")))
 
 
 def _chain_scan_run(model, problem, ringmaster, max_delay, delay_adaptive,
                     n, S, K, gamma, seeds, chain_len=None, mesh=None,
-                    meta=None):
-    """Async/Ringmaster as the renewal-chain arrival scan (module doc):
-    a popped worker restarts immediately whether its gradient is used or
-    discarded, so every worker's arrival times form a renewal chain that
-    is INDEPENDENT of the server recursion. The engine therefore
-    pre-draws all chains in bulk, merges the ``(S, n*L)`` pool into
-    global arrival order once (ties by (worker, arrival index) — the
-    backend's documented contract, matching the while_loop's argmin),
-    and replays the server recursion over the ordered window:
+                    meta=None, layout="ragged"):
+    """Async/Ringmaster as the ragged, windowed renewal-chain arrival
+    scan (module doc): a popped worker restarts immediately whether its
+    gradient is used or discarded, so every worker's arrival times form
+    a renewal chain that is INDEPENDENT of the server recursion. The
+    engine pre-draws per-worker-budgeted chains
+    (:func:`_chain_plan_ragged` — the flat worker-major pool is
+    ``sum(L_i)`` instead of the rectangle's ``n * max(L_i)``), merges
+    the pool into global arrival order (ties by (worker, arrival
+    index) — the backend's documented contract, preserved by the
+    worker-major ragged layout), and replays the server recursion over
+    the *certified* prefix — the arrivals strictly before the seed's
+    certified horizon ``h_s = min_i`` (worker ``i``'s last drawn
+    time), which provably contains no unmodeled arrival:
 
-    * timing-only Async — no recursion at all: every arrival is a step,
-      so the first ``K`` merged arrivals ARE the step times;
-    * Ringmaster / any math path — ONE ``lax.scan`` whose body is O(1)
+    * timing-only Async — no recursion at all: every certified arrival
+      is a step, so the first ``K`` merged arrivals ARE the step times;
+    * Ringmaster / any math path — a ``lax.scan`` whose body is O(1)
       per arrival (gather the popped worker's version, delay-test,
       masked step, scatter version/snapshot), vs the while_loop's
       O(S·n) argmin per arrival and K serialized pops.
 
+    On chain exhaustion (a seed needs arrivals at or past its horizon)
+    the engine does NOT cold-restart: it doubles the budgets, draws
+    ONLY the extension slots (fold-in keyed prefix-stable draws,
+    anchored sequential accumulation), re-merges, and resumes the scan
+    from the carried ``(k, versions, snapshots, x)`` state over only
+    the newly certified arrivals — the certified prefix is never
+    re-drawn or re-scanned (``meta['scan_ranges']`` records the
+    disjoint per-window position ranges). ``layout="rect"`` forces
+    uniform rectangular budgets (:func:`_chain_plan`) for benchmarking;
+    results are bitwise ``layout="ragged"`` under x64 (resume parity).
+
     Exactness: identical event order to the serial heap for
     deterministic models in generic position (delayed-gradient math via
     the same per-worker snapshots); distribution-equal for sampled
-    models. Chain coverage is verified per seed — a worker whose last
-    chain entry lands at or before the seed's final step time could have
-    had unmodeled arrivals, so the run retries with doubled chains
-    (prefix-stable draws keep certified seeds bitwise unchanged), then
-    raises rather than silently dropping arrivals.
+    models. After :data:`_CHAIN_RETRIES` windows the engine raises
+    rather than silently dropping arrivals.
 
     ``mesh`` shards the chain build and the arrival scan over the
     seed/unit rows (``shard_map`` on the 1-D ``data`` axis; rows must be
@@ -1341,14 +1625,16 @@ def _chain_scan_run(model, problem, ringmaster, max_delay, delay_adaptive,
     sort and the per-seed compaction stay host-side exactly as in the
     unsharded path, and every device-side row is a pure function of its
     own key, so sharded results are bitwise the unsharded results.
-    ``meta`` (if given) collects chain/scan wall times and program-cache
-    hits for the routing record."""
+    ``meta`` (if given) collects chain/scan wall times, program-cache
+    hits, window count and draw/scan accounting for the routing
+    record."""
     import time
 
     import jax
     import jax.numpy as jnp
 
     from ..kernels.order_stats import smallest_k
+    from .time_models import ragged_layout
 
     math = problem is not None
     keys0, x_init = _keys_and_x(problem, S, n, seeds)
@@ -1361,83 +1647,164 @@ def _chain_scan_run(model, problem, ringmaster, max_delay, delay_adaptive,
     # Async never discards: the window is exactly K. Ringmaster gets the
     # empirical discard budget (see _ring_pop_budget).
     budget = _ring_pop_budget(n, K, max_delay) if ringmaster else 0
-    L = int(chain_len) if chain_len else _chain_plan(model, n, K + budget)
+    if chain_len:
+        budgets = np.full(n, int(chain_len), np.int64)
+    elif layout == "rect":
+        budgets = np.full(n, _chain_plan(model, n, K + budget), np.int64)
+    elif layout == "ragged":
+        budgets = _chain_plan_ragged(model, n, K + budget)
+    else:
+        raise ValueError(f"unknown chain layout {layout!r}; "
+                         "use 'ragged' or 'rect'")
     scan_needed = math or ringmaster
+    dt = _engine_dtype()
+
+    # host window state: per-worker drawn slot counts, the canonical
+    # worker-major pool segments, and the per-seed progress counters
+    drawn = np.zeros(n, np.int64)
+    segs = [np.zeros((S, 0)) for _ in range(n)]
+    anchors = jnp.zeros((S, n), dt)
+    carry = None                        # device scan carry across windows
+    c_prev = np.zeros(S, np.int64)      # certified arrivals consumed
+    kfin = np.zeros(S, np.int64)
+    comp = np.zeros(S, np.int64)
+    filled = np.zeros(S, np.int64)      # accepted steps committed
+    T = np.zeros((K, S))
+    vK = np.zeros((K, S)) if math else None
+    gK = np.zeros((K, S)) if math else None
+    x = val = gn = None
+    if meta is not None:
+        meta.setdefault("chain_s", 0.0)
+        meta.setdefault("scan_s", 0.0)
+        meta.update(layout=layout, windows=0, drawn_slots=[],
+                    scan_ranges=[])
 
     for _ in range(_CHAIN_RETRIES):
-        A = min(K + budget, n * L)
-        if A < K:              # pool cannot even contain K arrivals
-            L *= 2
-            continue
-        builder = _chain_builder(model, S, n, L, mesh=mesh)
+        # draw ONLY the extension slots, anchored at the carried last
+        # absolute times (window 0: everything, anchored at t = 0)
+        ext = budgets - drawn
+        builder = _chain_builder(model, S, n, ext, starts=drawn, mesh=mesh)
         t0 = time.perf_counter()
-        chains = jax.block_until_ready(builder(chain_root))
+        flat_ext, anchors = builder(chain_root, anchors)
+        flat_ext = jax.block_until_ready(flat_ext)
         if meta is not None:
-            meta["chain_s"] = round(time.perf_counter() - t0, 4)
-        pool = chains.reshape(S, n * L)
-        t_seq, idx = smallest_k(pool, A)            # (S, A) ascending
-        w_seq = (idx // L).astype(jnp.int32).T      # (A, S)
-        last = np.asarray(chains[:, :, L - 1])      # exhaustion sentinel
-        t_host = np.asarray(t_seq)                  # (S, A)
+            meta["chain_s"] = round(
+                meta["chain_s"] + time.perf_counter() - t0, 4)
+            meta["windows"] += 1
+            meta["drawn_slots"].append(int(ext.sum()))
+        ext_np = np.asarray(flat_ext)
+        eoff, _, _, _ = ragged_layout(ext, drawn)
+        for i in range(n):
+            segs[i] = np.concatenate(
+                [segs[i], ext_np[:, eoff[i]:eoff[i] + ext[i]]], axis=1)
+        drawn = budgets.copy()
+        pool = np.concatenate(segs, axis=1)         # canonical (S, total)
+        _, widx_flat, _, total = ragged_layout(drawn)
+        if meta is not None:
+            meta["pool_elems"] = total
+
+        # merged global arrival order + certified horizon per seed
+        h = np.asarray(anchors).min(axis=1)         # (S,)
+        A_cap = int(min(K + budget, total))
+        t_seq, idx = smallest_k(jnp.asarray(pool), A_cap)
+        t_host = np.asarray(t_seq)                  # (S, A_cap) ascending
+        w_all = widx_flat[np.asarray(idx)]          # (S, A_cap) worker ids
+        done = kfin >= K
+        # certified: strictly before the horizon (an arrival AT the
+        # horizon could tie with an undrawn slot of the slowest worker)
+        c_new = np.array([np.searchsorted(t_host[s], h[s], side="left")
+                          for s in range(S)], dtype=np.int64)
+        c_new = np.where(done, c_prev,
+                         np.clip(c_new, c_prev, A_cap))
+
+        live_seeds = np.flatnonzero(~done)
+        p0 = int(c_prev[live_seeds].min()) if live_seeds.size else 0
+        p1 = int(c_new.max()) if live_seeds.size else 0
 
         if not scan_needed:
-            # timing-only Async: arrivals ARE the steps (A == K)
-            kfin = np.full(S, K)
-            comp = np.full(S, K)
-            T = t_host.T                            # (K, S)
-            x = val = gn = None
-            T_end = t_host[:, K - 1]
-        else:
+            # timing-only Async: every certified arrival is a step
+            for s in live_seeds:
+                take = min(int(c_new[s] - c_prev[s]), K - int(kfin[s]))
+                if take > 0:
+                    lo = int(c_prev[s])
+                    T[int(filled[s]):int(filled[s]) + take, s] = \
+                        t_host[s, lo:lo + take]
+                    filled[s] += take
+                    kfin[s] += take
+                    comp[s] += take
+            if meta is not None:
+                meta["scan_ranges"].append((p0, p1))
+        elif p1 > p0:
+            W = p1 - p0
+            pos_idx = np.arange(p0, p1, dtype=np.int64)
+            w_win = jnp.asarray(
+                w_all[:, p0:p1].T.astype(np.int32))          # (W, S)
+            valid = jnp.asarray(
+                (pos_idx[:, None] >= c_prev[None, :])
+                & (pos_idx[:, None] < c_new[None, :]))       # (W, S)
+            if carry is None:
+                k0 = jnp.zeros(S, jnp.int32)
+                ver0 = jnp.zeros((S, n), jnp.int32)
+                comp0 = jnp.zeros(S, jnp.int32)
+                carry = ((k0, ver0, comp0, x_init, xs_init) if math
+                         else (k0, ver0, comp0))
             t0 = time.perf_counter()
             if math:
                 prog = _arrival_math_prog(problem, gamma, delay_adaptive,
                                           S, n, K, max_delay, mesh=mesh)
-                kfin, comp, x, acc, val, gn = jax.block_until_ready(
-                    prog(w_seq, gkey_root, x_init, xs_init))
-                val = np.asarray(val)               # (A, S)
-                gn = np.asarray(gn)
+                pos = jnp.asarray(pos_idx.astype(np.int32))
+                kf, ver, cmp_, x_c, xs_c, acc, v_w, g_w = \
+                    jax.block_until_ready(prog(
+                        w_win, valid, pos, gkey_root, *carry))
+                carry = (kf, ver, cmp_, x_c, xs_c)
+                v_w = np.asarray(v_w)
+                g_w = np.asarray(g_w)
             else:
                 scan_key_known = (
-                    S, n, K, max_delay, bool(jax.config.jax_enable_x64),
+                    S, n, K, max_delay, W,
+                    bool(jax.config.jax_enable_x64),
                     None if mesh is None else _mesh_cache_key(mesh)
                 ) in _SCAN_PROGS
                 if meta is not None:
                     meta["scan_cache_hit"] = scan_key_known
-                kfin, comp, acc = jax.block_until_ready(
-                    _ring_timing_prog(S, n, K, max_delay,
-                                      mesh=mesh)(w_seq))
-                x = val = gn = None
+                kf, ver, cmp_, acc = jax.block_until_ready(
+                    _ring_timing_prog(S, n, K, max_delay, W,
+                                      mesh=mesh)(w_win, valid, *carry))
+                carry = (kf, ver, cmp_)
             if meta is not None:
-                meta["scan_s"] = round(time.perf_counter() - t0, 4)
-            kfin = np.asarray(kfin)
-            comp = np.asarray(comp)
-            acc = np.asarray(acc)                   # (A, S) accept mask
-            # compact accepted arrivals into the (K, S) step buffers
-            T = np.zeros((K, S))
-            if math:
-                vK = np.zeros((K, S))
-                gK = np.zeros((K, S))
-            T_end = np.full(S, np.inf)
-            for s in range(S):
-                sel = np.flatnonzero(acc[:, s])[:K]
+                meta["scan_s"] = round(
+                    meta["scan_s"] + time.perf_counter() - t0, 4)
+                meta["scan_ranges"].append((p0, p1))
+            kfin = np.asarray(kf).astype(np.int64)
+            comp = np.asarray(cmp_).astype(np.int64)
+            acc = np.asarray(acc)                    # (W, S), valid-gated
+            for s in live_seeds:
+                sel = np.flatnonzero(acc[:, s])
+                sel = sel[:K - int(filled[s])]
                 got = sel.size
-                T[:got, s] = t_host[s, sel]
+                lo = int(filled[s])
+                T[lo:lo + got, s] = t_host[s, p0 + sel]
                 if math:
-                    vK[:got, s] = val[sel, s]
-                    gK[:got, s] = gn[sel, s]
-                if got == K:
-                    T_end[s] = T[K - 1, s]
-            if math:
-                val, gn = vK, gK
+                    vK[lo:lo + got, s] = v_w[sel, s]
+                    gK[lo:lo + got, s] = g_w[sel, s]
+                filled[s] += got
 
-        bad = (np.asarray(kfin) < K) | (last <= T_end[:, None]).any(axis=1)
-        if not bad.any():
-            return np.asarray(comp), x, T, val, gn
-        L *= 2
-        budget = min(budget * 4, n * L - K) if ringmaster else 0
+        c_prev = c_new
+        if (kfin >= K).all():
+            if math:
+                x = carry[3]
+                val, gn = vK, gK
+            return comp.astype(np.int64), x, T, val, gn
+        # exhaustion: double every budget (the extension draws and
+        # scans only the new slots/arrivals); Ringmaster's discard
+        # budget grows with the pool so the window can absorb storms
+        budgets = budgets * 2
+        if ringmaster:
+            budget = min(budget * 4, int(budgets.sum()) - K)
     raise RuntimeError(
-        f"arrival-scan jax engine could not certify chain coverage within "
-        f"{L // 2}-slot renewal chains even after doubling retries "
+        f"arrival-scan jax engine could not certify chain coverage "
+        f"within its per-worker renewal-chain budgets (max "
+        f"{int(budgets.max()) // 2} slots) even after doubling windows "
         f"(extreme speed heterogeneity or a discard storm — max_delay "
         f"far below the typical delay?); pass a larger chain_len to "
         f"simulate_batch_jax or use backend='serial'")
@@ -1587,6 +1954,7 @@ def simulate_batch_jax(strategy: AggregationStrategy,
                        malenia_chain: Optional[int] = None,
                        async_chain: Optional[int] = None,
                        async_engine: str = "scan",
+                       async_layout: str = "ragged",
                        x64: bool = False) -> List[Trace]:
     """One jitted ``(seeds, ...)`` array program per strategy family
     (m-sync round scan, Rennala/Malenia renewal scans, Async/Ringmaster
@@ -1607,8 +1975,13 @@ def simulate_batch_jax(strategy: AggregationStrategy,
     ``L``; the engine retries with doubled chains, then raises, if a
     round outruns them. ``async_chain`` is the analogous override for
     the Async/Ringmaster arrival-scan chains (default from
-    :func:`_chain_plan`); ``async_engine="while"`` falls back to the PR 4
-    ``lax.while_loop`` reference engine (benchmarking/cross-checks only).
+    :func:`_chain_plan_ragged`); ``async_engine="while"`` falls back to
+    the PR 4 ``lax.while_loop`` reference engine (benchmarking/
+    cross-checks only). ``async_layout`` picks the arrival-scan chain
+    layout: ``"ragged"`` (default — per-worker budgets proportional to
+    mean rates) or ``"rect"`` (uniform rectangular budgets, the
+    pre-windowed baseline); both produce identical results (bitwise
+    under x64) since certified arrivals are layout-independent.
 
     ``x64=True`` runs the whole program in float64 (via
     ``jax.experimental.enable_x64``): slower, but gives per-run tie
@@ -1633,7 +2006,7 @@ def simulate_batch_jax(strategy: AggregationStrategy,
                 seeds=seeds, record_every=record_every,
                 use_pallas=use_pallas, malenia_chain=malenia_chain,
                 async_chain=async_chain, async_engine=async_engine,
-                x64=False)
+                async_layout=async_layout, x64=False)
 
     strategy.bind(model.n)
     kind = _check_supported(strategy, model, problem)
@@ -1652,7 +2025,8 @@ def simulate_batch_jax(strategy: AggregationStrategy,
                                  use_pallas=use_pallas,
                                  malenia_chain=malenia_chain,
                                  async_chain=async_chain,
-                                 async_engine=async_engine)
+                                 async_engine=async_engine,
+                                 async_layout=async_layout)
         return [dataclasses.replace(row[0]) for _ in range(S)]
 
     fixed = isinstance(model, FixedTimes)
@@ -1697,7 +2071,8 @@ def simulate_batch_jax(strategy: AggregationStrategy,
         elif async_engine == "scan":
             comp, x, T, val, gn = _chain_scan_run(
                 model, problem, kind in ("ringmaster", "optimal_asgd"),
-                md, adaptive, n, S, K, gamma, seeds, chain_len=async_chain)
+                md, adaptive, n, S, K, gamma, seeds, chain_len=async_chain,
+                layout=async_layout)
         else:
             raise ValueError(f"unknown async_engine {async_engine!r}; "
                              "use 'scan' or 'while'")

@@ -75,6 +75,8 @@ __all__ = [
     "philox_rngs",
     "jax_worker_key_grid",
     "jax_chain_draws",
+    "ragged_layout",
+    "jax_chain_draws_ragged",
     "truncated_normal_times",
     "exponential_times",
     "shifted_exponential_times",
@@ -157,6 +159,95 @@ def jax_chain_draws(chain_keys, L: int, row_sampler):
         return jax.vmap(
             lambda j: row_sampler(jax.random.fold_in(key, j)))(
                 jnp.arange(L))
+
+    return jax.vmap(per_seed)(chain_keys)
+
+
+def ragged_layout(budgets, starts=None):
+    """Host-side offset/slot-budget layout for ragged per-worker chains.
+
+    ``budgets[i]`` is worker ``i``'s slot count; the flat buffer packs
+    the workers' slot runs back to back (worker-major), so flat index
+    ``offsets[i] + j`` holds worker ``i``'s ``j``-th slot. Returns
+    ``(offsets, widx, gslot, total)``: per-worker start offsets
+    ``(n,)``, the flat-index -> worker map ``(total,)``, the
+    flat-index -> *global* slot index map ``(total,)`` (``starts[i] +
+    j`` — window extensions pass the slots already drawn so the global
+    slot index keeps counting across windows), and the flat length.
+    Worker-major packing keeps the merged-pool tie contract intact:
+    flat-index tie-breaking in :func:`~repro.kernels.order_stats.
+    smallest_k` is (worker, global slot) lexicographic order, exactly
+    the rectangular pool's documented contract."""
+    b = np.asarray(budgets, dtype=np.int64)
+    n = b.size
+    s0 = (np.zeros(n, np.int64) if starts is None
+          else np.asarray(starts, dtype=np.int64))
+    if (b < 0).any() or (s0 < 0).any():
+        raise ValueError("ragged_layout needs nonnegative budgets/starts")
+    offsets = np.concatenate([[0], np.cumsum(b)[:-1]]).astype(np.int64)
+    total = int(b.sum())
+    widx = np.repeat(np.arange(n, dtype=np.int64), b)
+    gslot = (np.arange(total, dtype=np.int64) - np.repeat(offsets, b)
+             + np.repeat(s0, b))
+    return offsets, widx, gslot, total
+
+
+def jax_chain_draws_ragged(chain_keys, budgets, row_sampler, starts=None):
+    """``(seeds, total)`` flat ragged renewal-duration buffer — the
+    per-worker-budgeted twin of :func:`jax_chain_draws`.
+
+    Entry ``(s, offsets[i] + j)`` is bitwise
+    ``row_sampler(fold_in(chain_keys[s], starts[i] + j))[i]`` — i.e.
+    worker ``i``'s slot at global index ``g = starts[i] + j`` equals
+    column ``i`` of the rectangular contract's row ``g``. The fold-in
+    keyed prefix-stability contract is therefore preserved exactly:
+    growing any worker's budget (or drawing a window extension via
+    ``starts``) appends slots and never reshuffles or re-keys existing
+    ones, and with uniform budgets and ``starts=None`` the buffer is
+    ``jax_chain_draws(chain_keys, L, row_sampler)`` transposed to
+    worker-major and flattened, bitwise.
+
+    The buffer is built by ONE short scan over the global slot range
+    (``max(starts + budgets) - min(starts)`` steps, each one
+    ``row_sampler`` row) that scatters each row's in-budget entries
+    through a precomputed destination map (out-of-budget entries drop),
+    so no ``(seeds, L_max, n)`` rectangle is ever materialized — under
+    skewed rates the flat buffer is up to ``n`` times smaller."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    b = np.asarray(budgets, dtype=np.int64)
+    n = b.size
+    s0 = (np.zeros(n, np.int64) if starts is None
+          else np.asarray(starts, dtype=np.int64))
+    offsets, _, _, total = ragged_layout(b, s0)
+    jmin = int(s0.min()) if n else 0
+    jmax = int((s0 + b).max()) if n else 0
+    steps = max(jmax - jmin, 0)
+    # dest[j - jmin, i]: flat slot of worker i's draw at global slot j,
+    # or `total` (out of range -> dropped by the scatter) outside
+    # [starts[i], starts[i] + budgets[i])
+    jg = np.arange(jmin, jmax, dtype=np.int64)[:, None]
+    rel = jg - s0[None, :]
+    dest = jnp.asarray(np.where((rel >= 0) & (rel < b[None, :]),
+                                offsets[None, :] + rel,
+                                total).astype(np.int32))
+    probe = jax.eval_shape(row_sampler,
+                           jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def per_seed(key):
+        def body(buf, inp):
+            j, d = inp
+            row = row_sampler(jax.random.fold_in(key, j))
+            return buf.at[d].set(row, mode="drop"), None
+
+        buf0 = jnp.zeros((total,), probe.dtype)
+        if steps == 0:
+            return buf0
+        buf, _ = lax.scan(body, buf0,
+                          (jnp.arange(jmin, jmax), dest))
+        return buf
 
     return jax.vmap(per_seed)(chain_keys)
 

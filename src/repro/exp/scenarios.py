@@ -19,6 +19,8 @@ fixed_power           tau_i = tau1·i^alpha                    2.2 (eq. 10)
 truncnorm             N(mu_i, sigma²) truncated to [0, ∞)     3.1
 exponential           Exp(lam), i.i.d. workers                3.1 (§3)
 exp_het               Exp(mean tau1·sqrt(i)) per worker       3.1 (§D.1)
+exp_powerlaw          Exp(mean tau1·i^alpha) per worker       3.1 (atlas)
+fixed_powerlaw        tau_i = tau1·i^alpha (= fixed_power)    2.2 (atlas)
 shifted_exp           mu_i + Exp(lam_i)                       3.1 (§D.1)
 fixed_bimodal         tau_i = tau1, one straggler tau1·R      2.2 (atlas)
 gamma                 Gamma(mean tau_i, common var)           3.1 (§K.3)
@@ -128,6 +130,28 @@ def exp_het(n: int, tau1: float = 1.0):
     random part."""
     means = tau1 * np.sqrt(np.arange(1, n + 1))
     return shifted_exponential_times(np.zeros(n), 1.0 / means)
+
+
+@register_scenario("exp_powerlaw")
+def exp_powerlaw(n: int, alpha: float = 1.2, tau1: float = 1.0):
+    """Memoryless workers on a power-law speed ladder: worker ``i`` is
+    Exp with mean ``tau1 * i^alpha`` (zero shift). The skewed-rate
+    regime the ragged chain layout exists for — mean rates span a
+    factor ``n^alpha``, so a rectangular (same-length-per-worker) chain
+    budget over-draws the slow tail by that same factor while the
+    ragged layout sizes each worker's chain to its own rate."""
+    means = tau1 * np.arange(1, n + 1, dtype=float) ** alpha
+    return shifted_exponential_times(np.zeros(n), 1.0 / means)
+
+
+@register_scenario("fixed_powerlaw")
+def fixed_powerlaw(n: int, alpha: float = 1.2, tau1: float = 1.0):
+    """Deterministic counterpart of ``exp_powerlaw``: ``tau_i =
+    tau1 * i^alpha`` with zero variance (same model as ``fixed_power``,
+    registered under the paired name so ``(exp_powerlaw,
+    fixed_powerlaw)`` selects the skewed-rate regime with and without
+    randomness)."""
+    return FixedTimes.power_law(n, alpha, tau1)
 
 
 @register_scenario("shifted_exp")

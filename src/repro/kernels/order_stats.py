@@ -190,10 +190,27 @@ def smallest_k(x, k: int, *, prefer_host: bool = None):
 
     The host path is NOT jit-traceable (it materializes ``x``); pass
     ``prefer_host=False`` to force the device sort if you must call this
-    under a trace. Tie semantics match the worker-major contract of the
-    jax engines: equal values order by flat index, so a worker-major
-    pool layout breaks wall-clock ties by (worker, within-worker
-    arrival index).
+    under a trace.
+
+    **Tie contract (rectangular AND ragged pools).** Equal values order
+    by flat index — a stable sort in both backends. The rectangular
+    ``(S, n, L)`` pool flattens worker-major, so ties break by (worker,
+    within-worker arrival index); the ragged layout
+    (:func:`repro.core.time_models.ragged_layout`) keeps that contract
+    *by construction*: its flat buffer is still worker-major (worker
+    ``i``'s whole budget precedes worker ``i+1``'s), so
+    ``widx[flat_index]`` is nondecreasing and equal arrival times
+    resolve to the same (worker, slot) winner as the rectangle would —
+    which is why uniform-budget ragged runs are bitwise equal to
+    rectangular ones even through tie rounds.
+
+    **Full-merge fast path.** The ragged pool is sized to the arrival
+    budget, so the arrival-scan engine routinely asks for ``k == n``
+    (merge the ENTIRE pool) where the rectangular layout asked for a
+    small prefix of a huge pool. For ``k == n`` the post-sort slice is
+    skipped — NumPy's trailing slice would alias anyway, but on device
+    the elided slice op lets XLA return the argsort buffer as-is
+    instead of staging a copy of the full ``(S, n)`` order.
     """
     n = x.shape[-1]
     if not 1 <= k <= n:
@@ -203,10 +220,14 @@ def smallest_k(x, k: int, *, prefer_host: bool = None):
     if prefer_host and not isinstance(x, jax.core.Tracer):
         import numpy as np
         xh = np.asarray(x)
-        order = np.argsort(xh, axis=-1, kind="stable")[..., :k]
+        order = np.argsort(xh, axis=-1, kind="stable")
+        if k < n:
+            order = order[..., :k]
         return (jnp.asarray(np.take_along_axis(xh, order, axis=-1)),
                 jnp.asarray(order))
-    order = jnp.argsort(x, axis=-1, stable=True)[..., :k]
+    order = jnp.argsort(x, axis=-1, stable=True)
+    if k < n:
+        order = order[..., :k]
     return jnp.take_along_axis(x, order, axis=-1), order
 
 

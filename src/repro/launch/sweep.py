@@ -30,12 +30,14 @@ orchestrator that fixes both:
   with the same :func:`repro.core.batch_jax.assemble_traces` the
   unsharded backend uses.
 
-Engine support: the m-sync round scan (fused + sharded) and the
+Engine support: the m-sync round scan (fused + sharded), the
 Async/Ringmaster arrival scan (chain build + scan sharded over units;
-pool merge and compaction host-side as in the unsharded engine).
-Rennala/Malenia have no sharded program yet — their points run the
-plain jax engine per point and the routing record says so
-(``fallback``).
+pool merge and compaction host-side as in the unsharded engine), and
+the whole round-scan family — Rennala and Malenia renewal round scans
+and the Ringleader chunked ragged-chain round scan — each
+``shard_map``ped over the unit rows with AOT program caching. No
+engine family routes to per-point ``fallback`` anymore; the branch
+remains only as the safety net for future non-shardable kinds.
 
 Multi-host: the mesh covers the local process's devices;
 :func:`is_coordinator` (``jax.process_index() == 0``) gates artifact
@@ -61,7 +63,8 @@ __all__ = ["SweepPoint", "sweep_device_count", "is_coordinator",
 
 #: jax engine families with a sharded program (everything else falls
 #: back to the per-point unsharded jax engine inside the sweep)
-SHARDED_KINDS = ("msync", "async", "ringmaster", "optimal_asgd")
+SHARDED_KINDS = ("msync", "async", "ringmaster", "optimal_asgd",
+                 "rennala", "malenia", "ringleader")
 
 
 @dataclasses.dataclass
@@ -131,6 +134,15 @@ def _bucket_key(kind: Optional[str], point: SweepPoint, math: bool):
             if kind in ("ringmaster", "optimal_asgd") else int(point.K) + 1
         adaptive = bool(getattr(point.strategy, "delay_adaptive", False))
         return ("arrival", kind, int(point.K), md, adaptive,
+                float(point.gamma) if math else 0.0)
+    if kind == "rennala":
+        return ("rennala", int(point.K), int(point.strategy.batch),
+                float(point.gamma) if math else 0.0)
+    if kind == "malenia":
+        return ("malenia", int(point.K), float(point.strategy.S),
+                float(point.gamma) if math else 0.0)
+    if kind == "ringleader":
+        return ("ringleader", int(point.K),
                 float(point.gamma) if math else 0.0)
     return ("fallback", point.index)
 
@@ -216,7 +228,7 @@ def run_sharded_sweep(points: Sequence[SweepPoint], model, problem,
                     int(p.strategy._m) * K, S, K, p.record_every, problem)
                 out[p.index] = (traces, {**base_rec, "padded_units": pad,
                                          **meta})
-        else:                                       # arrival scan
+        elif bkey[0] == "arrival":
             _, kind, K, md, adaptive, gamma = bkey
             comp, x, T, val, gn = bj._chain_scan_run(
                 model, problem, kind in ("ringmaster", "optimal_asgd"),
@@ -231,6 +243,37 @@ def run_sharded_sweep(points: Sequence[SweepPoint], model, problem,
                     None if not math else np.asarray(val)[:, c],
                     None if not math else np.asarray(gn)[:, c],
                     K, S, K, p.record_every, problem)
+                out[p.index] = (traces, {**base_rec, "padded_units": pad,
+                                         **meta})
+        else:                                       # round-scan family
+            fam = bkey[0]
+            if fam == "rennala":
+                _, K, B, gamma = bkey
+                comp, x, T, val, gn = bj._rennala_run(
+                    model, problem, B, n, len(unit_seeds), K, gamma,
+                    use_pallas, unit_seeds, mesh=mesh, meta=meta)
+                used = np.full(len(unit_seeds), B * K)
+            elif fam == "malenia":
+                _, K, S_t, gamma = bkey
+                comp, x, T, val, gn, used = bj._malenia_run(
+                    model, problem, S_t, n, len(unit_seeds), K, gamma,
+                    unit_seeds, mesh=mesh, meta=meta)
+                used = np.asarray(used)
+            else:                                   # ringleader
+                _, K, gamma = bkey
+                comp, x, T, val, gn, used = bj._ringleader_run(
+                    model, problem, n, len(unit_seeds), K, gamma,
+                    unit_seeds, mesh=mesh, meta=meta)
+                used = np.asarray(used)
+            comp, T = np.asarray(comp), np.asarray(T)
+            for i, p in enumerate(bpoints):
+                c = slice(i * S, (i + 1) * S)
+                traces = bj.assemble_traces(
+                    comp[c], None if not math else np.asarray(x)[c],
+                    T[:, c],
+                    None if not math else np.asarray(val)[:, c],
+                    None if not math else np.asarray(gn)[:, c],
+                    used[c], S, K, p.record_every, problem)
                 out[p.index] = (traces, {**base_rec, "padded_units": pad,
                                          **meta})
         return out

@@ -365,6 +365,10 @@ COVERAGE = {
 }
 """
 
+_MINI_SWEEP = """
+SHARDED_KINDS = ("msync", "malenia")
+"""
+
 _MINI_DESIGN = """# design
 
 ## §3b Engine coverage
@@ -378,6 +382,11 @@ _MINI_DESIGN = """# design
 |-------------|--------|
 | fixed_sqrt  | Fixed  |
 | exponential | SubExp |
+
+| sharded kind | engine program |
+|--------------|----------------|
+| `msync`      | round scan     |
+| `malenia`    | renewal rounds |
 
 ## §4 Other section
 
@@ -395,12 +404,14 @@ def mini_repo(tmp_path):
         "time_models": tmp_path / "time_models.py",
         "design": tmp_path / "DESIGN.md",
         "matrix": tmp_path / "test_strategy_matrix.py",
+        "sweep": tmp_path / "sweep.py",
     }
     paths["strategies"].write_text(_MINI_STRATEGIES)
     paths["scenarios"].write_text(_MINI_SCENARIOS)
     paths["time_models"].write_text(_MINI_TIME_MODELS)
     paths["design"].write_text(_MINI_DESIGN)
     paths["matrix"].write_text(_MINI_MATRIX)
+    paths["sweep"].write_text(_MINI_SWEEP)
     return paths
 
 
@@ -411,7 +422,8 @@ def _run_mini(paths):
         scenarios_path=paths["scenarios"],
         time_models_path=paths["time_models"],
         design_path=paths["design"],
-        matrix_test_path=paths["matrix"])
+        matrix_test_path=paths["matrix"],
+        sweep_path=paths["sweep"])
 
 
 def test_registry_mini_repo_clean(mini_repo):
@@ -514,6 +526,55 @@ def test_reg006_no_coverage_literal_is_structural(mini_repo):
     assert "dict literal" in findings[0].message
 
 
+def test_reg007_kind_missing_from_sharded_table(mini_repo):
+    """ISSUE 10: a SHARDED_KINDS entry the DESIGN §3b sharded backend
+    table does not document is REG007 drift (pointing at the literal)."""
+    mini_repo["sweep"].write_text(
+        'SHARDED_KINDS = ("msync", "malenia", "ghost_kind")\n')
+    findings = _run_mini(mini_repo)
+    assert _rules(findings) == ["REG007"]
+    assert "ghost_kind" in findings[0].message
+    assert findings[0].path == str(mini_repo["sweep"])
+
+
+def test_reg007_table_row_without_sharded_kind(mini_repo):
+    design = mini_repo["design"].read_text()
+    mini_repo["design"].write_text(design.replace(
+        "| `malenia`    | renewal rounds |",
+        "| `malenia`    | renewal rounds |\n| `phantom` | nothing |"))
+    findings = _run_mini(mini_repo)
+    assert _rules(findings) == ["REG007"]
+    assert "phantom" in findings[0].message
+    assert "fall back" in findings[0].message
+    assert findings[0].path == str(mini_repo["design"])
+
+
+def test_reg007_missing_sweep_is_structural(mini_repo):
+    mini_repo["sweep"].unlink()
+    findings = _run_mini(mini_repo)
+    assert _rules(findings) == ["REG007"]
+    assert "missing" in findings[0].message
+
+
+def test_reg007_no_kinds_literal_is_structural(mini_repo):
+    mini_repo["sweep"].write_text("SHARDED_KINDS = make_kinds()\n")
+    findings = _run_mini(mini_repo)
+    assert _rules(findings) == ["REG007"]
+    assert "literal" in findings[0].message
+
+
+def test_reg007_no_sharded_table_is_structural(mini_repo):
+    design = mini_repo["design"].read_text()
+    mini_repo["design"].write_text(design.replace(
+        "| sharded kind | engine program |\n"
+        "|--------------|----------------|\n"
+        "| `msync`      | round scan     |\n"
+        "| `malenia`    | renewal rounds |\n", ""))
+    findings = _run_mini(mini_repo)
+    assert _rules(findings) == ["REG007"]
+    assert "sharded" in findings[0].message.lower()
+
+
 def test_missing_matrix_table_is_structural_finding(mini_repo):
     mini_repo["design"].write_text("# design\n\n## §3b Engines\n\nprose\n")
     rules = _rules(_run_mini(mini_repo))
@@ -534,7 +595,8 @@ def test_live_design_tables_cover_all_registrations():
     assert set(matrix) == {"sync", "msync", "auto_m", "async", "rennala",
                            "malenia", "ringmaster", "ringleader",
                            "optimal_asgd", "deadline", "dropout"}
-    assert len(scen) == 20          # 14 base regimes + 6 §3c fault regimes
+    # 16 base regimes (incl. the PR 10 power-law pair) + 6 §3c faults
+    assert len(scen) == 22
 
 
 def test_live_coverage_table_matches_design_matrix():
@@ -546,6 +608,18 @@ def test_live_coverage_table_matches_design_matrix():
     coverage = parse_coverage_table(ROOT / "tests/test_strategy_matrix.py")
     assert coverage is not None
     assert set(coverage) == set(matrix)
+
+
+def test_live_sharded_table_matches_sharded_kinds():
+    """ISSUE 10: the DESIGN §3b sharded-kind table, the parsed
+    SHARDED_KINDS literal, and the imported tuple agree exactly (the
+    REG007 lockstep, spelled out directly)."""
+    from repro.analysis import collect_sharded_kinds, parse_sharded_table
+    from repro.launch.sweep import SHARDED_KINDS
+    table = parse_sharded_table(ROOT / "DESIGN.md")
+    kinds = collect_sharded_kinds(ROOT / "src/repro/launch/sweep.py")
+    assert table is not None and kinds is not None
+    assert set(table) == set(kinds) == set(SHARDED_KINDS)
 
 
 def test_deleting_live_coverage_row_fails_crosscheck(tmp_path):

@@ -23,7 +23,9 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.time_models import exponential_times, jax_chain_draws
+from repro.core.time_models import (exponential_times, jax_chain_draws,
+                                    jax_chain_draws_ragged, ragged_layout,
+                                    shifted_exponential_times)
 from repro.kernels.order_stats import smallest_k
 
 
@@ -64,6 +66,125 @@ def test_chain_draws_sweep_independent(n, L, seeds, pick):
     for j in (0, L - 1):
         row = np.asarray(sampler(jax.random.fold_in(key, j)))
         np.testing.assert_array_equal(batch[pick, j], row)
+
+
+# ------------------------------------------------- ragged chain layout
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(1, 8), min_size=2, max_size=5),
+       st.lists(st.integers(0, 5), min_size=2, max_size=5),
+       st.lists(st.integers(0, 2 ** 20), min_size=1, max_size=3))
+def test_ragged_per_worker_prefix_stable(buds, extras, seeds):
+    """Growing any worker's budget appends that worker's slots and never
+    re-keys existing ones, and a window extension (``starts=buds``)
+    draws exactly the appended tail — per seed, per worker, bitwise."""
+    n = min(len(buds), len(extras))
+    b = np.asarray(buds[:n], dtype=np.int64)
+    e = np.asarray(extras[:n], dtype=np.int64)
+    sampler = exponential_times(1.0, n).jax_sampler
+    keys = _chain_keys(seeds)
+    short = np.asarray(jax_chain_draws_ragged(keys, b, sampler))
+    long = np.asarray(jax_chain_draws_ragged(keys, b + e, sampler))
+    ext = np.asarray(jax_chain_draws_ragged(keys, e, sampler, starts=b))
+    off_s, _, _, _ = ragged_layout(b)
+    off_l, _, _, _ = ragged_layout(b + e)
+    off_e, _, _, _ = ragged_layout(e)
+    for i in range(n):
+        np.testing.assert_array_equal(
+            short[:, off_s[i]:off_s[i] + b[i]],
+            long[:, off_l[i]:off_l[i] + b[i]])
+        np.testing.assert_array_equal(
+            ext[:, off_e[i]:off_e[i] + e[i]],
+            long[:, off_l[i] + b[i]:off_l[i] + b[i] + e[i]])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 10),
+       st.lists(st.integers(0, 2 ** 20), min_size=1, max_size=3))
+def test_ragged_uniform_budgets_match_rectangular_bitwise(n, L, seeds):
+    """With uniform budgets the ragged flat buffer is the rectangular
+    ``(S, L, n)`` chain transposed to worker-major and flattened —
+    bitwise, per the documented contract."""
+    sampler = exponential_times(1.0, n).jax_sampler
+    keys = _chain_keys(seeds)
+    rect = np.asarray(jax_chain_draws(keys, L, sampler))       # (S, L, n)
+    flat = np.asarray(jax_chain_draws_ragged(
+        keys, np.full(n, L, dtype=np.int64), sampler))
+    np.testing.assert_array_equal(
+        flat, rect.transpose(0, 2, 1).reshape(len(seeds), n * L))
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 16), min_size=1, max_size=2),
+       st.booleans())
+def test_engine_rect_ragged_parity_uniform_rates(seeds, ringmaster):
+    """The arrival-scan engine's result is layout-independent: at
+    uniform rates the rectangular and ragged layouts produce identical
+    traces (bitwise under x64)."""
+    from repro.core.batch_jax import simulate_batch_jax
+    from repro.core.strategies import STRATEGIES
+    n, K = 5, 16
+    model = exponential_times(1.0, n)
+    strat = (STRATEGIES["ringmaster"](max_delay=2) if ringmaster
+             else STRATEGIES["async"]())
+    runs = [simulate_batch_jax(strat, model, K, seeds=list(seeds),
+                               async_layout=lay, x64=True)
+            for lay in ("ragged", "rect")]
+    for a, b in zip(*runs):
+        assert a.total_time == b.total_time
+        assert a.gradients_computed == b.gradients_computed
+        np.testing.assert_array_equal(a.times, b.times)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 16), min_size=1, max_size=2),
+       st.booleans())
+def test_windowed_resume_parity_bitwise(seeds, ringmaster):
+    """A starved chain budget forces windowed carried-state retries; the
+    result must equal the single-window (generous-budget) run bitwise
+    under x64 — the retry only draws and scans the extension."""
+    from repro.core.batch_jax import simulate_batch_jax
+    from repro.core.strategies import STRATEGIES
+    n, K = 5, 20
+    means = np.arange(1, n + 1, dtype=float) ** 1.5  # skewed rates
+    model = shifted_exponential_times(np.zeros(n), 1.0 / means)
+    strat = (STRATEGIES["ringmaster"](max_delay=2) if ringmaster
+             else STRATEGIES["async"]())
+    starved = simulate_batch_jax(strat, model, K, seeds=list(seeds),
+                                 async_chain=4, x64=True)
+    cold = simulate_batch_jax(strat, model, K, seeds=list(seeds),
+                              async_chain=512, x64=True)
+    for a, b in zip(starved, cold):
+        assert a.total_time == b.total_time
+        assert a.gradients_computed == b.gradients_computed
+        np.testing.assert_array_equal(a.times, b.times)
+
+
+def test_windowed_retry_reuses_carried_state():
+    """Draw/scan accounting for the forced-exhaustion retry: the
+    windowed engine scans strictly increasing, non-overlapping arrival
+    ranges (the certified prefix is never re-scanned) and each window
+    only appends drawn slots."""
+    import repro.core.batch_jax as bj
+    # single seed: the recorded (p0, p1) ranges are exact per-seed scan
+    # positions (multi-seed runs record the bounding box across seeds)
+    n, S, K = 6, 1, 24
+    means = np.arange(1, n + 1, dtype=float) ** 1.5
+    model = shifted_exponential_times(np.zeros(n), 1.0 / means)
+    meta = {}
+    bj._chain_scan_run(model, None, False, K + 1, False, n, S, K, 0.0,
+                       [0], chain_len=4, meta=meta)
+    assert meta["windows"] >= 2, "chain_len=4 must force a retry"
+    ranges = meta["scan_ranges"]
+    assert ranges, "windowed engine must record its scan ranges"
+    for (p0, p1) in ranges:
+        assert p0 < p1
+    for (_, p1), (q0, _) in zip(ranges, ranges[1:]):
+        assert q0 >= p1, ("window re-scanned part of the certified "
+                          f"prefix: {ranges}")
+    drawn = meta["drawn_slots"]                  # per-window extension draws
+    assert len(drawn) == meta["windows"]
+    assert all(d > 0 for d in drawn), \
+        "every window must draw a nonempty extension, never redraw"
 
 
 # ------------------------------------------------------------ smallest_k

@@ -247,6 +247,36 @@ def test_load_cost_constants_warns_once_on_bad_file(tmp_path):
     assert any("absent.json" in str(w.message) for w in rec)
 
 
+def test_load_cost_constants_warning_is_once_per_path(tmp_path):
+    bad = tmp_path / "stale.json"
+    bad.write_text("{not json")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        load_cost_constants(str(bad), apply=False)
+        load_cost_constants(str(bad), apply=False)    # memoized: silent
+        load_cost_constants(str(bad), apply=False)
+    msgs = [w for w in rec if issubclass(w.category, UserWarning)]
+    assert len(msgs) == 1, "same stale path must warn exactly once"
+    # a DIFFERENT unreadable path still gets its own warning
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        load_cost_constants(str(tmp_path / "other.json"), apply=False)
+    assert any("other.json" in str(w.message) for w in rec)
+
+
+def test_load_cost_constants_rejects_non_object_json(tmp_path):
+    arr = tmp_path / "array.json"
+    arr.write_text("[1.0, 2.0, 3.0]")            # valid JSON, wrong shape
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        merged = load_cost_constants(str(arr), apply=False)
+    msgs = [w for w in rec if issubclass(w.category, UserWarning)]
+    assert len(msgs) == 1
+    assert "ValueError" in str(msgs[0].message)
+    assert str(arr) in str(msgs[0].message)
+    assert merged["np_elem"] > 0                 # defaults still served
+
+
 # ------------------------------------------------------ ROB001/ROB002 rules
 from repro.analysis import analyze, load_module  # noqa: E402
 from repro.analysis.robustness import run_robustness_pass  # noqa: E402

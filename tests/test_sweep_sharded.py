@@ -93,16 +93,24 @@ def test_arrival_scan_parity_and_meta():
         assert rec["chain_s"] >= 0.0          # chain build instrumented
 
 
-def test_rennala_falls_back_inside_sweep():
+def test_round_scan_family_sharded_zero_fallback():
+    """ISSUE 10 acceptance: the round-scan family (Rennala / Malenia /
+    Ringleader) runs NATIVELY inside ``backend="jax_sharded"`` — zero
+    ``fallback`` routing records, bitwise per-seed parity with
+    ``backend="jax"``, and per-kind shape-bucket keys."""
     model = make_scenario("exponential", n=40)
-    tb_j = simulate_batch(("rennala", {"batch": 8}), model, K=20, seeds=3,
-                          backend="jax")
-    tb_s = simulate_batch(("rennala", {"batch": 8}), model, K=20, seeds=3,
-                          backend="jax_sharded")
-    _assert_bitwise(tb_j, tb_s)
-    rec = tb_s.routing[0]["shard"]
-    assert rec["fallback"] is True
-    assert rec["bucket"].startswith("fallback/")
+    for spec, bucket in [(("rennala", {"batch": 8}), "rennala/20/8/0.0"),
+                         (("malenia", {"S": 2.0}), "malenia/20/2.0/0.0"),
+                         ("ringleader", "ringleader/20/0.0")]:
+        tb_j = simulate_batch(spec, model, K=20, seeds=3, backend="jax")
+        tb_s = simulate_batch(spec, model, K=20, seeds=3,
+                              backend="jax_sharded")
+        _assert_bitwise(tb_j, tb_s)
+        rec = tb_s.routing[0]["shard"]
+        assert rec["bucket"] == bucket
+        assert "fallback" not in rec
+        assert rec["units"] == 3
+        assert rec["devices"] >= 1
 
 
 def test_tol_early_exit_rejected():
@@ -153,12 +161,34 @@ def test_bucket_keys_fuse_and_split():
                      _point(1, ("ringmaster", {"max_delay": 8})),
                      math=False)
     assert r1 != r2
-    # rennala has no sharded program: per-point fallback buckets
-    f0 = _bucket_key(None, _point(5, ("rennala", {"batch": 4})),
+    # round-scan family (ISSUE 10): batch/S are static program shapes,
+    # so they split buckets; gamma is static only in math mode
+    b4 = _bucket_key("rennala", _point(0, ("rennala", {"batch": 4})),
                      math=False)
-    assert f0 == ("fallback", 5)
-    assert shardable_kind(_point(0, ("rennala", {"batch": 4})).strategy,
-                          model, None) is None
+    b8 = _bucket_key("rennala", _point(1, ("rennala", {"batch": 8})),
+                     math=False)
+    assert b4 == ("rennala", 30, 4, 0.0)
+    assert b4 != b8
+    s1 = _bucket_key("malenia", _point(0, ("malenia", {"S": 1.0})),
+                     math=False)
+    s2 = _bucket_key("malenia", _point(1, ("malenia", {"S": 2.0})),
+                     math=False)
+    assert s1 != s2
+    g1 = _bucket_key("ringleader", _point(0, "ringleader", gamma=0.1),
+                     math=True)
+    g2 = _bucket_key("ringleader", _point(1, "ringleader", gamma=0.2),
+                     math=True)
+    assert g1 != g2
+    assert _bucket_key("ringleader", _point(0, "ringleader", gamma=0.1),
+                       math=False) == ("ringleader", 30, 0.0)
+    # every jax engine family shards now; the fallback branch survives
+    # only as the safety net for a future non-shardable kind
+    assert _bucket_key(None, _point(5, ("rennala", {"batch": 4})),
+                       math=False) == ("fallback", 5)
+    for name, kw in [("rennala", {"batch": 4}), ("malenia", {"S": 2.0}),
+                     ("ringleader", {})]:
+        assert shardable_kind(_point(0, (name, kw)).strategy,
+                              model, None) == name
     assert shardable_kind(_point(0, ("msync", {"m": 3})).strategy,
                           model, None) == "msync"
 
@@ -184,12 +214,16 @@ def test_estimate_jax_sharded_divides_compute_not_compile():
     t_two = estimate_backend_seconds("jax_sharded", strat, model, 2, K,
                                      1000, devices=2)
     assert t_huge == pytest.approx(t_two)
-    # rennala has no sharded program: same price as plain jax
+    # ISSUE 10: the round-scan family is priced sharded too (round_elem
+    # compute divides by the shard factor, compile still does not)
     renn = STRATEGIES["rennala"](batch=8)
     renn.bind(1000)
-    assert estimate_backend_seconds("jax_sharded", renn, model, S, K,
-                                    1000, devices=4) == pytest.approx(
-        estimate_backend_seconds("jax", renn, model, S, K, 1000))
+    t_renn_jax = estimate_backend_seconds("jax", renn, model, S, K, 1000)
+    t_renn_d4 = estimate_backend_seconds("jax_sharded", renn, model, S, K,
+                                         1000, devices=4)
+    assert t_renn_d4 == pytest.approx(
+        (t_renn_jax - compile_s) / 4 + compile_s)
+    assert t_renn_d4 < t_renn_jax
 
 
 def test_router_picks_jax_sharded_with_devices(monkeypatch):
@@ -319,6 +353,16 @@ _SUB_CODE = textwrap.dedent("""
     out["async_bitwise"] = bitwise(tb_j, tb_s)
     out["async_padded"] = tb_s.routing[0]["shard"]["padded_units"]
 
+    # round-scan family shards across the 4 devices (ISSUE 10)
+    tb_j = simulate_batch(("rennala", {"batch": 6}), model, K=20, seeds=6,
+                          backend="jax")
+    tb_s = simulate_batch(("rennala", {"batch": 6}), model, K=20, seeds=6,
+                          backend="jax_sharded")
+    rec = tb_s.routing[0]["shard"]
+    out["rennala_bitwise"] = bitwise(tb_j, tb_s)
+    out["rennala_fallback"] = "fallback" in rec
+    out["rennala_devices"] = rec["devices"]
+
     # router at paper scale actually sees the 4 devices
     strat = STRATEGIES["msync"](m=10)
     strat.bind(1000)
@@ -355,5 +399,8 @@ def test_four_device_subprocess_lane():
     assert out["mixed_buckets"] == ["msync-timing/20", "msync-timing/30"]
     assert out["async_bitwise"] is True
     assert out["async_padded"] == 2           # 6 seeds -> 8 = 4 x 2
+    assert out["rennala_bitwise"] is True
+    assert out["rennala_fallback"] is False
+    assert out["rennala_devices"] == 4
     assert out["routed"] == "jax_sharded"
     assert out["routed_devices"] == 4
